@@ -1,0 +1,249 @@
+"""Shared benchmark harness.
+
+Builds a KV/query stream from a real (reduced) model decode, plants the
+thought structure from the synthetic reasoning-trace generator, and
+evaluates compression methods by:
+
+* attention-output fidelity (cosine vs FullKV) at each decode step;
+* top-10 recall rate (paper Fig. 10(a) metric): fraction of the tokens a
+  method retains among FullKV's top-10 attention scores.
+
+Baselines implemented per the paper's comparison set (token-level):
+* ``recency``   — sliding window (StreamingLLM-like, + 4 sink tokens);
+* ``h2o``       — heavy hitters by accumulated attention + recent window;
+* ``rkv``       — attention importance + cosine-redundancy dedup (R-KV-like).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ThinKVConfig
+from repro.core import ct_cache as CC
+from repro.core import thinkv as TV
+from repro.data.synthetic import ReasoningTraceGen
+
+
+def timed(fn, *args, repeats=3):
+    fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(repeats):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / repeats, out
+
+
+@dataclasses.dataclass
+class Stream:
+    """One layer's decode stream."""
+    q: np.ndarray       # [n, Hq, d]
+    k: np.ndarray       # [n, H, d]
+    v: np.ndarray       # [n, H, d]
+    sparsities: np.ndarray
+    thought_types: np.ndarray
+
+
+def make_stream(n: int = 512, hq: int = 4, h: int = 2, d: int = 32,
+                seed: int = 0, dataset: str = "aime",
+                seg_len_range: Tuple[int, int] = (40, 120)) -> Stream:
+    """Correlated KV stream: keys within a thought segment share a direction
+    (what K-means exploits); queries attend mostly to recent + same-type
+    segments."""
+    rng = np.random.default_rng(seed)
+    gen = ReasoningTraceGen(dataset=dataset, seg_len_range=seg_len_range,
+                            seed=seed)
+    trace = gen.generate(n)
+    seg_dirs = {}
+    k = np.empty((n, h, d), np.float32)
+    v = np.empty((n, h, d), np.float32)
+    q = np.empty((n, hq, d), np.float32)
+    seg_bases = []
+    for (lo, hi, t) in trace.segments:
+        base = rng.standard_normal((h, d)).astype(np.float32)
+        vbase = rng.standard_normal((h, d)).astype(np.float32)
+        seg_bases.append((lo, hi, base))
+        for i in range(lo, hi):
+            k[i] = base + 0.6 * rng.standard_normal((h, d))
+            v[i] = vbase + 0.5 * rng.standard_normal((h, d))
+    # re-emergence propensity by thought type (paper Obs. 2: importance
+    # hierarchy R > E > T — queries revisit Reasoning segments most)
+    seg_types = {lo: t for (lo, hi, t) in trace.segments}
+    revisit_w = {2: 5.0, 1: 1.0, 0: 0.25}     # R, E, T
+    for i in range(n):
+        # LRM attention pattern (paper Sec. 3.3 / RaaS): half the queries
+        # look near-recent, half RE-EMERGE to an earlier segment (reasoning
+        # models revisit distant context — this is what recency windows and
+        # accumulated-attention heuristics drop).
+        if rng.random() < 0.5 or i < 48:
+            tgt = max(0, i - int(rng.integers(1, 32)))
+            qdir = k[tgt].mean(0)
+        else:
+            past = [sb for sb in seg_bases if sb[1] <= i]
+            if past:
+                w = np.array([revisit_w[seg_types[lo]] for (lo, _, _)
+                              in past])
+                w = w / w.sum()
+                lo, hi, base = past[int(rng.choice(len(past), p=w))]
+            else:
+                lo, hi, base = seg_bases[0]
+            qdir = base.mean(0)
+        q[i] = qdir + 0.8 * rng.standard_normal((hq, d))
+    return Stream(q=q, k=k, v=v, sparsities=trace.sparsities,
+                  thought_types=trace.thought_types)
+
+
+def full_attention_out(q, k, v, upto):
+    kk, vv = k[:upto + 1].reshape(upto + 1, -1, k.shape[-1]), v[:upto + 1]
+    hq, d = q.shape
+    h = k.shape[1]
+    g = hq // h
+    qh = q.reshape(h, g, d)
+    s = np.einsum("hgd,nhd->hgn", qh, k[:upto + 1]) / np.sqrt(d)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    out = np.einsum("hgn,nhd->hgd", p, v[:upto + 1]).reshape(hq, d)
+    return out, p
+
+
+def masked_attention_out(q, k, v, mask):
+    idx = np.where(mask)[0]
+    if len(idx) == 0:
+        return np.zeros_like(q)
+    hq, d = q.shape
+    h = k.shape[1]
+    g = hq // h
+    qh = q.reshape(h, g, d)
+    s = np.einsum("hgd,nhd->hgn", qh, k[idx]) / np.sqrt(d)
+    p = np.exp(s - s.max(-1, keepdims=True))
+    p /= p.sum(-1, keepdims=True)
+    return np.einsum("hgn,nhd->hgd", p, v[idx]).reshape(hq, d)
+
+
+def cosine(a, b):
+    na, nb = np.linalg.norm(a), np.linalg.norm(b)
+    return float((a * b).sum() / max(na * nb, 1e-9))
+
+
+# ---------------------------------------------------------------------------
+# token-level baselines
+# ---------------------------------------------------------------------------
+
+def run_recency(stream: Stream, budget: int, sinks: int = 4):
+    n = len(stream.k)
+    masks = np.zeros((n, n), bool)
+    for i in range(n):
+        lo = max(0, i + 1 - (budget - sinks))
+        masks[i, lo:i + 1] = True
+        masks[i, :min(sinks, i + 1)] = True
+    return masks
+
+
+def run_h2o(stream: Stream, budget: int):
+    """Accumulated-attention heavy hitters + recent half."""
+    n = len(stream.k)
+    acc = np.zeros(n)
+    masks = np.zeros((n, n), bool)
+    alive = np.zeros(n, bool)
+    for i in range(n):
+        alive[i] = True
+        _, p = full_attention_out(stream.q[i], stream.k, stream.v, i)
+        acc[:i + 1] += p.mean((0, 1))
+        if alive.sum() > budget:
+            cand = np.where(alive)[0]
+            recent = cand[cand > i - budget // 2]
+            old = cand[cand <= i - budget // 2]
+            keep_old = old[np.argsort(acc[old])[::-1][: budget - len(recent)]] \
+                if len(old) else old
+            alive[:] = False
+            alive[recent] = True
+            alive[keep_old] = True
+        masks[i] = alive
+    return masks
+
+
+def run_rkv(stream: Stream, budget: int, sim_thresh: float = 0.95):
+    """Importance (EMA attention) + redundancy dedup, evicted per step."""
+    n = len(stream.k)
+    imp = np.zeros(n)
+    masks = np.zeros((n, n), bool)
+    alive = np.zeros(n, bool)
+    kn = stream.k.reshape(n, -1)
+    kn = kn / np.maximum(np.linalg.norm(kn, axis=1, keepdims=True), 1e-9)
+    for i in range(n):
+        alive[i] = True
+        _, p = full_attention_out(stream.q[i], stream.k, stream.v, i)
+        imp[:i + 1] = 0.9 * imp[:i + 1] + p.mean((0, 1))
+        while alive.sum() > budget:
+            cand = np.where(alive)[0]
+            # redundancy: pair with the highest key similarity
+            sims = kn[cand] @ kn[cand].T
+            np.fill_diagonal(sims, -1)
+            red = sims.max(1)
+            score = imp[cand] - 0.5 * red * imp[cand]
+            alive[cand[np.argmin(score)]] = False
+        masks[i] = alive
+    return masks
+
+
+def run_thinkv(stream: Stream, budget: int, tau: int = 32, group: int = 8,
+               retention=(32, 16, 8, 4), min_retention: int = 4
+               ) -> Tuple[np.ndarray, dict]:
+    """Drive the real CT cache with the stream; masks from slot_pos."""
+    n, h, d = stream.k.shape
+    tk = ThinKVConfig(refresh_interval=tau, group_size=group,
+                      block_size=group, token_budget=budget,
+                      retention_schedule=retention,
+                      min_retention=min_retention,
+                      max_segments=max(n // tau + 2, 8), kmeans_iters=4)
+    dims = CC.make_dims(tk, num_layers=1, kv_heads=h, head_dim=d)
+    cache = CC.init_cache(dims)
+    step = jax.jit(functools.partial(TV.step_token, tk, dims))
+    masks = np.zeros((n, n), bool)
+    for i in range(n):
+        cache = step(cache, jnp.asarray(stream.k[None, i]),
+                     jnp.asarray(stream.v[None, i]),
+                     jnp.float32(stream.sparsities[i]))
+        pos = np.asarray(cache.slot_pos[0])
+        stt = np.asarray(cache.slot_state[0])
+        kept = pos[(stt == 1) & (pos >= 0)]
+        masks[i, kept] = True
+        # in-flight buffer tokens are also attended
+        nb = int(cache.buf_len)
+        start = i + 1 - nb
+        if nb:
+            masks[i, start:i + 1] = True
+    stats = {k: np.asarray(v).tolist()
+             for k, v in CC.memory_stats(tk, dims, cache).items()}
+    return masks, stats
+
+
+METHODS = {
+    "recency": lambda s, b: (run_recency(s, b), {}),
+    "h2o": lambda s, b: (run_h2o(s, b), {}),
+    "rkv": lambda s, b: (run_rkv(s, b), {}),
+    "thinkv": run_thinkv,
+}
+
+
+def evaluate(stream: Stream, masks: np.ndarray, stride: int = 7
+             ) -> Dict[str, float]:
+    """Fidelity + top-10 recall vs FullKV over sampled steps."""
+    n = len(stream.k)
+    cos, recall, kept = [], [], []
+    for i in range(16, n, stride):
+        ref, p = full_attention_out(stream.q[i], stream.k, stream.v, i)
+        got = masked_attention_out(stream.q[i], stream.k, stream.v,
+                                   masks[i])
+        cos.append(cosine(ref, got))
+        top10 = np.argsort(p.mean((0, 1)))[::-1][:10]
+        recall.append(masks[i, top10].mean())
+        kept.append(masks[i].sum())
+    return {"cosine": float(np.mean(cos)),
+            "recall@10": float(np.mean(recall)),
+            "mean_kept": float(np.mean(kept))}

@@ -1,0 +1,103 @@
+"""Fig. 10(c,e,f) + Fig. 11(a) ablations.
+
+* refresh-rate tau sweep: classification accuracy vs refresh overhead —
+  large tau skips thought changes (paper: tau=128 best trade-off);
+* block-size sweep: metadata bytes + blocks touched per commit;
+* thought-mix breakdown per dataset difficulty (Fig. 10f);
+* min-retention ablation: fidelity of min R=0 (full eviction) vs 4 —
+  full eviction destroys trajectory information (App. E.17).
+"""
+from __future__ import annotations
+
+import json
+
+import numpy as np
+
+from benchmarks.common import evaluate, make_stream, run_thinkv
+from repro.config import ThoughtType
+from repro.core.thoughts import classify
+from repro.data.synthetic import MIXES, ReasoningTraceGen
+import jax.numpy as jnp
+
+
+def tau_sweep(taus=(8, 16, 32, 64, 128), n=2048, seed=0):
+    gen = ReasoningTraceGen(dataset="aime", seg_len_range=(100, 300),
+                            seed=seed)
+    trace = gen.generate(n)
+    rows = []
+    for tau in taus:
+        # segment-level classification with window-averaged sparsity
+        correct = total = 0
+        for s in range(n // tau):
+            lo, hi = s * tau, (s + 1) * tau
+            pred = int(classify(jnp.float32(trace.sparsities[lo:hi].mean()),
+                                (0.5077, 0.8142)))
+            true = np.bincount(trace.thought_types[lo:hi],
+                               minlength=3).argmax()
+            correct += int(pred == true)
+            total += 1
+        rows.append({"tau": tau, "segment_accuracy": correct / total,
+                     "refresh_per_1k_tokens": 1000 / tau})
+        print(f"  tau={tau:4d} seg_acc={correct/total:.3f} "
+              f"refreshes/1k={1000/tau:.1f}")
+    return rows
+
+
+def block_size_sweep(sizes=(8, 16, 32, 64), budget=128, n=384, seed=0):
+    rows = []
+    stream = make_stream(n=n, seed=seed)
+    for bs in sizes:
+        masks, stats = run_thinkv(stream, budget, tau=32, group=min(bs, 16))
+        mets = evaluate(stream, masks)
+        # metadata bytes per slot-plane grows with blocks; commits touch
+        # ceil(group/bs) blocks
+        slots = budget * 2
+        meta = slots * 10 + (slots // bs)
+        rows.append({"block_size": bs, "metadata_bytes": meta,
+                     "cosine": mets["cosine"]})
+        print(f"  bs={bs:3d} meta={meta}B cos={mets['cosine']:.4f}")
+    return rows
+
+
+def thought_mix():
+    rows = []
+    for ds in MIXES:
+        gen = ReasoningTraceGen(dataset=ds, seed=0)
+        trace = gen.generate(20000)
+        mix = np.bincount(trace.thought_types, minlength=3) / 20000
+        rows.append({"dataset": ds,
+                     "T_pct": 100 * float(mix[int(ThoughtType.TRANSITION)]),
+                     "E_pct": 100 * float(mix[int(ThoughtType.EXECUTION)]),
+                     "R_pct": 100 * float(mix[int(ThoughtType.REASONING)])})
+        print(f"  {ds:14s} T={mix[0]*100:.1f}% E={mix[1]*100:.1f}% "
+              f"R={mix[2]*100:.1f}%")
+    return rows
+
+
+def min_retention_ablation(n=512, budget=64, seed=2):
+    """Transition-heavy trace + aggressive schedule so old segments hit the
+    retention floor; minR=1 nearly erases them (the paper's endless-loop
+    failure mode, App. E.17), minR=4 keeps the medoid skeleton."""
+    stream = make_stream(n=n, seed=seed, seg_len_range=(30, 60))
+    rows = []
+    for min_r, sched in [(4, (8, 4)), (1, (8, 1))]:
+        masks, _ = run_thinkv(stream, budget, tau=32, group=8,
+                              retention=sched, min_retention=min_r)
+        mets = evaluate(stream, masks)
+        rows.append({"min_retention": min_r, **mets})
+        print(f"  minR={min_r} cos={mets['cosine']:.4f} "
+              f"recall={mets['recall@10']:.3f}")
+    return rows
+
+
+def main(out_path="benchmarks/results/fig10_ablations.json"):
+    out = {"tau_sweep": tau_sweep(), "block_size": block_size_sweep(),
+           "thought_mix": thought_mix(),
+           "min_retention": min_retention_ablation()}
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,44 @@
+"""Fig. 8 + Fig. 10(a) reproduction (accuracy proxy).
+
+Compares ThinKV against token-level eviction baselines (recency/
+StreamingLLM-like, H2O, R-KV-like) across KV budgets on thought-structured
+streams.  Metrics: attention-output cosine fidelity vs FullKV and top-10
+recall rate — the paper's own Fig. 10(a) metric.  Expected qualitative
+result (paper Sec. 6.2/6.3): ThinKV sustains recall/fidelity at budgets
+where token-level heuristics degrade.
+"""
+from __future__ import annotations
+
+import json
+import time
+
+from benchmarks.common import METHODS, evaluate, make_stream
+
+
+def run(budgets=(64, 96, 128, 192), n=768, seed=0, quiet=False):
+    stream = make_stream(n=n, seed=seed, seg_len_range=(40, 90))
+    rows = []
+    for budget in budgets:
+        for name, fn in METHODS.items():
+            t0 = time.perf_counter()
+            masks, _ = fn(stream, budget)
+            mets = evaluate(stream, masks)
+            rows.append({"method": name, "budget": budget, **mets,
+                         "sim_s": time.perf_counter() - t0})
+            if not quiet:
+                print(f"  budget={budget:4d} {name:8s} "
+                      f"cos={mets['cosine']:.4f} "
+                      f"recall@10={mets['recall@10']:.3f} "
+                      f"kept={mets['mean_kept']:.0f}")
+    return rows
+
+
+def main(out_path="benchmarks/results/fig8_accuracy.json"):
+    rows = run()
+    with open(out_path, "w") as f:
+        json.dump(rows, f, indent=2)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,105 @@
+"""Generate the EXPERIMENTS.md §Dry-run and §Roofline tables from the
+dry-run artifacts (source of truth: benchmarks/results/dryrun/*.json)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results" / "dryrun"
+GB = 1024 ** 3
+
+
+def cells(mesh):
+    out = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        out.append(json.loads(p.read_text()))
+    return out
+
+
+def dryrun_section() -> str:
+    lines = ["## §Dry-run", ""]
+    for mesh, chips in (("single", 256), ("multi", 512)):
+        rows = cells(mesh)
+        ok = [r for r in rows if r["status"] == "ok"]
+        lines.append(f"### Mesh `{mesh}` ({chips} chips) — "
+                     f"{len(ok)}/{len(rows)} cells compile")
+        lines.append("")
+        lines.append("| arch | shape | variant | args GB/dev | temps GB/dev |"
+                     " HLO GFLOP/dev | HLO GB/dev | coll GB/dev | #coll |"
+                     " compile s |")
+        lines.append("|---|---|---|---|---|---|---|---|---|---|")
+        for r in rows:
+            if r["status"] != "ok":
+                lines.append(f"| {r['arch']} | {r['shape']} | {r['variant']}"
+                             f" | ERROR: {r.get('error', '?')} | | | | | | |")
+                continue
+            m = r["memory_analysis"]
+            rf = r["roofline"]
+            lines.append(
+                f"| {r['arch']} | {r['shape']} | {r['variant']} "
+                f"| {m['argument_size_in_bytes'] / GB:.2f} "
+                f"| {m['temp_size_in_bytes'] / GB:.2f} "
+                f"| {rf['flops_per_device'] / 1e9:.1f} "
+                f"| {rf['bytes_per_device'] / GB:.1f} "
+                f"| {rf['collective_bytes_per_device'] / GB:.2f} "
+                f"| {r['collectives']['count']} "
+                f"| {r.get('t_compile_s', 0):.0f} |")
+        lines.append("")
+    return "\n".join(lines)
+
+
+def _useful_with_attn(r) -> float:
+    """MODEL+attention flops over HLO flops (attention credited)."""
+    from repro.config import SHAPES
+    from repro.configs import get_config
+    from repro.roofline.analysis import attention_flops_for
+    rf = r["roofline"]
+    cfg = get_config(r["arch"])
+    attn = attention_flops_for(cfg, SHAPES[r["shape"]], r["variant"])
+    total = rf["flops_per_device"] * r["chips"]
+    return (rf["model_flops"] + attn) / total if total else 0.0
+
+
+def roofline_section() -> str:
+    lines = ["## §Roofline (single-pod 16x16, per-device terms; "
+             "197 TF/s bf16, 819 GB/s HBM, 50 GB/s/link)", ""]
+    lines.append("| arch | shape | variant | t_compute s | t_memory s |"
+                 " t_collective s | bottleneck | MODEL/HLO flops |"
+                 " (+attn)/HLO | roofline frac |"
+                 " what moves the dominant term |")
+    lines.append("|---|---|---|---|---|---|---|---|---|---|---|")
+    hints = {
+        ("train", "memory"): "flash-attention kernel path (no S×S scores in"
+                             " HBM) + bf16 intermediates",
+        ("train", "collective"): "resharding-free attention layout (heads %"
+                                 " tp != 0 pathology) / EP dispatch",
+        ("prefill", "memory"): "flash-attention kernel path; chunked logits",
+        ("prefill", "collective"): "head-sharding fix + dispatch"
+                                   " all-to-all instead of all-gather",
+        ("decode_fullkv", "memory"): "KV cache quantization (ThinKV) — this"
+                                     " IS the paper's intervention",
+        ("decode_thinkv", "memory"): "fused-dequant paged-attention kernel"
+                                     " (codes are the only HBM traffic)",
+        ("decode_thinkv", "collective"): "split pool/buffer flash merge"
+                                         " (avoid sharded+replicated concat)",
+    }
+    for r in cells("single"):
+        if r["status"] != "ok":
+            continue
+        rf = r["roofline"]
+        hint = hints.get((r["variant"], rf["bottleneck"]), "see §Perf")
+        lines.append(
+            f"| {r['arch']} | {r['shape']} | {r['variant']} "
+            f"| {rf['t_compute']:.4f} | {rf['t_memory']:.4f} "
+            f"| {rf['t_collective']:.4f} | **{rf['bottleneck']}** "
+            f"| {rf['useful_flops_ratio']:.3f} "
+            f"| {min(_useful_with_attn(r), 9.99):.3f} "
+            f"| {rf['roofline_fraction']:.4f} | {hint} |")
+    lines.append("")
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print(dryrun_section())
+    print()
+    print(roofline_section())

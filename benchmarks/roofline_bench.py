@@ -1,0 +1,65 @@
+"""Roofline aggregation: reads the dry-run artifacts and renders the
+per-(arch x shape x variant x mesh) roofline table (EXPERIMENTS.md
+§Roofline source of truth)."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+RESULTS = Path(__file__).parent / "results" / "dryrun"
+
+
+def load(mesh="single"):
+    rows = []
+    for p in sorted(RESULTS.glob(f"*__{mesh}.json")):
+        r = json.loads(p.read_text())
+        if r.get("status") != "ok":
+            rows.append({"cell": r["cell"], "status": r.get("error", "err")})
+            continue
+        rf = r["roofline"]
+        rows.append({
+            "arch": r["arch"], "shape": r["shape"], "variant": r["variant"],
+            "mesh": mesh, "status": "ok",
+            "t_compute_s": rf["t_compute"], "t_memory_s": rf["t_memory"],
+            "t_collective_s": rf["t_collective"],
+            "bottleneck": rf["bottleneck"],
+            "useful_flops_ratio": rf["useful_flops_ratio"],
+            "roofline_fraction": rf["roofline_fraction"],
+            "temp_bytes_per_dev": r["memory_analysis"]["temp_size_in_bytes"],
+            "collective_count": r["collectives"]["count"],
+        })
+    return rows
+
+
+def render(rows):
+    hdr = (f"{'arch':22s} {'shape':12s} {'variant':14s} "
+           f"{'t_comp':>9s} {'t_mem':>9s} {'t_coll':>9s} "
+           f"{'bound':>7s} {'useful':>7s} {'roofline':>9s}")
+    print(hdr)
+    print("-" * len(hdr))
+    for r in rows:
+        if r.get("status") != "ok":
+            print(f"{r['cell']}: {r['status']}")
+            continue
+        print(f"{r['arch']:22s} {r['shape']:12s} {r['variant']:14s} "
+              f"{r['t_compute_s']:9.4f} {r['t_memory_s']:9.4f} "
+              f"{r['t_collective_s']:9.4f} {r['bottleneck'][:7]:>7s} "
+              f"{r['useful_flops_ratio']:7.3f} "
+              f"{r['roofline_fraction']:9.4f}")
+
+
+def main(out_path="benchmarks/results/roofline_table.json"):
+    out = {}
+    for mesh in ("single", "multi"):
+        rows = load(mesh)
+        if rows:
+            print(f"\n== mesh: {mesh} ({len(rows)} cells) ==")
+            render(rows)
+            out[mesh] = rows
+    with open(out_path, "w") as f:
+        json.dump(out, f, indent=2)
+    return out
+
+
+if __name__ == "__main__":
+    main()

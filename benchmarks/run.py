@@ -1,0 +1,124 @@
+"""Benchmark entry point: one module per paper table/figure.
+
+Usage: ``PYTHONPATH=src python -m benchmarks.run [--only name]``
+
+Prints a ``name,us_per_call,derived`` CSV summary line per benchmark and
+writes full JSON artifacts under benchmarks/results/.
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import time
+from pathlib import Path
+
+sys.path.insert(0, str(Path(__file__).resolve().parent.parent))
+
+RESULTS = Path(__file__).parent / "results"
+
+
+def _csv(name, us, derived):
+    print(f"CSV,{name},{us:.1f},{derived}")
+
+
+def bench_fig8():
+    from benchmarks import fig8_accuracy
+    t0 = time.perf_counter()
+    rows = fig8_accuracy.main(RESULTS / "fig8_accuracy.json")
+    us = (time.perf_counter() - t0) * 1e6
+    tk = {r["budget"]: r for r in rows if r["method"] == "thinkv"}
+    worst_budget = min(tk)
+    best = max(r["recall@10"] for r in rows
+               if r["method"] != "thinkv" and r["budget"] == worst_budget)
+    _csv("fig8_accuracy", us,
+         f"thinkv_recall@{worst_budget}={tk[worst_budget]['recall@10']:.3f}"
+         f";best_baseline={best:.3f}")
+
+
+def bench_table1():
+    from benchmarks import table1_quant
+    t0 = time.perf_counter()
+    out = table1_quant.main(RESULTS / "table1_quant.json")
+    us = (time.perf_counter() - t0) * 1e6
+    fmt = {r["format"]: r["attn_cosine"] for r in out["format_ablation"]}
+    _csv("table1_quant", us,
+         f"nvfp4={fmt['nvfp4']:.4f};int4={fmt['int4']:.4f}")
+
+
+def bench_table2():
+    from benchmarks import table2_throughput
+    t0 = time.perf_counter()
+    out = table2_throughput.main(RESULTS / "table2_throughput.json")
+    us = (time.perf_counter() - t0) * 1e6
+    a100 = {r["method"]: r for r in out["A100-80GB"]}
+    thin = next(v for k, v in a100.items() if k.startswith("ThinKV"))
+    _csv("table2_throughput", us,
+         f"max_batch_full={a100['FullKV']['max_batch']}"
+         f";max_batch_thinkv={thin['max_batch']}"
+         f";ct_speedup={out['maintenance']['speedup']:.0f}x")
+
+
+def bench_table5():
+    from benchmarks import table5_overhead
+    t0 = time.perf_counter()
+    out = table5_overhead.main(RESULTS / "table5_overhead.json")
+    us = (time.perf_counter() - t0) * 1e6
+    _csv("table5_overhead", us,
+         f"evict_rate={out['eviction_event_rate_pct']:.2f}%"
+         f";paper=4.59%;rkv=82.93%")
+
+
+def bench_fig10():
+    from benchmarks import fig10_ablations
+    t0 = time.perf_counter()
+    out = fig10_ablations.main(RESULTS / "fig10_ablations.json")
+    us = (time.perf_counter() - t0) * 1e6
+    accs = {r["tau"]: r["segment_accuracy"] for r in out["tau_sweep"]}
+    _csv("fig10_ablations", us, f"tau128_acc={accs.get(128, 0):.3f}")
+
+
+def bench_roofline():
+    from benchmarks import roofline_bench
+    t0 = time.perf_counter()
+    out = roofline_bench.main(RESULTS / "roofline_table.json")
+    us = (time.perf_counter() - t0) * 1e6
+    ok = sum(1 for r in out.get("single", []) if r.get("status") == "ok")
+    okm = sum(1 for r in out.get("multi", []) if r.get("status") == "ok")
+    _csv("roofline", us, f"single_ok={ok};multi_ok={okm}")
+
+
+def bench_fig4():
+    from benchmarks import fig4_importance
+    t0 = time.perf_counter()
+    out = fig4_importance.main(RESULTS / "fig4_importance.json")
+    us = (time.perf_counter() - t0) * 1e6
+    _csv("fig4_importance", us,
+         f"order={'>'.join(out['importance_order'])};paper=R>E>T")
+
+
+BENCHES = {
+    "fig4": bench_fig4,
+    "fig8": bench_fig8,
+    "table1": bench_table1,
+    "table2": bench_table2,
+    "table5": bench_table5,
+    "fig10": bench_fig10,
+    "roofline": bench_roofline,
+}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="")
+    args, _ = ap.parse_known_args()
+    RESULTS.mkdir(parents=True, exist_ok=True)
+    print("name,us_per_call,derived")
+    for name, fn in BENCHES.items():
+        if args.only and name != args.only:
+            continue
+        print(f"\n=== {name} ===")
+        fn()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,25 @@
+from repro.config.base import (
+    ArchFamily,
+    InputShape,
+    MeshConfig,
+    ModelConfig,
+    MoEConfig,
+    OptimizerConfig,
+    PositionEmbedding,
+    SHAPES,
+    ServeConfig,
+    SSMConfig,
+    ThinKVConfig,
+    ThoughtType,
+    TrainConfig,
+    config_to_dict,
+    reduced,
+    shape_cells,
+)
+
+__all__ = [
+    "ArchFamily", "InputShape", "MeshConfig", "ModelConfig", "MoEConfig",
+    "OptimizerConfig", "PositionEmbedding", "SHAPES", "ServeConfig",
+    "SSMConfig", "ThinKVConfig", "ThoughtType", "TrainConfig",
+    "config_to_dict", "reduced", "shape_cells",
+]

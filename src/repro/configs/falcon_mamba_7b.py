@@ -1,0 +1,22 @@
+"""falcon-mamba-7b  [ssm]  64L d_model=4096 (attention-free) vocab=65024,
+ssm_state=16 -- mamba1 architecture  [arXiv:2410.05355; unverified].
+
+No KV cache exists, so ThinKV is inapplicable (DESIGN.md
+Sec. 4 Arch-applicability); the arch is fully implemented and dry-run with
+ThinKV disabled.  Decode state is O(1): conv window + SSM state.
+"""
+from repro.config import ArchFamily, ModelConfig, PositionEmbedding, SSMConfig
+
+CONFIG = ModelConfig(
+    name="falcon-mamba-7b",
+    family=ArchFamily.SSM,
+    num_layers=64,
+    d_model=4096,
+    num_heads=0,
+    num_kv_heads=0,
+    d_ff=0,
+    vocab_size=65024,
+    position_embedding=PositionEmbedding.NONE,
+    ssm=SSMConfig(state_size=16, conv_width=4, expand=2, dt_rank=256),
+    tie_embeddings=True,
+)

@@ -1,0 +1,23 @@
+"""llama4-scout-17b-a16e  [moe]  48L d_model=5120 40H (GQA kv=8) d_ff=8192
+vocab=202048, MoE 16 experts top-1
+[hf:meta-llama/Llama-4-Scout-17B-16E; unverified].
+
+The modality early-fusion frontend is out of scope per the assignment (text
+backbone only).
+"""
+from repro.config import ArchFamily, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="llama4-scout-17b-a16e",
+    family=ArchFamily.MOE,
+    num_layers=48,
+    d_model=5120,
+    num_heads=40,
+    num_kv_heads=8,
+    d_ff=8192,
+    vocab_size=202048,
+    rope_theta=5e5,
+    act="silu",
+    mlp_gated=True,
+    moe=MoEConfig(num_experts=16, num_experts_per_token=1),
+)

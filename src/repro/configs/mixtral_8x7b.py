@@ -1,0 +1,20 @@
+"""mixtral-8x7b  [moe]  32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=32000,
+MoE 8 experts top-2, sliding-window attention  [arXiv:2401.04088; hf].
+"""
+from repro.config import ArchFamily, ModelConfig, MoEConfig
+
+CONFIG = ModelConfig(
+    name="mixtral-8x7b",
+    family=ArchFamily.MOE,
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=32000,
+    sliding_window=4096,
+    rope_theta=1e6,
+    act="silu",
+    mlp_gated=True,
+    moe=MoEConfig(num_experts=8, num_experts_per_token=2),
+)

@@ -1,0 +1,26 @@
+"""paligemma-3b  [vlm]  18L d_model=2048 8H (GQA kv=1) d_ff=16384 vocab=257216.
+
+SigLIP vision tower + Gemma LM  [arXiv:2407.07726; hf].  Per the assignment
+the modality frontend is a STUB: ``input_specs()`` provides precomputed patch
+embeddings (224px / 14px patches -> 256 image tokens) which are linearly
+projected and prepended to the text sequence.  Gemma conventions: head_dim
+256, GeGLU MLP, kv=1 (MQA), embeddings tied + scaled by sqrt(d_model).
+"""
+from repro.config import ArchFamily, ModelConfig
+
+CONFIG = ModelConfig(
+    name="paligemma-3b",
+    family=ArchFamily.VLM,
+    num_layers=18,
+    d_model=2048,
+    num_heads=8,
+    num_kv_heads=1,
+    head_dim=256,
+    d_ff=16384,
+    vocab_size=257216,
+    tie_embeddings=True,
+    act="gelu",
+    mlp_gated=True,
+    num_image_tokens=256,
+    frontend_dim=1152,          # SigLIP-So400m width (stub embeddings)
+)

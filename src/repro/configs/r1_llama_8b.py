@@ -1,0 +1,21 @@
+"""r1-llama-8b  [dense]  DeepSeek-R1-Distill-Llama-8B (llama3.1-8B arch).
+
+The paper's primary evaluation model (Sec. 6); included beyond the assigned
+pool so the paper-faithful benchmarks run on the paper's own architecture.
+32L d_model=4096 32H (GQA kv=8) d_ff=14336 vocab=128256.
+"""
+from repro.config import ArchFamily, ModelConfig
+
+CONFIG = ModelConfig(
+    name="r1-llama-8b",
+    family=ArchFamily.DENSE,
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=8,
+    d_ff=14336,
+    vocab_size=128256,
+    rope_theta=5e5,
+    act="silu",
+    mlp_gated=True,
+)

@@ -1,0 +1,29 @@
+"""whisper-medium  [audio]  24L d_model=1024 16H (MHA, kv=16) d_ff=4096
+vocab=51865, encoder-decoder with conv frontend (STUB)
+[arXiv:2212.04356; unverified].
+
+Per the assignment, the conv/mel frontend is a stub: ``input_specs()``
+provides precomputed frame embeddings (1500 frames x d_model) consumed by the
+encoder.  Decoder: causal self-attention (ThinKV-managed cache) +
+cross-attention to encoder states (TBQ-quantized, never evicted; see
+DESIGN.md Sec. 4).  Whisper uses learned positions, GELU, non-gated MLP.
+"""
+from repro.config import ArchFamily, ModelConfig, PositionEmbedding
+
+CONFIG = ModelConfig(
+    name="whisper-medium",
+    family=ArchFamily.ENCDEC,
+    num_layers=24,                 # decoder layers
+    encoder_layers=24,
+    encoder_seq=1500,
+    d_model=1024,
+    num_heads=16,
+    num_kv_heads=16,
+    d_ff=4096,
+    vocab_size=51865,
+    cross_attention=True,
+    position_embedding=PositionEmbedding.LEARNED,
+    act="gelu",
+    mlp_gated=False,
+    tie_embeddings=True,
+)

@@ -1,0 +1,19 @@
+"""yi-6b  [dense]  32L d_model=4096 32H (GQA kv=4) d_ff=11008 vocab=64000.
+
+Llama-arch GQA  [arXiv:2403.04652; hf].
+"""
+from repro.config import ArchFamily, ModelConfig
+
+CONFIG = ModelConfig(
+    name="yi-6b",
+    family=ArchFamily.DENSE,
+    num_layers=32,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=4,
+    d_ff=11008,
+    vocab_size=64000,
+    rope_theta=5e6,
+    act="silu",
+    mlp_gated=True,
+)

@@ -1,0 +1,26 @@
+"""zamba2-7b  [hybrid]  81L d_model=3584 32H (MHA kv=32) d_ff=14336
+vocab=32000, ssm_state=64 -- Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242; unverified].
+
+A single *shared* transformer block (attention + MLP, one weight copy) is
+invoked after every 6th Mamba2 layer (13 invocations for 81 layers).  Only
+those invocations own KV caches; ThinKV manages exactly those (DESIGN.md
+Sec. 4).  This is the sub-quadratic hybrid that runs ``long_500k`` natively
+(Mamba state is O(1); the shared-attn cache is ThinKV budget-bound).
+"""
+from repro.config import ArchFamily, ModelConfig, SSMConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-7b",
+    family=ArchFamily.HYBRID,
+    num_layers=81,
+    d_model=3584,
+    num_heads=32,
+    num_kv_heads=32,
+    head_dim=112,
+    d_ff=14336,
+    vocab_size=32000,
+    hybrid_attn_every=6,
+    ssm=SSMConfig(state_size=64, conv_width=4, expand=2, head_dim=64,
+                  ngroups=2, chunk_size=128),
+)

@@ -1,0 +1,18 @@
+"""ThinKV core: the paper's contribution as composable JAX modules.
+
+- quantization: TBQ data formats (FP8/NVFP4/ternary group quantization)
+- thoughts / calibration: attention-sparsity thought decomposition (phi)
+- policy: rho / psi / retention schedule
+- kmeans: TBE's K-means medoid selection
+- ct_cache: Continuous-Thinking paged KV cache (in-place slot reuse, TBE)
+- thinkv: the Listing-1 generation-loop controller
+"""
+from repro.core import (  # noqa: F401
+    calibration,
+    ct_cache,
+    kmeans,
+    policy,
+    quantization,
+    thoughts,
+    thinkv,
+)

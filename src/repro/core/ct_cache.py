@@ -1,0 +1,472 @@
+"""Continuous Thinking (CT) paged KV cache (paper Sec. 5).
+
+A PagedAttention-style pool extended with ThinKV's block-table fields:
+thought type, segment identity, and an eviction state that lets evicted
+slots be *reused in place* by later tokens — never gather-compacted.
+
+TPU adaptations (DESIGN.md Sec. 3):
+* block size 16 == quantization group g == one (16,128) VMEM tile per head;
+* "start indices + segment mask" are fused into a per-slot ``slot_seg``
+  plane; the eviction mask is the per-slot ``slot_state`` plane
+  (0=free, 1=valid, 2=soft-evicted/reusable);
+* per-slot ``slot_bits`` makes decode correctness independent of block
+  type-homogeneity (homogeneity remains the allocation *policy*, as in the
+  paper, but a pathological allocation can fall back to cross-type reuse
+  without corrupting decodes);
+* scales are E4M3-rounded values stored in bf16 planes (bit-exact e4m3
+  numerics; accounted as 1 byte in the memory model — see DESIGN.md Sec. 7).
+
+All state is fixed-shape and jit/vmap friendly.  Functions here operate on a
+SINGLE request with all attention layers stacked on the leading axis; the
+serving engine vmaps over request slots.
+"""
+from __future__ import annotations
+
+import functools
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ThinKVConfig, ThoughtType
+from repro.core import quantization as Q
+from repro.core.kmeans import kmeans_select
+from repro.core.policy import psi_bits, retention_at
+from repro.core.thoughts import classify
+
+SCALE_DTYPE = jnp.bfloat16      # e4m3-rounded values (see module docstring)
+
+FREE, VALID, EVICTED = jnp.uint8(0), jnp.uint8(1), jnp.uint8(2)
+
+
+class CacheDims(NamedTuple):
+    """Static geometry of a CT cache."""
+
+    L: int          # attention layers
+    NB: int         # physical blocks per layer
+    BS: int         # block size (tokens)
+    H: int          # kv heads
+    D: int          # head dim
+    G: int          # quantization group size (== tokens per commit)
+    S: int          # max segments
+    nibble: bool    # True: 4-bit plane (2 codes/byte would be packed on HBM;
+                    # we keep one code per uint8 lane and account 4 bits)
+
+    @property
+    def NS(self) -> int:
+        return self.NB * self.BS
+
+    @property
+    def scale_groups(self) -> int:
+        return self.D // Q.GROUP
+
+
+def make_dims(cfg: ThinKVConfig, num_layers: int, kv_heads: int,
+              head_dim: int, slack: float = 2.0) -> CacheDims:
+    nb = max(int(cfg.token_budget * slack) // cfg.block_size, 4)
+    nibble = max(cfg.precision) <= 4
+    return CacheDims(L=num_layers, NB=nb, BS=cfg.block_size, H=kv_heads,
+                     D=head_dim, G=cfg.group_size, S=cfg.max_segments,
+                     nibble=nibble)
+
+
+@jax.tree_util.register_pytree_node_class
+class CTCache:
+    """Pytree of cache planes for one request."""
+
+    FIELDS = ("k_codes", "v_codes", "k_scales", "v_scales", "slot_state",
+              "slot_seg", "slot_pos", "slot_bits", "block_type", "seg_type",
+              "seg_level", "buf_k", "buf_v", "buf_len", "cur_seg",
+              "cur_thought", "prev_thought", "num_tokens")
+
+    def __init__(self, **kw):
+        for f in self.FIELDS:
+            setattr(self, f, kw[f])
+
+    def tree_flatten(self):
+        return tuple(getattr(self, f) for f in self.FIELDS), None
+
+    @classmethod
+    def tree_unflatten(cls, aux, children):
+        return cls(**dict(zip(cls.FIELDS, children)))
+
+    def replace(self, **kw) -> "CTCache":
+        d = {f: getattr(self, f) for f in self.FIELDS}
+        d.update(kw)
+        return CTCache(**d)
+
+
+def init_cache(dims: CacheDims) -> CTCache:
+    """Empty cache; segment 0 opens as REASONING (prefill tokens are treated
+    as R-type, paper Sec. 6.1)."""
+    L, NS, H, D, G, S = dims.L, dims.NS, dims.H, dims.D, dims.G, dims.S
+    seg_type = jnp.full((S,), -1, jnp.int32).at[0].set(
+        jnp.int32(ThoughtType.REASONING))
+    return CTCache(
+        k_codes=jnp.zeros((L, NS, H, D), jnp.uint8),
+        v_codes=jnp.zeros((L, NS, H, D), jnp.uint8),
+        k_scales=jnp.zeros((L, NS, H, dims.scale_groups), SCALE_DTYPE),
+        v_scales=jnp.zeros((L, NS, H, dims.scale_groups), SCALE_DTYPE),
+        slot_state=jnp.zeros((L, NS), jnp.uint8),
+        slot_seg=jnp.full((L, NS), -1, jnp.int32),
+        slot_pos=jnp.full((L, NS), -1, jnp.int32),
+        slot_bits=jnp.full((L, NS), 4, jnp.uint8),
+        block_type=jnp.full((L, dims.NB), -1, jnp.int8),
+        seg_type=seg_type,
+        seg_level=jnp.zeros((L, S), jnp.int32),
+        buf_k=jnp.zeros((L, G, H, D), jnp.bfloat16),
+        buf_v=jnp.zeros((L, G, H, D), jnp.bfloat16),
+        buf_len=jnp.int32(0),
+        cur_seg=jnp.int32(0),
+        cur_thought=jnp.int32(ThoughtType.REASONING),
+        prev_thought=jnp.int32(ThoughtType.REASONING),
+        num_tokens=jnp.int32(0),
+    )
+
+
+# ---------------------------------------------------------------------------
+# Commit: quantize a full buffer group and place it (TBQ + CT step a/b/d)
+# ---------------------------------------------------------------------------
+
+def _quantize_group_by_thought(cfg: ThinKVConfig, k: jax.Array, v: jax.Array,
+                               thought: jax.Array):
+    """Quantize [G,H,D] K/V at psi(thought) bits.  bits is traced, so all
+    configured precisions are computed (G=16 tokens — negligible) and
+    selected."""
+    bits = psi_bits(thought, cfg)
+    uniq = sorted(set(cfg.precision))
+    outs = [(b, Q.quantize_group(k, b), Q.quantize_group(v, b)) for b in uniq]
+    kc, ks = outs[0][1]
+    vc, vs = outs[0][2]
+    for b, (kc2, ks2), (vc2, vs2) in outs[1:]:
+        sel = bits == b
+        kc = jnp.where(sel, kc2, kc)
+        ks = jnp.where(sel, ks2, ks)
+        vc = jnp.where(sel, vc2, vc)
+        vs = jnp.where(sel, vs2, vs)
+    return kc, ks.astype(SCALE_DTYPE), vc, vs.astype(SCALE_DTYPE), bits
+
+
+def _alloc_slots_one_layer(dims: CacheDims, slot_state, block_type, thought):
+    """Pick G slot addresses for a group of thought type t.
+
+    Priority (paper Sec. 5.2 walkthrough):
+      4 — evicted slot in a same-type block (in-place reuse)
+      3 — free slot in a same-type, partially-filled block
+      2 — slot in a fully-free block (claim new block)
+      1 — evicted slot in an other-type block (emergency fallback; decode
+          stays correct thanks to per-slot bits)
+    Ties broken by ascending linear address so claimed fresh blocks fill
+    contiguously.
+    """
+    NS, BS = dims.NS, dims.BS
+    btype = jnp.repeat(block_type, BS)                         # [NS]
+    same = btype == thought.astype(block_type.dtype)
+    block_free = jnp.repeat(
+        jnp.all((slot_state.reshape(dims.NB, BS) == FREE), axis=1), BS)
+    score = jnp.zeros((NS,), jnp.int32)
+    score = jnp.where(block_free, 2, score)
+    score = jnp.where((slot_state == FREE) & same & ~block_free, 3, score)
+    score = jnp.where((slot_state == EVICTED) & same, 4, score)
+    score = jnp.where((slot_state == EVICTED) & ~same, 1, score)
+    lin = jnp.arange(NS, dtype=jnp.int32)
+    key = score * NS - lin                                     # max = best
+    _, idx = jax.lax.top_k(key, dims.G)
+    ok = score[idx] > 0                                        # per-slot valid
+    return idx, ok
+
+
+def commit_group(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache
+                 ) -> CTCache:
+    """Quantize the (full) buffer and write it into the pool, reusing evicted
+    slots in place.  vmapped over layers."""
+    t = cache.cur_thought
+    positions = cache.num_tokens - dims.G + jnp.arange(dims.G, dtype=jnp.int32)
+
+    def one_layer(buf_k, buf_v, k_codes, v_codes, k_scales, v_scales,
+                  slot_state, slot_seg, slot_pos, slot_bits, block_type):
+        kc, ks, vc, vs, bits = _quantize_group_by_thought(cfg, buf_k, buf_v, t)
+        idx, ok = _alloc_slots_one_layer(dims, slot_state, block_type, t)
+        # guard: never write through invalid addresses (ok False is a
+        # capacity bug surfaced via cache_pressure metrics, not corruption)
+        safe = jnp.where(ok, idx, 0)
+        upd = lambda plane, val: plane.at[safe].set(
+            jnp.where(ok.reshape((-1,) + (1,) * (val.ndim - 1)), val,
+                      plane[safe]))
+        k_codes = upd(k_codes, kc)
+        v_codes = upd(v_codes, vc)
+        k_scales = upd(k_scales, ks)
+        v_scales = upd(v_scales, vs)
+        slot_state = slot_state.at[safe].set(
+            jnp.where(ok, VALID, slot_state[safe]))
+        slot_seg = slot_seg.at[safe].set(
+            jnp.where(ok, cache.cur_seg, slot_seg[safe]))
+        slot_pos = slot_pos.at[safe].set(jnp.where(ok, positions,
+                                                   slot_pos[safe]))
+        slot_bits = slot_bits.at[safe].set(
+            jnp.where(ok, bits.astype(jnp.uint8), slot_bits[safe]))
+        # claim fresh blocks for the thought type
+        bidx = safe // dims.BS
+        claim = ok & (block_type[bidx] == -1)
+        block_type = block_type.at[bidx].set(
+            jnp.where(claim, t.astype(block_type.dtype), block_type[bidx]))
+        return (k_codes, v_codes, k_scales, v_scales, slot_state, slot_seg,
+                slot_pos, slot_bits, block_type)
+
+    outs = jax.vmap(one_layer)(
+        cache.buf_k.astype(jnp.float32), cache.buf_v.astype(jnp.float32),
+        cache.k_codes, cache.v_codes, cache.k_scales, cache.v_scales,
+        cache.slot_state, cache.slot_seg, cache.slot_pos, cache.slot_bits,
+        cache.block_type)
+    (k_codes, v_codes, k_scales, v_scales, slot_state, slot_seg, slot_pos,
+     slot_bits, block_type) = outs
+    return cache.replace(
+        k_codes=k_codes, v_codes=v_codes, k_scales=k_scales,
+        v_scales=v_scales, slot_state=slot_state, slot_seg=slot_seg,
+        slot_pos=slot_pos, slot_bits=slot_bits, block_type=block_type,
+        buf_len=jnp.int32(0))
+
+
+def advance_after_write(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
+                        sparsity: jax.Array | None = None) -> CTCache:
+    """Post-forward bookkeeping when the engine has already written the
+    current token's KV into the buffer planes at index ``buf_len``:
+    advance counters, commit+budget on a full group, refresh at tau."""
+    cache = cache.replace(buf_len=cache.buf_len + 1,
+                          num_tokens=cache.num_tokens + 1)
+    cache = jax.lax.cond(
+        cache.buf_len >= dims.G,
+        lambda c: budget_evict(cfg, dims, commit_group(cfg, dims, c)),
+        lambda c: c, cache)
+    if sparsity is None:
+        return cache
+    at_refresh = (cache.num_tokens % cfg.refresh_interval) == 0
+    return jax.lax.cond(at_refresh,
+                        lambda c: refresh(cfg, dims, c, sparsity),
+                        lambda c: c, cache)
+
+
+def append_token(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
+                 k_t: jax.Array, v_t: jax.Array) -> CTCache:
+    """Append one token's [L,H,D] KV to the fp buffer; commit when full."""
+    i = cache.buf_len
+    cache = cache.replace(
+        buf_k=jax.lax.dynamic_update_index_in_dim(
+            cache.buf_k, k_t.astype(jnp.bfloat16)[:, None], i, axis=1),
+        buf_v=jax.lax.dynamic_update_index_in_dim(
+            cache.buf_v, v_t.astype(jnp.bfloat16)[:, None], i, axis=1),
+        buf_len=i + 1,
+        num_tokens=cache.num_tokens + 1,
+    )
+    # commit a full group, then enforce the per-layer budget (paper Listing 1
+    # checks `kv_size(l) > budget` in the step loop; the cache only grows at
+    # commits, so commit time is the faithful check point)
+    return jax.lax.cond(
+        cache.buf_len >= dims.G,
+        lambda c: budget_evict(cfg, dims, commit_group(cfg, dims, c)),
+        lambda c: c, cache)
+
+
+# ---------------------------------------------------------------------------
+# TBE: segment annealing + budget eviction (paper Sec. 4.3)
+# ---------------------------------------------------------------------------
+
+def _segment_tokens(dims: CacheDims, slot_seg, slot_state, seg: jax.Array):
+    """Addresses of the valid tokens of segment ``seg`` (fixed cap =
+    refresh_interval... bounded by G*ceil(tau/G); we use cap=128)."""
+    cap = 128
+    match = (slot_seg == seg) & (slot_state == VALID)
+    order = jnp.where(match, jnp.arange(dims.NS), dims.NS + 1)
+    idx = jnp.argsort(order)[:cap]
+    valid = jnp.take(match, idx)
+    return idx, valid
+
+
+def _anneal_one_segment(cfg: ThinKVConfig, dims: CacheDims, seg: jax.Array,
+                        enable: jax.Array, k_codes, k_scales, slot_state,
+                        slot_seg, slot_bits, seg_level_row):
+    """Anneal segment ``seg`` one retention level in ONE layer.  Returns
+    updated (slot_state, seg_level_row)."""
+    idx, valid = _segment_tokens(dims, slot_seg, slot_state, seg)
+    level = seg_level_row[seg]
+    target = retention_at(level, cfg)
+    count = jnp.sum(valid.astype(jnp.int32))
+    do = enable & (count > 0)
+
+    # dequantized post-RoPE keys of the segment, flattened over heads
+    kc = jnp.take(k_codes, idx, axis=0)                   # [cap,H,D]
+    ks = jnp.take(k_scales, idx, axis=0)
+    bits = jnp.take(slot_bits, idx, axis=0)               # [cap]
+    keys = Q.dequantize_by_bitcode(
+        kc, ks.astype(jnp.float32),
+        bits[:, None, None].astype(jnp.int32))            # [cap,H,D]
+    keys = keys.reshape(keys.shape[0], -1)
+
+    keep_mask = kmeans_select(keys, valid, target,
+                              k_max=max(cfg.retention_schedule),
+                              iters=cfg.kmeans_iters)
+    evict = valid & ~keep_mask & do & (count > target)
+    # when count <= target nothing is evicted but the level still advances
+    new_state = slot_state.at[idx].set(
+        jnp.where(evict, EVICTED, slot_state[idx]))
+    new_level = seg_level_row.at[seg].set(
+        jnp.where(do, jnp.minimum(level + 1,
+                                  len(cfg.retention_schedule) - 1 + 1),
+                  level))
+    return new_state, new_level
+
+
+def _free_empty_blocks(dims: CacheDims, slot_state, block_type):
+    """Blocks with no VALID slot return to the free pool (their EVICTED slots
+    become FREE) — bounds fragmentation without any data movement."""
+    by_block = slot_state.reshape(dims.NB, dims.BS)
+    empty = ~jnp.any(by_block == VALID, axis=1)
+    by_block = jnp.where(empty[:, None], FREE, by_block)
+    block_type = jnp.where(empty, jnp.int8(-1), block_type)
+    return by_block.reshape(dims.NS), block_type
+
+
+def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
+                   before_seg: jax.Array) -> CTCache:
+    """Case 1: a transition segment ended — anneal every preceding segment
+    (including previous transitions) one retention level, in every layer."""
+
+    def one_layer(k_codes, k_scales, slot_state, slot_seg, slot_bits,
+                  seg_level_row):
+        def body(carry, seg):
+            slot_state, seg_level_row = carry
+            enable = (seg < before_seg) & (cache.seg_type[seg] >= 0)
+            slot_state, seg_level_row = _anneal_one_segment(
+                cfg, dims, seg, enable, k_codes, k_scales, slot_state,
+                slot_seg, slot_bits, seg_level_row)
+            return (slot_state, seg_level_row), None
+
+        (slot_state, seg_level_row), _ = jax.lax.scan(
+            body, (slot_state, seg_level_row),
+            jnp.arange(dims.S, dtype=jnp.int32))
+        return slot_state, seg_level_row
+
+    slot_state, seg_level = jax.vmap(one_layer)(
+        cache.k_codes, cache.k_scales, cache.slot_state, cache.slot_seg,
+        cache.slot_bits, cache.seg_level)
+    slot_state, block_type = jax.vmap(
+        lambda s, b: _free_empty_blocks(dims, s, b))(slot_state,
+                                                     cache.block_type)
+    return cache.replace(slot_state=slot_state, seg_level=seg_level,
+                         block_type=block_type)
+
+
+def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
+                 max_rounds: int = 4) -> CTCache:
+    """Case 2: cache above budget with no transition — anneal the oldest,
+    least-important segment one level per round until within budget."""
+
+    def one_layer(k_codes, k_scales, slot_state, slot_seg, slot_bits,
+                  seg_level_row):
+        def round_body(_, carry):
+            slot_state, seg_level_row = carry
+            n_valid = jnp.sum((slot_state == VALID).astype(jnp.int32))
+            over = n_valid > cfg.token_budget
+
+            def do(carry):
+                slot_state, seg_level_row = carry
+                # per-segment current counts (only paid when over budget)
+                seg_ids = jnp.arange(dims.S, dtype=jnp.int32)
+                seg_of_slot = jnp.where(slot_state == VALID, slot_seg, -1)
+                counts = jnp.zeros((dims.S,), jnp.int32).at[seg_of_slot].add(
+                    1, mode="drop")
+                shrinkable = (counts > cfg.min_retention) & \
+                    (cache.seg_type >= 0) & (seg_ids < cache.cur_seg)
+                # least important first (rho == seg_type value), then oldest
+                key = cache.seg_type * dims.S + seg_ids
+                key = jnp.where(shrinkable, key, jnp.int32(2 ** 30))
+                seg = jnp.argmin(key)
+                enable = jnp.any(shrinkable)
+                return _anneal_one_segment(
+                    cfg, dims, seg, enable, k_codes, k_scales, slot_state,
+                    slot_seg, slot_bits, seg_level_row)
+
+            return jax.lax.cond(over, do, lambda c: c,
+                                (slot_state, seg_level_row))
+
+        slot_state, seg_level_row = jax.lax.fori_loop(
+            0, max_rounds, round_body, (slot_state, seg_level_row))
+        return slot_state, seg_level_row
+
+    slot_state, seg_level = jax.vmap(one_layer)(
+        cache.k_codes, cache.k_scales, cache.slot_state, cache.slot_seg,
+        cache.slot_bits, cache.seg_level)
+    slot_state, block_type = jax.vmap(
+        lambda s, b: _free_empty_blocks(dims, s, b))(slot_state,
+                                                     cache.block_type)
+    return cache.replace(slot_state=slot_state, seg_level=seg_level,
+                         block_type=block_type)
+
+
+# ---------------------------------------------------------------------------
+# Refresh (thought classification + segment roll, paper Sec. 4.1/Listing 1)
+# ---------------------------------------------------------------------------
+
+def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
+            sparsity: jax.Array) -> CTCache:
+    """Every tau steps: classify the sparsity into a thought type, close the
+    current segment, trigger TBE if the closing segment was a transition,
+    then enforce the budget."""
+    new_thought = classify(sparsity, cfg.sparsity_thresholds)
+    ended_seg = cache.cur_seg
+    ended_type = cache.seg_type[ended_seg]
+
+    cache = jax.lax.cond(
+        ended_type == jnp.int32(ThoughtType.TRANSITION),
+        lambda c: tbe_anneal_all(cfg, dims, c, before_seg=ended_seg),
+        lambda c: c, cache)
+
+    nxt = jnp.minimum(ended_seg + 1, dims.S - 1)
+    cache = cache.replace(
+        cur_seg=nxt,
+        seg_type=cache.seg_type.at[nxt].set(new_thought),
+        prev_thought=cache.cur_thought,
+        cur_thought=new_thought,
+    )
+    return budget_evict(cfg, dims, cache)
+
+
+# ---------------------------------------------------------------------------
+# Read side: dequantize / reference attention inputs / metrics
+# ---------------------------------------------------------------------------
+
+def dequant_layer(dims: CacheDims, cache: CTCache, layer: int
+                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Reference read of one layer: (k, v, valid) with k/v [NS,H,D] f32."""
+    bits = cache.slot_bits[layer].astype(jnp.int32)[:, None, None]
+    k = Q.dequantize_by_bitcode(cache.k_codes[layer],
+                                cache.k_scales[layer].astype(jnp.float32),
+                                bits)
+    v = Q.dequantize_by_bitcode(cache.v_codes[layer],
+                                cache.v_scales[layer].astype(jnp.float32),
+                                bits)
+    valid = cache.slot_state[layer] == VALID
+    return k, v, valid
+
+
+def valid_counts(cache: CTCache) -> jax.Array:
+    return jnp.sum((cache.slot_state == VALID).astype(jnp.int32), axis=1)
+
+
+def memory_stats(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache) -> dict:
+    """Physical + effective footprint and pressure metrics."""
+    used_blocks = jnp.sum((cache.block_type >= 0).astype(jnp.int32), axis=1)
+    n_valid = valid_counts(cache)
+    slot_bits = cache.slot_bits.astype(jnp.float32)
+    eff_bits = jnp.where(cache.slot_state == VALID, slot_bits, 0.0)
+    avg_bits = jnp.sum(eff_bits) / jnp.maximum(jnp.sum(
+        (cache.slot_state == VALID).astype(jnp.float32)), 1.0)
+    bytes_per_slot = (2 * dims.H * dims.D // (2 if dims.nibble else 1)
+                      + 2 * dims.H * dims.scale_groups)  # codes + e4m3 scales
+    return {
+        "valid_tokens": n_valid,
+        "used_blocks": used_blocks,
+        "physical_bytes": used_blocks * dims.BS * bytes_per_slot,
+        "avg_bits": avg_bits,
+        "pressure": used_blocks / dims.NB,
+    }

@@ -1,0 +1,101 @@
+"""K-means token selection for TBE (paper Sec. 4.3, App. D.4).
+
+``kmeans_select`` clusters the (post-RoPE, dequantized) key embeddings of one
+thought segment and returns a boolean keep-mask marking the medoid token of
+every cluster — "cluster centroids correspond to keys that are retained, and
+the corresponding value tokens are preserved".
+
+Design constraints (DESIGN.md Sec. 3):
+* fixed shapes: n (segment capacity) and K_MAX (= max retention, 64) are
+  static; the actual number of valid tokens and the retention target ``keep``
+  are *traced*, so a single compiled kernel serves every annealing level —
+  centroid slots with index >= keep are simply inactive.
+* deterministic: position-stratified init + fixed Lloyd iteration count.
+* runs inside jit / vmap over (layer, segment).
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+BIG = 1e30
+
+
+@functools.partial(jax.jit, static_argnames=("k_max", "iters"))
+def kmeans_select(x: jax.Array, valid: jax.Array, keep: jax.Array,
+                  k_max: int = 64, iters: int = 8) -> jax.Array:
+    """Select ``keep`` representative tokens out of the valid rows of ``x``.
+
+    Args:
+      x: [n, d] embeddings (one per token slot).
+      valid: [n] bool — which rows are real tokens.
+      keep: scalar int32 — number of tokens to retain (traced; <= k_max).
+      k_max: static upper bound on keep.
+      iters: Lloyd iterations.
+
+    Returns:
+      keep_mask: [n] bool; True rows are retained.  Exactly
+      ``min(keep, n_valid)`` True entries; if keep >= n_valid the mask equals
+      ``valid``.
+    """
+    n, d = x.shape
+    x = x.astype(jnp.float32)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    keep = jnp.minimum(jnp.maximum(keep, 1), jnp.minimum(n_valid, k_max))
+
+    # rank of each valid row among valid rows (stable by position)
+    rank = jnp.cumsum(valid.astype(jnp.int32)) - 1          # [n]
+
+    # --- position-stratified init: centroid j <- valid token with
+    #     rank floor(j * n_valid / keep)
+    j = jnp.arange(k_max)
+    tgt_rank = (j * n_valid) // jnp.maximum(keep, 1)         # [k_max]
+    # map rank -> row index
+    row_of_rank = jnp.full((n,), 0, jnp.int32).at[
+        jnp.where(valid, rank, n - 1)].set(jnp.arange(n, dtype=jnp.int32),
+                                           mode="drop")
+    init_rows = row_of_rank[jnp.clip(tgt_rank, 0, n - 1)]
+    centroids = x[init_rows]                                  # [k_max, d]
+    active = j < keep                                         # [k_max]
+
+    def step(c, _):
+        d2 = (jnp.sum(x * x, -1)[:, None] - 2.0 * x @ c.T
+              + jnp.sum(c * c, -1)[None, :])                  # [n, k_max]
+        d2 = jnp.where(active[None, :], d2, BIG)
+        d2 = jnp.where(valid[:, None], d2, BIG)
+        assign = jnp.argmin(d2, axis=-1)                      # [n]
+        onehot = jax.nn.one_hot(assign, k_max, dtype=jnp.float32)
+        onehot = onehot * valid[:, None]
+        counts = onehot.sum(0)                                # [k_max]
+        sums = onehot.T @ x                                   # [k_max, d]
+        newc = jnp.where(counts[:, None] > 0, sums / jnp.maximum(counts, 1)[:, None], c)
+        return newc, None
+
+    centroids, _ = jax.lax.scan(step, centroids, None, length=iters)
+
+    # --- medoid extraction: nearest valid token to each active centroid,
+    #     restricted to its own cluster
+    d2 = (jnp.sum(x * x, -1)[:, None] - 2.0 * x @ centroids.T
+          + jnp.sum(centroids * centroids, -1)[None, :])
+    d2 = jnp.where(active[None, :], d2, BIG)
+    d2 = jnp.where(valid[:, None], d2, BIG)
+    assign = jnp.argmin(d2, axis=-1)
+    in_cluster = (assign[:, None] == j[None, :]) & valid[:, None]
+    d2_m = jnp.where(in_cluster, d2, BIG)
+    medoid = jnp.argmin(d2_m, axis=0)                         # [k_max]
+    has_member = jnp.any(in_cluster, axis=0) & active
+    # fall back for empty active clusters: globally nearest valid token
+    fallback = jnp.argmin(jnp.where(valid[:, None], d2, BIG), axis=0)
+    medoid = jnp.where(has_member, medoid, fallback)
+
+    keep_mask = jnp.zeros((n,), bool).at[medoid].max(active)
+    # guarantee exactly min(keep, n_valid) kept even under medoid collisions:
+    # pad with lowest-index valid tokens not yet kept.
+    deficit = keep - jnp.sum(keep_mask.astype(jnp.int32))
+    pad_order = jnp.where(valid & ~keep_mask, jnp.arange(n), n + 1)
+    pad_rank = jnp.argsort(pad_order)
+    take = jnp.arange(n) < deficit
+    keep_mask = keep_mask.at[pad_rank].max(take)
+    return keep_mask & valid

@@ -1,0 +1,55 @@
+"""ThinKV policies: importance rho, precision mapping psi, retention schedule.
+
+Paper Sec. 3.2 / 4.2 / 4.3:
+  rho(R)=2 > rho(E)=1 > rho(T)=0   (thought importance hierarchy)
+  psi: R -> 8b FP8 (4b NVFP4 in practice), E -> 4b NVFP4, T -> 2b ternary
+  R_schedule = {64, 32, 16, 8, 4}; min retention 4.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ThinKVConfig, ThoughtType
+
+
+def rho(thought: jax.Array) -> jax.Array:
+    """Importance score; ThoughtType's integer value IS rho (T=0<E=1<R=2)."""
+    return thought
+
+
+def psi_bits(thought: jax.Array, cfg: ThinKVConfig) -> jax.Array:
+    """Precision (bits) for a thought type.  Monotone in rho by construction
+    (validated in tests): cfg.precision is (T, E, R)-ordered."""
+    prec = jnp.asarray(cfg.precision, jnp.int32)
+    return prec[thought]
+
+
+def retention_at(level: jax.Array, cfg: ThinKVConfig) -> jax.Array:
+    """R_n for the n-th eviction of a segment (clamped at min retention)."""
+    sched = jnp.asarray(cfg.retention_schedule, jnp.int32)
+    idx = jnp.clip(level, 0, len(cfg.retention_schedule) - 1)
+    return jnp.maximum(sched[idx], cfg.min_retention)
+
+
+def validate(cfg: ThinKVConfig) -> None:
+    pt, pe, pr = cfg.precision
+    if not (pt <= pe <= pr):
+        raise ValueError(
+            f"psi must be monotone in rho: precision (T,E,R)={cfg.precision}")
+    if any(b not in (2, 4, 8) for b in cfg.precision):
+        raise ValueError(f"unsupported precisions {cfg.precision}")
+    sched = cfg.retention_schedule
+    if list(sched) != sorted(sched, reverse=True):
+        raise ValueError("retention schedule must be descending")
+    if cfg.min_retention < 1:
+        raise ValueError("min retention must be >= 1 (paper Fig. 11a: full "
+                         "eviction causes endless reasoning loops)")
+    if cfg.group_size > cfg.refresh_interval:
+        raise ValueError("group must fit within a refresh interval")
+
+
+def default_thresholds() -> Tuple[float, float]:
+    return ThinKVConfig().sparsity_thresholds

@@ -1,0 +1,291 @@
+"""TBQ data formats (paper Sec. 4.2, App. D.3): FP8-E4M3, NVFP4, ternary.
+
+All formats use *group* quantization with FP8-E4M3 group scales (g=16),
+except FP8 which uses a per-tensor FP32 scale, exactly as in the paper.
+
+TPU adaptation (DESIGN.md Sec. 3): the cache stores **channel-group** scales
+(one scale per token per 16 channels of ``head_dim``) for both K and V.  This
+is the actual NVFP4/MX microscaling definition (scaling along the dot-product
+axis) and makes every cache slot self-contained so CT can reuse evicted slots
+in place.  KIVI-style per-channel key scales (shared across the g tokens of a
+group) are also implemented for the accuracy comparison in
+``benchmarks/table1_quant.py``.
+
+Code layout
+-----------
+* NVFP4 (e2m1): 4-bit codes ``s eem`` with magnitudes {0,.5,1,1.5,2,3,4,6}.
+* Ternary: values {-1,0,+1}; 2-bit codes; in the nibble-plane cache a code
+  occupies the low 2 bits of its nibble (see ``pack_ternary`` for the true
+  4-codes-per-byte packing used in the memory accounting).
+* FP8-E4M3: via ``jnp.float8_e4m3fn`` (ml_dtypes), per-tensor FP32 scale.
+
+Nibble packing: two 4-bit codes per uint8, element ``2i`` in the low nibble.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+F8 = jnp.float8_e4m3fn
+E4M3_MAX = 448.0
+NVFP4_MAX = 6.0
+NVFP4_GRID = (0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0)
+GROUP = 16                     # g (paper Sec. 6.1)
+SCALE_EPS = 2 ** -16           # min e4m3-representable scale guard
+
+
+# ---------------------------------------------------------------------------
+# scale helpers
+# ---------------------------------------------------------------------------
+
+def e4m3_round(x: jax.Array) -> jax.Array:
+    """Round ``x`` to the FP8-E4M3 grid (returned in f32)."""
+    return jnp.clip(x, -E4M3_MAX, E4M3_MAX).astype(F8).astype(jnp.float32)
+
+
+def _group_scale(amax: jax.Array, qmax: float) -> jax.Array:
+    """E4M3 group scale; guarded so that x/scale stays within the code grid."""
+    raw = jnp.maximum(amax, SCALE_EPS) / qmax
+    s = e4m3_round(raw)
+    # e4m3 rounding may round *down*; bump to the next representable value so
+    # |x|/s never exceeds qmax (keeps encode saturation-free).
+    s = jnp.where(s * qmax < amax, e4m3_round(raw * 1.0625), s)
+    return jnp.maximum(s, SCALE_EPS)
+
+
+# ---------------------------------------------------------------------------
+# NVFP4 (e2m1)
+# ---------------------------------------------------------------------------
+
+def nvfp4_encode(x: jax.Array) -> jax.Array:
+    """x (pre-scaled, |x|<=6) -> uint8 codes in [0,16): ``s<<3 | mag_idx``."""
+    sign = (x < 0).astype(jnp.uint8)
+    mag = jnp.abs(x)
+    # midpoint thresholds of the e2m1 grid
+    # grid:      0   .5   1  1.5   2    3    4    6
+    # midpoints:   .25  .75 1.25 1.75  2.5  3.5   5
+    idx = (
+        (mag >= 0.25).astype(jnp.uint8)
+        + (mag >= 0.75).astype(jnp.uint8)
+        + (mag >= 1.25).astype(jnp.uint8)
+        + (mag >= 1.75).astype(jnp.uint8)
+        + (mag >= 2.5).astype(jnp.uint8)
+        + (mag >= 3.5).astype(jnp.uint8)
+        + (mag >= 5.0).astype(jnp.uint8)
+    )
+    return (sign << 3) | idx
+
+
+def nvfp4_decode(codes: jax.Array) -> jax.Array:
+    """uint8 codes -> f32 values on the e2m1 grid (arithmetic, no gather —
+    mirrors the in-kernel decode)."""
+    codes = codes.astype(jnp.int32)
+    sign = 1.0 - 2.0 * ((codes >> 3) & 1).astype(jnp.float32)
+    idx = codes & 7
+    exp = (idx >> 1).astype(jnp.float32)        # 0..3
+    man = (idx & 1).astype(jnp.float32)         # 0/1
+    sub = 0.5 * man                              # exp==0: {0, .5}
+    norm = (1.0 + 0.5 * man) * jnp.exp2(exp - 1.0)
+    mag = jnp.where(idx < 2, sub, norm)
+    return sign * mag
+
+
+# ---------------------------------------------------------------------------
+# Ternary
+# ---------------------------------------------------------------------------
+
+def ternary_encode(x: jax.Array) -> jax.Array:
+    """x (pre-scaled, |x|<=1) -> uint8 codes {0:zero, 1:+1, 3:-1} (2 bits)."""
+    v = jnp.clip(jnp.round(x), -1, 1).astype(jnp.int32)
+    # map -1 -> 3 (0b11), 0 -> 0, +1 -> 1
+    return jnp.where(v < 0, jnp.uint8(3), v.astype(jnp.uint8))
+
+
+def ternary_decode(codes: jax.Array) -> jax.Array:
+    c = codes.astype(jnp.int32) & 3
+    return jnp.where(c == 3, -1.0, jnp.where(c == 1, 1.0, 0.0))
+
+
+# ---------------------------------------------------------------------------
+# INT formats (paper App. E.8 ablation)
+# ---------------------------------------------------------------------------
+
+def int_encode(x: jax.Array, bits: int) -> jax.Array:
+    qmax = 2 ** (bits - 1) - 1
+    v = jnp.clip(jnp.round(x), -qmax - 1, qmax).astype(jnp.int32)
+    return (v & (2 ** bits - 1)).astype(jnp.uint8)
+
+
+def int_decode(codes: jax.Array, bits: int) -> jax.Array:
+    c = codes.astype(jnp.int32) & (2 ** bits - 1)
+    half = 2 ** (bits - 1)
+    return jnp.where(c >= half, c - 2 ** bits, c).astype(jnp.float32)
+
+
+# ---------------------------------------------------------------------------
+# Channel-group quantization (the cache path)
+# ---------------------------------------------------------------------------
+
+def _reshape_groups(x: jax.Array, g: int) -> jax.Array:
+    *lead, d = x.shape
+    assert d % g == 0, f"head_dim {d} not divisible by group {g}"
+    return x.reshape(*lead, d // g, g)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "g"))
+def quantize_group(x: jax.Array, bits: int, g: int = GROUP
+                   ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize along channel groups of ``g``.
+
+    Args:
+      x: [..., d] float array (bf16/f32).
+      bits: 2 (ternary), 4 (NVFP4) or 8 (int8-with-group-scale, used when the
+        precision policy requests FP8-class storage in the grouped plane).
+
+    Returns:
+      codes: [..., d] uint8 (one code per element, low bits used).
+      scales: [..., d//g] f32 on the E4M3 grid.
+    """
+    xg = _reshape_groups(x.astype(jnp.float32), g)
+    amax = jnp.max(jnp.abs(xg), axis=-1)
+    if bits == 4:
+        qmax = NVFP4_MAX
+    elif bits == 2:
+        qmax = 1.0
+    elif bits == 8:
+        qmax = 127.0
+    else:
+        raise ValueError(f"unsupported bits={bits}")
+    scale = _group_scale(amax, qmax)
+    y = xg / scale[..., None]
+    if bits == 4:
+        codes = nvfp4_encode(y)
+    elif bits == 2:
+        codes = ternary_encode(y)
+    else:
+        codes = int_encode(y, 8)
+    return codes.reshape(x.shape), scale
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "g"))
+def dequantize_group(codes: jax.Array, scales: jax.Array, bits: int,
+                     g: int = GROUP) -> jax.Array:
+    if bits == 4:
+        vals = nvfp4_decode(codes)
+    elif bits == 2:
+        vals = ternary_decode(codes)
+    elif bits == 8:
+        vals = int_decode(codes, 8)
+    else:
+        raise ValueError(f"unsupported bits={bits}")
+    vg = _reshape_groups(vals, g)
+    return (vg * scales[..., None].astype(jnp.float32)).reshape(codes.shape)
+
+
+def dequantize_by_bitcode(codes: jax.Array, scales: jax.Array,
+                          bits_arr: jax.Array, g: int = GROUP) -> jax.Array:
+    """Dequantize with a *traced* per-element bit width in {2,4,8}.
+
+    ``bits_arr`` broadcasts against ``codes[..., :1]`` (e.g. per-token).  Used
+    by reference paths where blocks of different thought types are mixed.
+    """
+    v2 = ternary_decode(codes)
+    v4 = nvfp4_decode(codes)
+    v8 = int_decode(codes, 8)
+    vals = jnp.where(bits_arr == 2, v2, jnp.where(bits_arr == 4, v4, v8))
+    vg = _reshape_groups(vals, g)
+    return (vg * scales[..., None].astype(jnp.float32)).reshape(codes.shape)
+
+
+# ---------------------------------------------------------------------------
+# KIVI-style per-channel key quantization (comparison only)
+# ---------------------------------------------------------------------------
+
+@functools.partial(jax.jit, static_argnames=("bits",))
+def quantize_per_channel(x: jax.Array, bits: int
+                         ) -> Tuple[jax.Array, jax.Array]:
+    """KIVI per-channel: scale per channel shared across the token group.
+
+    x: [g_tokens, d].  Returns codes [g,d] and scales [d].
+    """
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=0)
+    qmax = NVFP4_MAX if bits == 4 else (1.0 if bits == 2 else 127.0)
+    scale = _group_scale(amax, qmax)
+    y = x.astype(jnp.float32) / scale[None, :]
+    codes = (nvfp4_encode(y) if bits == 4
+             else ternary_encode(y) if bits == 2 else int_encode(y, 8))
+    return codes, scale
+
+
+def dequantize_per_channel(codes: jax.Array, scales: jax.Array,
+                           bits: int) -> jax.Array:
+    vals = (nvfp4_decode(codes) if bits == 4
+            else ternary_decode(codes) if bits == 2 else int_decode(codes, 8))
+    return vals * scales[None, :]
+
+
+# ---------------------------------------------------------------------------
+# FP8 per-tensor (paper: highest-precision option for R thoughts)
+# ---------------------------------------------------------------------------
+
+def quantize_fp8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, SCALE_EPS) / E4M3_MAX
+    return (x.astype(jnp.float32) / scale).astype(F8), scale
+
+
+def dequantize_fp8(codes: jax.Array, scale: jax.Array) -> jax.Array:
+    return codes.astype(jnp.float32) * scale
+
+
+# ---------------------------------------------------------------------------
+# Packing
+# ---------------------------------------------------------------------------
+
+def pack_nibbles(codes: jax.Array) -> jax.Array:
+    """[..., d] 4-bit codes (uint8) -> [..., d//2] packed uint8."""
+    *lead, d = codes.shape
+    assert d % 2 == 0
+    c = codes.reshape(*lead, d // 2, 2)
+    return (c[..., 0] | (c[..., 1] << 4)).astype(jnp.uint8)
+
+
+def unpack_nibbles(packed: jax.Array) -> jax.Array:
+    lo = packed & 0xF
+    hi = (packed >> 4) & 0xF
+    return jnp.stack([lo, hi], axis=-1).reshape(*packed.shape[:-1],
+                                                packed.shape[-1] * 2)
+
+
+def pack_ternary(codes: jax.Array) -> jax.Array:
+    """[..., d] 2-bit codes -> [..., d//4] packed uint8 (true 2-bit storage;
+    used by the memory accounting — paper packs 2 T tokens per nibble)."""
+    *lead, d = codes.shape
+    assert d % 4 == 0
+    c = (codes & 3).reshape(*lead, d // 4, 4).astype(jnp.uint8)
+    return (c[..., 0] | (c[..., 1] << 2) | (c[..., 2] << 4)
+            | (c[..., 3] << 6)).astype(jnp.uint8)
+
+
+def unpack_ternary(packed: jax.Array) -> jax.Array:
+    parts = [(packed >> (2 * i)) & 3 for i in range(4)]
+    return jnp.stack(parts, axis=-1).reshape(*packed.shape[:-1],
+                                             packed.shape[-1] * 4)
+
+
+# ---------------------------------------------------------------------------
+# Memory accounting (paper Sec. 2: Mem(KV) ∝ (I + b·Lgen) · a·β)
+# ---------------------------------------------------------------------------
+
+def cache_bits_per_element(bits: int, g: int = GROUP,
+                           physical_nibble_plane: bool = True) -> float:
+    """Effective bits/element including the E4M3 group scale (8/g bits).
+
+    ``physical_nibble_plane``: our CT cache stores every code in a nibble for
+    uniform slot reuse; set False for the paper's 2-bit-packed T accounting.
+    """
+    payload = 4.0 if (physical_nibble_plane and bits < 8) else float(bits)
+    return payload + 8.0 / g

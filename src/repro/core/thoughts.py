@@ -1,0 +1,102 @@
+"""Thought decomposition phi via attention sparsity (paper Sec. 3.1, 4.1).
+
+Sparsity of a decode-step attention row = fraction of normalized attention
+weights below 1% of the row maximum (following H2O / Zhang et al. 2023, as
+the paper does).  For GQA, scores are max-pooled across the query heads of a
+group and renormalized before measuring (paper App. C.2).
+
+Classification (Obs. 1b: sparsity T > R > E):
+
+    sparsity <  theta1          -> EXECUTION  (lowest sparsity)
+    theta1 <= sparsity < theta2 -> REASONING
+    sparsity >= theta2          -> TRANSITION (highest sparsity)
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ThoughtType
+
+SPARSITY_REL_THRESHOLD = 0.01   # "1% of the row-wise maximum"
+
+
+def row_sparsity(probs: jax.Array, valid: jax.Array | None = None) -> jax.Array:
+    """Sparsity of normalized attention rows.
+
+    Args:
+      probs: [..., n] softmax-normalized attention weights for one query.
+      valid: optional [..., n] bool mask of real (non-padded) positions.
+
+    Returns:
+      [...] sparsity in [0, 1].
+    """
+    if valid is None:
+        valid = jnp.ones(probs.shape, bool)
+    neg = jnp.where(valid, probs, -jnp.inf)
+    rmax = jnp.max(neg, axis=-1, keepdims=True)
+    small = (probs < SPARSITY_REL_THRESHOLD * rmax) & valid
+    denom = jnp.maximum(jnp.sum(valid, axis=-1), 1)
+    return jnp.sum(small, axis=-1) / denom
+
+
+def gqa_group_sparsity(scores: jax.Array, group_size: int,
+                       valid: jax.Array | None = None) -> jax.Array:
+    """Paper App. C.2: max-pool scores over the query heads of each KV group,
+    renormalize with softmax, then measure sparsity; average over groups.
+
+    Args:
+      scores: [num_q_heads, n] pre-softmax logits for one decode query.
+      group_size: q_heads per kv head (G).
+
+    Returns: scalar sparsity.
+    """
+    h, n = scores.shape
+    assert h % group_size == 0
+    g = scores.reshape(h // group_size, group_size, n)
+    pooled = jnp.max(g, axis=1)                      # [kv_heads, n]
+    if valid is not None:
+        pooled = jnp.where(valid[None, :], pooled, -jnp.inf)
+    probs = jax.nn.softmax(pooled, axis=-1)
+    v = None if valid is None else jnp.broadcast_to(valid[None, :], probs.shape)
+    return jnp.mean(row_sparsity(probs, v))
+
+
+def classify(sparsity: jax.Array, thresholds: Tuple[float, float]) -> jax.Array:
+    """Map mean sparsity (averaged over L*) to a ThoughtType (int array)."""
+    t1, t2 = thresholds
+    return jnp.where(
+        sparsity < t1, jnp.int32(ThoughtType.EXECUTION),
+        jnp.where(sparsity < t2, jnp.int32(ThoughtType.REASONING),
+                  jnp.int32(ThoughtType.TRANSITION)))
+
+
+@functools.partial(jax.jit, static_argnames=("gqa_group",))
+def sparsity_from_qk(q: jax.Array, k: jax.Array, valid: jax.Array,
+                     gqa_group: int = 1) -> jax.Array:
+    """Decode-time sparsity stat from a query and a (compressed) key set.
+
+    This is the DESIGN.md Sec. 3 adaptation: instead of widening the flash
+    kernel epilogue, we recompute q·K over the <=budget-token compressed cache
+    for the |L*| calibrated layers only.
+
+    Args:
+      q: [num_q_heads, head_dim] current query (one token).
+      k: [n, kv_heads, head_dim] cached keys (dequantized).
+      valid: [n, kv_heads] or [n] validity mask.
+
+    Returns: scalar sparsity for this layer.
+    """
+    hq, hd = q.shape
+    n, hkv, _ = k.shape
+    if valid.ndim == 1:
+        valid = jnp.broadcast_to(valid[:, None], (n, hkv))
+    qg = q.reshape(hkv, hq // hkv, hd)
+    scores = jnp.einsum("ngd,knd->ngk", qg, k) / jnp.sqrt(float(hd))
+    pooled = jnp.max(scores, axis=1)                 # [kv_heads, n]
+    pooled = jnp.where(valid.T, pooled, -jnp.inf)
+    probs = jax.nn.softmax(pooled, axis=-1)
+    return jnp.mean(row_sparsity(probs, valid.T))

@@ -1,0 +1,171 @@
+"""CT paged decode-attention Pallas TPU kernel (paper Sec. 5 'Continuous
+Thinking', adapted per DESIGN.md Sec. 3).
+
+One (kv-head, block)-grid flash-decoding pass over the quantized paged cache:
+
+* the quantized cache (nibble codes + E4M3 group scales) is the ONLY HBM
+  traffic — dequantization (code decode + scale multiply) is fused in VMEM
+  before the MXU dot, which is the entire memory-roofline win of TBQ;
+* the paper's eviction/segment masks enter as the per-slot ``slot_state``
+  plane: soft-evicted slots are masked out of the softmax, never compacted;
+* PagedAttention's block-table indirection is kept via scalar prefetch
+  (``block_table[b] -> physical block``); per-request pools use identity
+  tables, a shared global pool passes a real mapping;
+* flash accumulation state (m, l, acc) lives in VMEM scratch across the
+  sequential block grid dimension; (m, l) are returned so the wrapper can
+  merge the attention over the full-precision TBQ buffer ``B_buf``.
+
+Tiling: a KV block is (block_size=16, head_dim=128) per head — exactly one
+TPU (16,128) tile; codes are uint8 lanes, scales one bf16 (16,8) tile.
+
+Validated on CPU against ``ref.ct_paged_attention_ref`` in interpret mode
+(``tests/test_kernels_ct_attention.py`` sweeps shapes/dtypes).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+VALID = 1
+
+
+def _decode_codes(codes_u8, bits_u8, scales, group: int):
+    """Fused in-VMEM dequant: [BS,D] uint8 codes -> f32, per-slot bit width
+    in {2,4,8}, E4M3-valued scales [BS, D//group]."""
+    c = codes_u8.astype(jnp.int32)
+    # ternary (2b): low 2 bits; {0:+0, 1:+1, 3:-1}
+    c2 = c & 3
+    v2 = jnp.where(c2 == 3, -1.0, jnp.where(c2 == 1, 1.0, 0.0))
+    # nvfp4 (4b): s eem arithmetic decode (no gather)
+    c4 = c & 0xF
+    sign = 1.0 - 2.0 * ((c4 >> 3) & 1).astype(jnp.float32)
+    idx = c4 & 7
+    exp = (idx >> 1).astype(jnp.float32)
+    man = (idx & 1).astype(jnp.float32)
+    v4 = sign * jnp.where(idx < 2, 0.5 * man,
+                          (1.0 + 0.5 * man) * jnp.exp2(exp - 1.0))
+    # int8 (8b): two's complement
+    v8 = jnp.where(c >= 128, c - 256, c).astype(jnp.float32)
+    bits = bits_u8.astype(jnp.int32)[:, None]
+    vals = jnp.where(bits == 2, v2, jnp.where(bits == 4, v4, v8))
+    bs, d = vals.shape
+    vg = vals.reshape(bs, d // group, group)
+    out = vg * scales.astype(jnp.float32)[:, :, None]
+    return out.reshape(bs, d)
+
+
+def _kernel(block_table, q_ref, kc_ref, vc_ref, ks_ref, vs_ref, state_ref,
+            bits_ref, o_ref, m_ref, l_ref, acc_ref, *, group: int,
+            blocks_per_seq: int):
+    b = pl.program_id(1)
+
+    @pl.when(b == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, m_ref.dtype)
+        l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
+
+    q = q_ref[0].astype(jnp.float32)                       # [Gq, D]
+    kc = kc_ref[0, :, 0]                                   # [BS, D] u8
+    vc = vc_ref[0, :, 0]
+    ks = ks_ref[0, :, 0]                                   # [BS, D//g]
+    vs = vs_ref[0, :, 0]
+    state = state_ref[0]                                   # [BS]
+    bits = bits_ref[0]
+
+    k = _decode_codes(kc, bits, ks, group)                 # [BS, D]
+    v = _decode_codes(vc, bits, vs, group)
+
+    d = q.shape[-1]
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)
+    s = s * (1.0 / (d ** 0.5))                             # [Gq, BS]
+    valid = (state == VALID)
+    s = jnp.where(valid[None, :], s, NEG_INF)
+
+    m_prev, l_prev = m_ref[0], l_ref[0]                    # [Gq, 1]
+    m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+    p = jnp.exp(s - m_new)
+    p = jnp.where(valid[None, :], p, 0.0)
+    corr = jnp.exp(m_prev - m_new)
+    l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+    acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+        p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+    m_ref[0] = m_new
+    l_ref[0] = l_new
+
+    @pl.when(b == blocks_per_seq - 1)
+    def _final():
+        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "interpret"))
+def ct_paged_attention(q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
+                       k_scales: jax.Array, v_scales: jax.Array,
+                       slot_state: jax.Array, slot_bits: jax.Array,
+                       block_table: jax.Array, *, group: int = 16,
+                       interpret: bool = False
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Paged decode attention over a quantized CT pool (one request+layer).
+
+    Args:
+      q:          [Hq, D]      current query (post-RoPE).
+      k_codes:    [NP, BS, H, D]   uint8 pool planes (NP physical blocks).
+      v_codes:    [NP, BS, H, D]
+      k_scales:   [NP, BS, H, D//group]  (bf16, E4M3-valued)
+      v_scales:   [NP, BS, H, D//group]
+      slot_state: [NP, BS]      uint8 (1 == valid).
+      slot_bits:  [NP, BS]      uint8 in {2,4,8}.
+      block_table:[NB_seq]      int32: sequence block -> physical block.
+
+    Returns:
+      out [Hq, D] f32, m [H, Gq, 1], l [H, Gq, 1] flash stats for merging
+      with the B_buf attention.
+    """
+    hq, d = q.shape
+    npool, bs, h, _ = k_codes.shape
+    gq = hq // h
+    nb = block_table.shape[0]
+    qh = q.reshape(h, gq, d)
+
+    grid = (h, nb)
+    kern = functools.partial(_kernel, group=group, blocks_per_seq=nb)
+
+    out, m, l = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, gq, d), lambda hh, b, bt: (hh, 0, 0)),
+                pl.BlockSpec((1, bs, 1, d), lambda hh, b, bt: (bt[b], 0, hh, 0)),
+                pl.BlockSpec((1, bs, 1, d), lambda hh, b, bt: (bt[b], 0, hh, 0)),
+                pl.BlockSpec((1, bs, 1, d // group),
+                             lambda hh, b, bt: (bt[b], 0, hh, 0)),
+                pl.BlockSpec((1, bs, 1, d // group),
+                             lambda hh, b, bt: (bt[b], 0, hh, 0)),
+                pl.BlockSpec((1, bs), lambda hh, b, bt: (bt[b], 0)),
+                pl.BlockSpec((1, bs), lambda hh, b, bt: (bt[b], 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, gq, d), lambda hh, b, bt: (hh, 0, 0)),
+                pl.BlockSpec((1, gq, 1), lambda hh, b, bt: (hh, 0, 0)),
+                pl.BlockSpec((1, gq, 1), lambda hh, b, bt: (hh, 0, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((gq, d), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((h, gq, d), jnp.float32),
+            jax.ShapeDtypeStruct((h, gq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((h, gq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_table, qh, k_codes, v_codes, k_scales, v_scales, slot_state,
+      slot_bits)
+    return out.reshape(hq, d), m, l

@@ -1,0 +1,86 @@
+"""Pallas TPU group-quantization kernel (TBQ commit path).
+
+Quantizes a group of freshly generated KV vectors into ThinKV cache codes +
+E4M3 group scales.  The paper implements this as an optimized CUDA kernel
+(Sec. 6.1 'System Optimizations'); on TPU it is a single VMEM-resident
+vector pass: amax-per-channel-group -> E4M3 scale -> code rounding.
+
+Tiling: rows (tokens*heads) x head_dim lanes; one (rows, 128) tile per grid
+step.  ``bits`` is static — the TBQ wrapper quantizes at every configured
+precision and selects by thought type (3 tiny launches; see
+core/ct_cache._quantize_group_by_thought).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+F8 = jnp.float8_e4m3fn
+SCALE_EPS = 2.0 ** -16
+
+
+def _e4m3_round(x):
+    return jnp.clip(x, -448.0, 448.0).astype(F8).astype(jnp.float32)
+
+
+def _kernel(x_ref, codes_ref, scales_ref, *, bits: int, group: int):
+    x = x_ref[...].astype(jnp.float32)                  # [R, D]
+    r, d = x.shape
+    xg = x.reshape(r, d // group, group)
+    amax = jnp.max(jnp.abs(xg), axis=-1)                # [R, D//g]
+    qmax = {2: 1.0, 4: 6.0, 8: 127.0}[bits]
+    raw = jnp.maximum(amax, SCALE_EPS) / qmax
+    s = _e4m3_round(raw)
+    s = jnp.where(s * qmax < amax, _e4m3_round(raw * 1.0625), s)
+    s = jnp.maximum(s, SCALE_EPS)
+    y = xg / s[:, :, None]
+    if bits == 4:
+        sign = (y < 0).astype(jnp.uint8)
+        mag = jnp.abs(y)
+        idx = sum(((mag >= t).astype(jnp.uint8)
+                   for t in (0.25, 0.75, 1.25, 1.75, 2.5, 3.5, 5.0)),
+                  jnp.zeros_like(sign))
+        c = (sign << 3) | idx
+    elif bits == 2:
+        vi = jnp.clip(jnp.round(y), -1, 1).astype(jnp.int32)
+        c = jnp.where(vi < 0, jnp.uint8(3), vi.astype(jnp.uint8))
+    else:
+        vi = jnp.clip(jnp.round(y), -128, 127).astype(jnp.int32)
+        c = (vi & 0xFF).astype(jnp.uint8)
+    codes_ref[...] = c.reshape(r, d)
+    scales_ref[...] = s.astype(scales_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("bits", "group", "row_block",
+                                             "interpret"))
+def group_quant(x: jax.Array, bits: int, group: int = 16,
+                row_block: int = 128, interpret: bool = False
+                ) -> Tuple[jax.Array, jax.Array]:
+    """Quantize ``x [N, D]`` -> (codes uint8 [N, D], scales bf16 [N, D//g]).
+
+    N is padded to ``row_block`` internally.
+    """
+    n, d = x.shape
+    pad = (-n) % row_block
+    xp = jnp.pad(x, ((0, pad), (0, 0)))
+    rows = xp.shape[0]
+    grid = (rows // row_block,)
+    codes, scales = pl.pallas_call(
+        functools.partial(_kernel, bits=bits, group=group),
+        grid=grid,
+        in_specs=[pl.BlockSpec((row_block, d), lambda i: (i, 0))],
+        out_specs=[
+            pl.BlockSpec((row_block, d), lambda i: (i, 0)),
+            pl.BlockSpec((row_block, d // group), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((rows, d), jnp.uint8),
+            jax.ShapeDtypeStruct((rows, d // group), jnp.bfloat16),
+        ],
+        interpret=interpret,
+    )(xp)
+    return codes[:n], scales[:n]

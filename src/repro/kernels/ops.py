@@ -1,0 +1,109 @@
+"""Public jit'd kernel wrappers with backend dispatch.
+
+On TPU the Pallas kernels run compiled; on CPU (this container, and the
+dry-run's 512 fake host devices) the pure-jnp oracles are used so that
+``lower().compile()`` succeeds on every backend.  ``force='pallas'`` runs
+kernels in interpret mode (used by the correctness tests);
+``force='ref'`` forces the oracle.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import ct_cache as CC
+from repro.kernels import ref as R
+from repro.kernels.ct_paged_attention import ct_paged_attention
+from repro.kernels.flash_prefill import flash_prefill
+from repro.kernels.group_quant import group_quant
+
+
+def _use_pallas(force: Optional[str]) -> Tuple[bool, bool]:
+    """-> (use_kernel, interpret)."""
+    if force == "pallas":
+        return True, jax.default_backend() != "tpu"
+    if force == "ref":
+        return False, False
+    return jax.default_backend() == "tpu", False
+
+
+def paged_decode_attention(q, k_codes, v_codes, k_scales, v_scales,
+                           slot_state, slot_bits, block_table, *,
+                           group: int = 16, force: Optional[str] = None):
+    """CT paged attention -> (out [Hq,D], m, l)."""
+    use, interp = _use_pallas(force)
+    if use:
+        return ct_paged_attention(q, k_codes, v_codes, k_scales, v_scales,
+                                  slot_state, slot_bits, block_table,
+                                  group=group, interpret=interp)
+    return R.ct_paged_attention_ref(q, k_codes, v_codes, k_scales, v_scales,
+                                    slot_state, slot_bits, block_table,
+                                    group=group)
+
+
+def buffer_attention(q, buf_k, buf_v, buf_len):
+    """Flash stats over the full-precision TBQ buffer (<= g tokens).
+
+    q [Hq,D]; buf_k/buf_v [G,H,D].  Returns (out, m, l) shaped like the
+    paged kernel outputs so they merge directly.
+    """
+    hq, d = q.shape
+    g, h, _ = buf_k.shape
+    gq = hq // h
+    valid = jnp.arange(g) < buf_len
+    qh = q.reshape(h, gq, d).astype(jnp.float32)
+    s = jnp.einsum("hgd,nhd->hgn", qh,
+                   buf_k.astype(jnp.float32)) / jnp.sqrt(float(d))
+    s = jnp.where(valid[None, None, :], s, R.NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hgn,nhd->hgd", p / jnp.maximum(l, 1e-30),
+                     buf_v.astype(jnp.float32))
+    return out.reshape(hq, d), m, l
+
+
+def thinkv_decode_attention(dims: CC.CacheDims, cache: CC.CTCache,
+                            q: jax.Array, layer: int, *,
+                            force: Optional[str] = None) -> jax.Array:
+    """Full ThinKV decode attention for one layer: paged pool ∪ B_buf."""
+    shp = (dims.NB, dims.BS)
+    table = jnp.arange(dims.NB, dtype=jnp.int32)   # per-request pool: identity
+    out_p, m_p, l_p = paged_decode_attention(
+        q,
+        cache.k_codes[layer].reshape(dims.NB, dims.BS, dims.H, dims.D),
+        cache.v_codes[layer].reshape(dims.NB, dims.BS, dims.H, dims.D),
+        cache.k_scales[layer].reshape(dims.NB, dims.BS, dims.H, -1),
+        cache.v_scales[layer].reshape(dims.NB, dims.BS, dims.H, -1),
+        cache.slot_state[layer].reshape(shp),
+        cache.slot_bits[layer].reshape(shp),
+        table, group=16, force=force)
+    out_b, m_b, l_b = buffer_attention(q, cache.buf_k[layer],
+                                       cache.buf_v[layer], cache.buf_len)
+    return R.merge_flash_ref(out_p, m_p, l_p, out_b, m_b, l_b)
+
+
+def tbq_group_quant(x, bits: int, group: int = 16, *,
+                    force: Optional[str] = None):
+    """Group quantization -> (codes, scales).  x: [N, D]."""
+    use, interp = _use_pallas(force)
+    if use:
+        return group_quant(x, bits, group, interpret=interp)
+    from repro.core import quantization as Q
+    codes, scales = Q.quantize_group(x, bits, group)
+    return codes, scales.astype(jnp.bfloat16)
+
+
+def prefill_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                      force: Optional[str] = None):
+    """Blocked causal attention for prefill.  q [S,Hq,D], k/v [S,H,D]."""
+    use, interp = _use_pallas(force)
+    s_len = q.shape[0]
+    if use and s_len % 128 == 0:
+        return flash_prefill(q, k, v, causal=causal, window=window,
+                             interpret=interp)
+    return R.flash_prefill_ref(q, k, v, causal=causal, window=window)

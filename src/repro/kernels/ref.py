@@ -1,0 +1,117 @@
+"""Pure-jnp oracles for every Pallas kernel (the ``ref.py`` contract).
+
+Each function mirrors its kernel's exact interface so tests can
+``assert_allclose(kernel(...), ref(...))`` across shape/dtype sweeps.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.core import quantization as Q
+
+NEG_INF = -1e30
+VALID = 1
+
+
+def ct_paged_attention_ref(q, k_codes, v_codes, k_scales, v_scales,
+                           slot_state, slot_bits, block_table, *,
+                           group: int = 16
+                           ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Oracle for :func:`repro.kernels.ct_paged_attention.ct_paged_attention`."""
+    hq, d = q.shape
+    npool, bs, h, _ = k_codes.shape
+    gq = hq // h
+
+    # gather the sequence's blocks through the table
+    take = lambda a: jnp.take(a, block_table, axis=0)
+    kc, vc = take(k_codes), take(v_codes)
+    ks, vs = take(k_scales), take(v_scales)
+    state, bits = take(slot_state), take(slot_bits)
+
+    nb = block_table.shape[0]
+    n = nb * bs
+    flat = lambda a: a.reshape(n, *a.shape[2:])
+    bits_n = flat(bits).astype(jnp.int32)[:, None, None]
+    k = Q.dequantize_by_bitcode(flat(kc), flat(ks).astype(jnp.float32),
+                                bits_n, g=group)       # [n,H,D]
+    v = Q.dequantize_by_bitcode(flat(vc), flat(vs).astype(jnp.float32),
+                                bits_n, g=group)
+    valid = flat(state) == VALID                        # [n]
+
+    qh = q.reshape(h, gq, d).astype(jnp.float32)
+    s = jnp.einsum("hgd,nhd->hgn", qh, k) / jnp.sqrt(float(d))
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    m = jnp.max(s, axis=-1, keepdims=True)
+    p = jnp.exp(s - m)
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hgn,nhd->hgd", p / jnp.maximum(l, 1e-30), v)
+    return out.reshape(hq, d), m, l
+
+
+def merge_flash_ref(out_a, m_a, l_a, out_b, m_b, l_b):
+    """Merge two flash partitions (paged pool vs B_buf) — oracle for the
+    wrapper's merge in ``ops.py``."""
+    m = jnp.maximum(m_a, m_b)
+    ca, cb = jnp.exp(m_a - m), jnp.exp(m_b - m)
+    l = l_a * ca + l_b * cb
+    h, gq, _ = m.shape
+    sa = (l_a * ca / jnp.maximum(l, 1e-30))
+    sb = (l_b * cb / jnp.maximum(l, 1e-30))
+    oa = out_a.reshape(h, gq, -1) * sa
+    ob = out_b.reshape(h, gq, -1) * sb
+    return (oa + ob).reshape(out_a.shape)
+
+
+def group_quant_ref(x: jax.Array, bits: int, group: int = 16):
+    """Oracle for :func:`repro.kernels.group_quant.group_quant`."""
+    return Q.quantize_group(x, bits, group)
+
+
+def mamba_scan_ref(x, dt, b, c, a) -> jax.Array:
+    """Oracle for :func:`repro.kernels.mamba_scan.mamba_scan`.
+
+    x, dt [S, di]; b, c [S, N]; a [di, N].  Sequential jnp scan.
+    """
+    def step(h, inp):
+        x_t, dt_t, b_t, c_t = inp
+        da = jnp.exp(dt_t[:, None] * a)
+        h = da * h + (dt_t * x_t)[:, None] * b_t[None, :]
+        return h, jnp.sum(h * c_t[None, :], axis=1)
+
+    di, n = a.shape
+    h0 = jnp.zeros((di, n), jnp.float32)
+    _, ys = jax.lax.scan(step, h0, (x.astype(jnp.float32),
+                                    dt.astype(jnp.float32),
+                                    b.astype(jnp.float32),
+                                    c.astype(jnp.float32)))
+    return ys
+
+
+def flash_prefill_ref(q, k, v, *, causal: bool = True,
+                      window: int = 0) -> jax.Array:
+    """Oracle for :func:`repro.kernels.flash_prefill.flash_prefill`.
+
+    q: [S, Hq, D], k/v: [S, H, D].  GQA broadcast; optional sliding window.
+    Returns [S, Hq, D] f32.
+    """
+    s_len, hq, d = q.shape
+    _, h, _ = k.shape
+    gq = hq // h
+    qh = q.reshape(s_len, h, gq, d).astype(jnp.float32)
+    scores = jnp.einsum("shgd,thd->hgst", qh, k.astype(jnp.float32))
+    scores = scores / jnp.sqrt(float(d))
+    i = jnp.arange(s_len)[:, None]
+    j = jnp.arange(s_len)[None, :]
+    mask = jnp.ones((s_len, s_len), bool)
+    if causal:
+        mask &= j <= i
+    if window > 0:
+        mask &= j > i - window
+    scores = jnp.where(mask[None, None], scores, NEG_INF)
+    p = jax.nn.softmax(scores, axis=-1)
+    out = jnp.einsum("hgst,thd->shgd", p, v.astype(jnp.float32))
+    return out.reshape(s_len, hq, d)

@@ -1,0 +1,253 @@
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+"""Multi-pod dry-run: lower + compile every (architecture x input shape x
+mesh) cell and record memory/cost/collective analysis.
+
+MUST be the process entry point (``python -m repro.launch.dryrun``) — the
+XLA_FLAGS line above executes before any jax import so 512 placeholder host
+devices exist for the production meshes.
+
+Per cell this lowers the step the shape's kind dictates:
+  train_4k    -> train_step (loss+grad+AdamW, remat, FSDPxTP sharding)
+  prefill_32k -> prefill_step (last-token logits)
+  decode_32k  -> serve_step decode: FullKV baseline AND ThinKV (paper)
+  long_500k   -> ThinKV decode (budget-bound pool) for every arch;
+                 FullKV additionally for the sub-quadratic families
+                 (SSM/hybrid run natively; pure-attention FullKV@500k is
+                 recorded only as the sequence-sharded exact variant)
+
+Results land in benchmarks/results/dryrun/<cell>.json (idempotent; --force
+recomputes).
+"""
+import argparse
+import dataclasses
+import functools
+import json
+import sys
+import time
+import traceback
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import SHAPES, ArchFamily, ThinKVConfig
+from repro.configs import assigned_archs, get_config
+from repro.distributed import sharding as SH
+from repro.launch.mesh import make_production_mesh
+from repro.models import build_model, input_specs
+from repro.roofline.analysis import collective_bytes_from_hlo, \
+    terms_from_compiled
+from repro.serving import serve_step as SS
+from repro.training.optimizer import adamw_init
+from repro.training.train_step import make_train_step
+from repro.config import OptimizerConfig
+
+RESULTS_DIR = Path(__file__).resolve().parents[3] / "benchmarks" / \
+    "results" / "dryrun"
+
+THINKV_BUDGET = 1024
+
+
+def _eval_shape_params(model, cfg, seq_len: int):
+    """Parameter ShapeDtypeStructs (no allocation)."""
+    if cfg.family == ArchFamily.ENCDEC:
+        init = functools.partial(model.init, cfg=cfg, dtype=jnp.bfloat16,
+                                 max_dec_pos=max(seq_len, 4096))
+    else:
+        init = functools.partial(model.init, cfg=cfg, dtype=jnp.bfloat16)
+    return jax.eval_shape(lambda k: init(k), jax.random.PRNGKey(0))
+
+
+def _with_shardings(tree_shapes, shardings):
+    return jax.tree.map(
+        lambda s, sh: jax.ShapeDtypeStruct(s.shape, s.dtype, sharding=sh),
+        tree_shapes, shardings)
+
+
+def build_cell(arch: str, shape_name: str, variant: str, mesh):
+    """Returns (step_fn, in_args_shapes, cfg, shape)."""
+    cfg = get_config(arch)
+    shape = SHAPES[shape_name]
+    model = build_model(cfg)
+    pshapes = _eval_shape_params(model, cfg, shape.seq_len)
+    # decode steps use TP-only (serve) weight sharding — §Perf iteration 1.
+    # REPRO_DECODE_FSDP=1 restores the pre-optimization FSDP layout for
+    # baseline measurements.
+    pmode = "serve" if (variant.startswith("decode")
+                        and not os.environ.get("REPRO_DECODE_FSDP")) \
+        else "train"
+    pshard = SH.to_shardings(SH.param_specs(pshapes, mesh, mode=pmode), mesh)
+    pshapes = _with_shardings(pshapes, pshard)
+
+    if variant == "train":
+        batch = input_specs(cfg, shape)
+        bshard = SH.to_shardings(SH.train_batch_specs(batch, mesh), mesh)
+        batch = _with_shardings(batch, bshard)
+        opt_shapes = jax.eval_shape(adamw_init, pshapes)
+        oshard = SH.to_shardings(SH.param_specs(opt_shapes.m, mesh), mesh)
+        opt_shapes = type(opt_shapes)(
+            step=jax.ShapeDtypeStruct((), jnp.int32),
+            m=_with_shardings(opt_shapes.m, oshard),
+            v=_with_shardings(opt_shapes.v, oshard))
+        step = make_train_step(model.loss, cfg, OptimizerConfig(),
+                               remat=True)
+        return step, (pshapes, opt_shapes, batch), cfg, shape
+
+    if variant == "prefill":
+        batch = input_specs(cfg, shape)
+        bshard = SH.to_shardings(SH.train_batch_specs(batch, mesh), mesh)
+        batch = _with_shardings(batch, bshard)
+        step = SS.make_prefill_step(model, cfg)
+        return step, (pshapes, batch), cfg, shape
+
+    if variant == "decode_fullkv":
+        batch = input_specs(cfg, shape, thinkv_budget=0)
+        bshard = SH.to_shardings(SH.decode_batch_specs(batch, mesh), mesh)
+        batch = _with_shardings(batch, bshard)
+        step = SS.make_decode_step_fullkv(cfg)
+        out_sh = _decode_out_shardings(step, pshapes, batch, shape, mesh)
+        return (step, out_sh), (pshapes, batch), cfg, shape
+
+    if variant == "decode_thinkv":
+        budget = 0 if cfg.family == ArchFamily.SSM else THINKV_BUDGET
+        batch = input_specs(cfg, shape, thinkv_budget=budget)
+        bshard = SH.to_shardings(SH.decode_batch_specs(batch, mesh), mesh)
+        batch = _with_shardings(batch, bshard)
+        step = SS.make_decode_step_thinkv(cfg, ThinKVConfig(
+            token_budget=THINKV_BUDGET))
+        out_sh = _decode_out_shardings(step, pshapes, batch, shape, mesh)
+        return (step, out_sh), (pshapes, batch), cfg, shape
+
+    raise ValueError(variant)
+
+
+def _decode_out_shardings(step, pshapes, batch, shape, mesh):
+    """Pin decode outputs to batch-sharded layouts; without this GSPMD may
+    replicate the whole per-request computation over `data` once weights
+    are data-replicated (observed 3.6x bytes inflation — §Perf iter 1)."""
+    from jax.sharding import NamedSharding, PartitionSpec as P
+    dp = SH.dp_axes(mesh)
+    outs = jax.eval_shape(step, pshapes, batch)
+
+    def spec(leaf):
+        if leaf.ndim >= 1 and leaf.shape[0] == shape.global_batch and \
+                shape.global_batch % mesh.devices.shape[0] == 0:
+            return NamedSharding(mesh, P(dp, *([None] * (leaf.ndim - 1))))
+        return NamedSharding(mesh, P())
+
+    return jax.tree.map(spec, outs)
+
+
+def variants_for(arch: str, shape_name: str):
+    cfg = get_config(arch)
+    kind = SHAPES[shape_name].kind
+    if kind == "train":
+        return ["train"]
+    if kind == "prefill":
+        return ["prefill"]
+    if shape_name == "decode_32k":
+        if cfg.family == ArchFamily.SSM:
+            return ["decode_fullkv"]          # attention-free: one state path
+        return ["decode_fullkv", "decode_thinkv"]
+    # long_500k
+    if cfg.family == ArchFamily.SSM:
+        return ["decode_fullkv"]              # native O(1) state
+    if cfg.family == ArchFamily.HYBRID:
+        return ["decode_fullkv", "decode_thinkv"]
+    return ["decode_thinkv"]                   # attention archs: budget-bound
+
+
+def run_cell(arch: str, shape_name: str, variant: str, mesh_kind: str,
+             out_dir: Path, force: bool = False, tag: str = "") -> dict:
+    name = f"{arch}__{shape_name}__{variant}__{mesh_kind}" + \
+        (f"__{tag}" if tag else "")
+    out_path = out_dir / f"{name}.json"
+    if out_path.exists() and not force:
+        return json.loads(out_path.read_text())
+
+    t0 = time.time()
+    mesh = make_production_mesh(multi_pod=(mesh_kind == "multi"))
+    chips = mesh.devices.size
+    rec = {"cell": name, "arch": arch, "shape": shape_name,
+           "variant": variant, "mesh": mesh_kind, "chips": chips,
+           "status": "error"}
+    try:
+        SH.set_constraint_mesh(mesh)
+        step, args, cfg, shape = build_cell(arch, shape_name, variant, mesh)
+        out_sh = None
+        if isinstance(step, tuple):
+            step, out_sh = step
+        with mesh:
+            jitted = jax.jit(step, out_shardings=out_sh) if out_sh \
+                is not None else jax.jit(step)
+            lowered = jitted.lower(*args)
+            t_lower = time.time() - t0
+            compiled = lowered.compile()
+            t_compile = time.time() - t0 - t_lower
+            mem = compiled.memory_analysis()
+            print(compiled.memory_analysis())      # proves it fits
+            cost = compiled.cost_analysis()
+            print({k: cost.get(k) for k in ("flops", "bytes accessed")})
+            terms = terms_from_compiled(
+                compiled, arch=arch, shape=shape_name, variant=variant,
+                mesh_name=mesh_kind, chips=chips, cfg=cfg, shape_obj=shape)
+            coll = collective_bytes_from_hlo(compiled.as_text())
+        rec.update(
+            status="ok", t_lower_s=t_lower, t_compile_s=t_compile,
+            memory_analysis={
+                k: int(getattr(mem, k, 0)) for k in
+                ("argument_size_in_bytes", "output_size_in_bytes",
+                 "temp_size_in_bytes", "generated_code_size_in_bytes",
+                 "alias_size_in_bytes")},
+            collectives=coll,
+            roofline=terms.to_dict(),
+        )
+    except Exception as e:  # noqa: BLE001 — failures are cell results
+        rec.update(status="error", error=f"{type(e).__name__}: {e}",
+                   traceback=traceback.format_exc()[-4000:])
+    out_dir.mkdir(parents=True, exist_ok=True)
+    out_path.write_text(json.dumps(rec, indent=2, default=float))
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", default="all")
+    ap.add_argument("--shape", default="all")
+    ap.add_argument("--mesh", default="both", choices=["single", "multi",
+                                                       "both"])
+    ap.add_argument("--variant", default="all")
+    ap.add_argument("--force", action="store_true")
+    ap.add_argument("--tag", default="", help="suffix for optimized reruns")
+    ap.add_argument("--out", default=str(RESULTS_DIR))
+    args = ap.parse_args()
+
+    archs = assigned_archs() if args.arch == "all" else args.arch.split(",")
+    shapes = list(SHAPES) if args.shape == "all" else args.shape.split(",")
+    meshes = ["single", "multi"] if args.mesh == "both" else [args.mesh]
+    out_dir = Path(args.out)
+
+    n_ok = n_err = 0
+    for arch in archs:
+        for shape_name in shapes:
+            for variant in variants_for(arch, shape_name):
+                if args.variant != "all" and variant != args.variant:
+                    continue
+                for mesh_kind in meshes:
+                    t0 = time.time()
+                    rec = run_cell(arch, shape_name, variant, mesh_kind,
+                                   out_dir, force=args.force, tag=args.tag)
+                    ok = rec["status"] == "ok"
+                    n_ok += ok
+                    n_err += (not ok)
+                    msg = "OK " if ok else "ERR"
+                    print(f"[{msg}] {rec['cell']}  ({time.time()-t0:.1f}s)"
+                          + ("" if ok else f"  {rec.get('error')}"),
+                          flush=True)
+    print(f"\ndry-run complete: {n_ok} ok, {n_err} errors")
+    sys.exit(1 if n_err else 0)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,32 @@
+"""Production mesh construction.
+
+``make_production_mesh`` is a FUNCTION (never a module-level constant) so
+importing this module touches no jax device state — required because the
+dry-run must set XLA_FLAGS before first jax init while smoke tests see 1
+device.
+"""
+from __future__ import annotations
+
+import jax
+
+from repro.config import MeshConfig
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    """Single pod: (16, 16) = 256 chips, axes (data, model).
+    Multi-pod: (2, 16, 16) = 512 chips, axes (pod, data, model)."""
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
+    if multi_pod:
+        return MeshConfig(shape=(2, 16, 16), axis_names=("pod", "data",
+                                                         "model"))
+    return MeshConfig(shape=(16, 16), axis_names=("data", "model"))
+
+
+def make_mesh(cfg: MeshConfig):
+    """Mesh for an arbitrary MeshConfig (tests use small CPU meshes)."""
+    return jax.make_mesh(cfg.shape, cfg.axis_names)

@@ -1,0 +1,10 @@
+from repro.layers import (  # noqa: F401
+    attention,
+    common,
+    embedding,
+    mlp,
+    moe,
+    norms,
+    rope,
+    ssm,
+)

@@ -1,0 +1,46 @@
+"""Shared layer utilities: initializers, activations, logical sharding names.
+
+Parameters are plain dicts of arrays.  Every parameter carries a *logical
+axis* annotation via the parallel ``specs`` pytree built by
+``repro.distributed.sharding`` — layers themselves stay sharding-agnostic.
+"""
+from __future__ import annotations
+
+from typing import Callable, Sequence
+
+import jax
+import jax.numpy as jnp
+
+
+def dense_init(key, shape: Sequence[int], scale: float | None = None,
+               dtype=jnp.float32) -> jax.Array:
+    """Truncated-normal fan-in init (matches common LM conventions)."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    std = scale if scale is not None else fan_in ** -0.5
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape, jnp.float32)
+            * std).astype(dtype)
+
+
+def embed_init(key, shape, dtype=jnp.float32) -> jax.Array:
+    return (jax.random.normal(key, shape, jnp.float32) * 0.02).astype(dtype)
+
+
+def act_fn(name: str) -> Callable[[jax.Array], jax.Array]:
+    if name == "silu":
+        return jax.nn.silu
+    if name == "gelu":
+        return lambda x: jax.nn.gelu(x, approximate=True)
+    if name == "relu":
+        return jax.nn.relu
+    raise ValueError(f"unknown activation {name!r}")
+
+
+def split_keys(key, n: int):
+    return list(jax.random.split(key, n))
+
+
+def softcap(x: jax.Array, cap: float) -> jax.Array:
+    """Gemma-style logit soft-capping; no-op when cap == 0."""
+    if cap <= 0:
+        return x
+    return cap * jnp.tanh(x / cap)

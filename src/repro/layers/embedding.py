@@ -1,0 +1,41 @@
+"""Token embedding + output head (tied option) + frontend stubs."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.common import dense_init, embed_init
+
+
+def embed_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    k1, k2 = jax.random.split(key)
+    p = {"embedding": embed_init(k1, (cfg.vocab_size, cfg.d_model), dtype)}
+    if not cfg.tie_embeddings:
+        p["lm_head"] = dense_init(k2, (cfg.d_model, cfg.vocab_size),
+                                  dtype=dtype)
+    return p
+
+
+def embed(p: dict, tokens: jax.Array, cfg: ModelConfig) -> jax.Array:
+    x = jnp.take(p["embedding"], tokens, axis=0)
+    if cfg.tie_embeddings:
+        # gemma-style sqrt(d) scaling for tied embeddings
+        x = x * jnp.asarray(cfg.d_model ** 0.5, x.dtype)
+    return x
+
+
+def unembed(p: dict, h: jax.Array, cfg: ModelConfig) -> jax.Array:
+    w = p["embedding"].T if cfg.tie_embeddings else p["lm_head"]
+    return h @ w.astype(h.dtype)
+
+
+def frontend_stub_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    """Linear projector from precomputed modality embeddings (the assignment's
+    STUB frontend) into d_model: patches for VLM, frames for audio."""
+    return {"proj": dense_init(key, (cfg.frontend_dim or cfg.d_model,
+                                     cfg.d_model), dtype=dtype)}
+
+
+def frontend_stub(p: dict, feats: jax.Array) -> jax.Array:
+    return feats @ p["proj"].astype(feats.dtype)

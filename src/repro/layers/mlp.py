@@ -1,0 +1,23 @@
+"""Feed-forward blocks: gated (SwiGLU/GeGLU) and plain."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.layers.common import act_fn, dense_init, split_keys
+
+
+def mlp_params(key, d: int, ff: int, gated: bool, dtype=jnp.float32) -> dict:
+    ks = split_keys(key, 3)
+    p = {"w_up": dense_init(ks[0], (d, ff), dtype=dtype),
+         "w_down": dense_init(ks[1], (ff, d), dtype=dtype)}
+    if gated:
+        p["w_gate"] = dense_init(ks[2], (d, ff), dtype=dtype)
+    return p
+
+
+def mlp(p: dict, x: jax.Array, act: str, gated: bool) -> jax.Array:
+    f = act_fn(act)
+    up = x @ p["w_up"]
+    h = f(x @ p["w_gate"]) * up if gated else f(up)
+    return h @ p["w_down"]

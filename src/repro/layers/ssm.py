@@ -1,0 +1,293 @@
+"""State-space layers: Mamba-1 (falcon-mamba) and Mamba-2 (zamba2).
+
+Mamba-1: selective scan with diagonal A [d_inner, N]; training uses a
+time-sequential ``lax.scan`` (HLO-compact; a fused Pallas scan would be the
+production TPU path — see DESIGN.md).  Decode carries (conv window, h state)
+— O(1) in sequence length, which is why ThinKV is inapplicable here.
+
+Mamba-2: scalar-per-head decay; training uses the chunked SSD form
+(intra-chunk quadratic + inter-chunk state recurrence) which is TPU-friendly
+(MXU matmuls, bounded materialization).
+"""
+from __future__ import annotations
+
+import math
+from typing import NamedTuple, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers.common import dense_init, split_keys
+from repro.layers.norms import rmsnorm, rmsnorm_params
+
+
+# ---------------------------------------------------------------------------
+# shared: causal depthwise conv1d
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x: jax.Array, w: jax.Array, b: jax.Array) -> jax.Array:
+    """x [B, S, C], w [C, W], b [C] -> causal depthwise conv, silu applied."""
+    bsz, s, c = x.shape
+    wdt = w.shape[1]
+    xp = jnp.pad(x, ((0, 0), (wdt - 1, 0), (0, 0)))
+    out = jax.lax.conv_general_dilated(
+        xp.transpose(0, 2, 1)[:, :, None, :],        # NCHW with H=1
+        w.astype(x.dtype)[:, None, None, :],         # OIHW: [C, 1, 1, W]
+        window_strides=(1, 1), padding="VALID",
+        dimension_numbers=("NCHW", "OIHW", "NCHW"),
+        feature_group_count=c)
+    out = out[:, :, 0, :].transpose(0, 2, 1) + b.astype(x.dtype)
+    return jax.nn.silu(out)
+
+
+def conv_step(window: jax.Array, x_t: jax.Array, w: jax.Array,
+              b: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Decode-time conv: window [W, C] ring, x_t [C] -> (new_window, y [C])."""
+    window = jnp.concatenate([window[1:], x_t[None]], axis=0)
+    y = jnp.sum(window * w.T.astype(window.dtype), axis=0) + b
+    return window, jax.nn.silu(y)
+
+
+# ---------------------------------------------------------------------------
+# Mamba-1
+# ---------------------------------------------------------------------------
+
+def mamba1_dims(cfg: ModelConfig):
+    di = cfg.ssm.expand * cfg.d_model
+    dt_rank = cfg.ssm.dt_rank or math.ceil(cfg.d_model / 16)
+    return di, dt_rank, cfg.ssm.state_size, cfg.ssm.conv_width
+
+
+def mamba1_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di, dtr, n, cw = mamba1_dims(cfg)
+    ks = split_keys(key, 6)
+    a = jnp.tile(jnp.arange(1, n + 1, dtype=jnp.float32)[None], (di, 1))
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di), dtype=dtype),
+        "conv_w": dense_init(ks[1], (di, cw), scale=cw ** -0.5, dtype=dtype),
+        "conv_b": jnp.zeros((di,), dtype),
+        "x_proj": dense_init(ks[2], (di, dtr + 2 * n), dtype=dtype),
+        "dt_proj": dense_init(ks[3], (dtr, di), scale=dtr ** -0.5,
+                              dtype=dtype),
+        "dt_bias": jnp.full((di,), -4.6, dtype),   # softplus^-1(0.01)
+        "A_log": jnp.log(a),
+        "D": jnp.ones((di,), jnp.float32),
+        "out_proj": dense_init(ks[4], (di, d), dtype=dtype),
+    }
+
+
+_MAMBA1_CHUNK = 64
+
+
+def _mamba1_inner(p, xc, z, cfg, h0=None):
+    """xc [B,S,di] post-conv, z gate.  Returns (y [B,S,di], h_last).
+
+    Memory discipline: the [B,di,N] hidden state is never materialized over
+    time.  An outer scan over chunks (checkpointed) carries h; backward
+    recomputes each chunk's inner scan, bounding residuals to
+    chunk_len x [B,di,N] transients — the XLA analogue of the fused CUDA
+    selective-scan's recompute strategy.
+    """
+    di, dtr, n, _ = mamba1_dims(cfg)
+    bsz, s, _ = xc.shape
+    xdb = xc @ p["x_proj"]
+    dt_raw, b_ssm, c_ssm = jnp.split(xdb, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])  # [B,S,di]
+    a = -jnp.exp(p["A_log"])                                     # [di,N]
+
+    if h0 is None:
+        h0 = jnp.zeros((bsz, di, n), jnp.float32)
+
+    cs = min(_MAMBA1_CHUNK, s)
+    while s % cs != 0:
+        cs -= 1
+    nc = s // cs
+    ck = lambda t: jnp.moveaxis(t.reshape(bsz, nc, cs, *t.shape[2:]), 1, 0)
+
+    def step(h, inp):
+        xc_t, dt_t, b_t, c_t = inp                 # [B,di],[B,di],[B,N],[B,N]
+        da_t = jnp.exp(dt_t.astype(jnp.float32)[..., None] * a)
+        h = da_t * h + (dt_t * xc_t).astype(jnp.float32)[..., None] * \
+            b_t.astype(jnp.float32)[:, None, :]
+        y = jnp.einsum("bdn,bn->bd", h, c_t.astype(jnp.float32))
+        return h, y
+
+    def chunk_body(h, inp):
+        xs = tuple(jnp.moveaxis(t, 1, 0) for t in inp)   # time-major in chunk
+        h, ys = jax.lax.scan(step, h, xs)
+        return h, jnp.moveaxis(ys, 0, 1)
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    h_last, ys = jax.lax.scan(chunk_body, h0,
+                              (ck(xc), ck(dt), ck(b_ssm), ck(c_ssm)))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, di)
+    y = y + p["D"] * xc.astype(jnp.float32)
+    y = y * jax.nn.silu(z.astype(jnp.float32))
+    return y.astype(xc.dtype), h_last
+
+
+def mamba1_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Training/prefill forward.  x [B,S,D] -> [B,S,D]."""
+    di, *_ = mamba1_dims(cfg)
+    xz = x @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    xc = causal_conv1d(x_in, p["conv_w"], p["conv_b"])
+    y, _ = _mamba1_inner(p, xc, z, cfg)
+    return y @ p["out_proj"]
+
+
+class Mamba1State(NamedTuple):
+    conv: jax.Array    # [W, di]
+    h: jax.Array       # [di, N]
+
+
+def mamba1_init_state(cfg: ModelConfig) -> Mamba1State:
+    di, _, n, cw = mamba1_dims(cfg)
+    return Mamba1State(conv=jnp.zeros((cw, di), jnp.float32),
+                       h=jnp.zeros((di, n), jnp.float32))
+
+
+def mamba1_decode_step(p: dict, x_t: jax.Array, state: Mamba1State,
+                       cfg: ModelConfig) -> Tuple[jax.Array, Mamba1State]:
+    """x_t [D] -> (y [D], new state).  O(1) per token."""
+    di, dtr, n, _ = mamba1_dims(cfg)
+    xz = x_t @ p["in_proj"]
+    x_in, z = jnp.split(xz, 2, axis=-1)
+    conv, xc = conv_step(state.conv, x_in, p["conv_w"], p["conv_b"])
+    xdb = xc @ p["x_proj"]
+    dt_raw, b_ssm, c_ssm = jnp.split(xdb, [dtr, dtr + n], axis=-1)
+    dt = jax.nn.softplus(dt_raw @ p["dt_proj"] + p["dt_bias"])
+    a = -jnp.exp(p["A_log"])
+    da = jnp.exp(dt.astype(jnp.float32)[:, None] * a)
+    h = da * state.h + (dt * xc).astype(jnp.float32)[:, None] * \
+        b_ssm.astype(jnp.float32)[None, :]
+    y = jnp.einsum("dn,n->d", h, c_ssm.astype(jnp.float32))
+    y = (y + p["D"] * xc) * jax.nn.silu(z)
+    return (y.astype(x_t.dtype) @ p["out_proj"],
+            Mamba1State(conv=conv, h=h))
+
+
+# ---------------------------------------------------------------------------
+# Mamba-2 (SSD chunked form)
+# ---------------------------------------------------------------------------
+
+def mamba2_dims(cfg: ModelConfig):
+    di = cfg.ssm.expand * cfg.d_model
+    hp = cfg.ssm.head_dim
+    nh = di // hp
+    return di, nh, hp, cfg.ssm.ngroups, cfg.ssm.state_size, cfg.ssm.conv_width
+
+
+def mamba2_params(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    d = cfg.d_model
+    di, nh, hp, g, n, cw = mamba2_dims(cfg)
+    conv_dim = di + 2 * g * n
+    ks = split_keys(key, 4)
+    return {
+        "in_proj": dense_init(ks[0], (d, 2 * di + 2 * g * n + nh),
+                              dtype=dtype),
+        "conv_w": dense_init(ks[1], (conv_dim, cw), scale=cw ** -0.5,
+                             dtype=dtype),
+        "conv_b": jnp.zeros((conv_dim,), dtype),
+        "A_log": jnp.zeros((nh,), jnp.float32),
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.full((nh,), -4.6, jnp.float32),
+        "norm": rmsnorm_params(di),
+        "out_proj": dense_init(ks[2], (di, d), dtype=dtype),
+    }
+
+
+def _split_mamba2(p, zxbcdt, cfg):
+    di, nh, hp, g, n, _ = mamba2_dims(cfg)
+    z, xbc, dt = jnp.split(zxbcdt, [di, 2 * di + 2 * g * n], axis=-1)
+    return z, xbc, dt
+
+
+def mamba2_forward(p: dict, x: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """Chunked SSD training forward.  x [B,S,D] -> [B,S,D]."""
+    di, nh, hp, g, n, cw = mamba2_dims(cfg)
+    bsz, s, _ = x.shape
+    cs = min(cfg.ssm.chunk_size, s)
+    while s % cs != 0:
+        cs -= 1
+    nc = s // cs
+
+    z, xbc, dt_raw = _split_mamba2(p, x @ p["in_proj"], cfg)
+    xbc = causal_conv1d(xbc, p["conv_w"], p["conv_b"])
+    xh, b_ssm, c_ssm = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xh = xh.reshape(bsz, s, nh, hp).astype(jnp.float32)
+    b_ssm = b_ssm.reshape(bsz, s, g, n).astype(jnp.float32)
+    c_ssm = c_ssm.reshape(bsz, s, g, n).astype(jnp.float32)
+    rep = nh // g
+    bh = jnp.repeat(b_ssm, rep, axis=2)                  # [B,S,nh,N]
+    ch = jnp.repeat(c_ssm, rep, axis=2)
+
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])  # [B,S,nh]
+    a = -jnp.exp(p["A_log"])                                          # [nh]
+    dA = dt * a                                                       # [B,S,nh]
+
+    # chunk views, time-major over chunks for the scan
+    ck = lambda t: jnp.moveaxis(t.reshape(bsz, nc, cs, *t.shape[2:]), 1, 0)
+    xh_c, bh_c, ch_c, dt_c, dA_c = map(ck, (xh, bh, ch, dt, dA))
+    tri = jnp.tril(jnp.ones((cs, cs), bool))
+
+    def chunk_body(h, inp):
+        """One SSD chunk: intra-chunk quadratic + carried state.  Scanned so
+        the [B,cs,cs,nh] decay tensor exists for one chunk at a time."""
+        xh_z, bh_z, ch_z, dt_z, dA_z = inp                # [B,cs,...]
+        cum = jnp.cumsum(dA_z, axis=1)                    # [B,cs,nh]
+        ldiff = cum[:, :, None, :] - cum[:, None, :, :]   # [B,t,s,nh]
+        decay = jnp.where(tri[None, :, :, None], jnp.exp(ldiff), 0.0)
+        cb = jnp.einsum("bthn,bshn->btsh", ch_z, bh_z)    # C_t.B_s
+        w = cb * decay * dt_z[:, None, :, :]
+        y_intra = jnp.einsum("btsh,bshp->bthp", w, xh_z)
+        # contribution of the carried state
+        y_inter = jnp.einsum("bthn,bth,bhpn->bthp", ch_z, jnp.exp(cum), h)
+        # update state: decay over the whole chunk + new outer products
+        last = cum[:, -1:, :]
+        sw = jnp.exp(last - cum) * dt_z
+        states = jnp.einsum("bsh,bshn,bshp->bhpn", sw, bh_z, xh_z)
+        h = jnp.exp(last[:, 0])[:, :, None, None] * h + states
+        return h, y_intra + y_inter
+
+    chunk_body = jax.checkpoint(chunk_body, prevent_cse=False)
+    h0 = jnp.zeros((bsz, nh, hp, n), jnp.float32)
+    _, ys = jax.lax.scan(chunk_body, h0, (xh_c, bh_c, ch_c, dt_c, dA_c))
+    y = jnp.moveaxis(ys, 0, 1).reshape(bsz, s, nh, hp)
+    y = y + p["D"][None, None, :, None] * xh
+    y = y.reshape(bsz, s, di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)))
+    return (y @ p["out_proj"]).astype(x.dtype)
+
+
+class Mamba2State(NamedTuple):
+    conv: jax.Array    # [W, conv_dim]
+    h: jax.Array       # [nh, hp, N]
+
+
+def mamba2_init_state(cfg: ModelConfig) -> Mamba2State:
+    di, nh, hp, g, n, cw = mamba2_dims(cfg)
+    return Mamba2State(conv=jnp.zeros((cw, di + 2 * g * n), jnp.float32),
+                       h=jnp.zeros((nh, hp, n), jnp.float32))
+
+
+def mamba2_decode_step(p: dict, x_t: jax.Array, state: Mamba2State,
+                       cfg: ModelConfig) -> Tuple[jax.Array, Mamba2State]:
+    di, nh, hp, g, n, _ = mamba2_dims(cfg)
+    z, xbc, dt_raw = _split_mamba2(p, x_t @ p["in_proj"], cfg)
+    conv, xbc = conv_step(state.conv, xbc, p["conv_w"], p["conv_b"])
+    xh, b_ssm, c_ssm = jnp.split(xbc, [di, di + g * n], axis=-1)
+    xh = xh.reshape(nh, hp).astype(jnp.float32)
+    rep = nh // g
+    bh = jnp.repeat(b_ssm.reshape(g, n), rep, axis=0).astype(jnp.float32)
+    ch = jnp.repeat(c_ssm.reshape(g, n), rep, axis=0).astype(jnp.float32)
+    dt = jax.nn.softplus(dt_raw.astype(jnp.float32) + p["dt_bias"])   # [nh]
+    dec = jnp.exp(dt * -jnp.exp(p["A_log"]))                          # [nh]
+    h = dec[:, None, None] * state.h + \
+        jnp.einsum("h,hn,hp->hpn", dt, bh, xh)
+    y = jnp.einsum("hn,hpn->hp", ch, h) + p["D"][:, None] * xh
+    y = y.reshape(di)
+    y = rmsnorm(p["norm"], y * jax.nn.silu(z.astype(jnp.float32)))
+    return (y @ p["out_proj"]).astype(x_t.dtype), Mamba2State(conv=conv, h=h)

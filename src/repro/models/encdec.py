@@ -1,0 +1,191 @@
+"""Whisper-style encoder-decoder.
+
+Conventions follow Whisper: pre-norm LayerNorm, learned positions, plain GELU
+MLP, MHA.  The conv/mel frontend is a STUB per the assignment — the encoder
+consumes precomputed frame embeddings ``frames [B, T_enc, d_model]``.
+
+ThinKV applicability (DESIGN.md Sec. 4): the decoder *self*-attention cache is
+ThinKV-managed; *cross*-attention KV is computed once from the encoder and is
+TBQ-quantized but never evicted.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import attention as A
+from repro.layers import embedding as E
+from repro.layers.common import dense_init, split_keys
+from repro.layers.mlp import mlp, mlp_params
+from repro.layers.norms import layernorm, layernorm_params
+
+
+def _enc_layer(key, cfg, dtype):
+    k1, k2 = jax.random.split(key)
+    return {
+        "attn": A.attn_params(k1, cfg, dtype),
+        "norm1": layernorm_params(cfg.d_model),
+        "norm2": layernorm_params(cfg.d_model),
+        "mlp": mlp_params(k2, cfg.d_model, cfg.d_ff, False, dtype),
+    }
+
+
+def _dec_layer(key, cfg, dtype):
+    k1, k2, k3 = split_keys(key, 3)
+    return {
+        "self_attn": A.attn_params(k1, cfg, dtype),
+        "cross_attn": A.attn_params(k2, cfg, dtype),
+        "norm1": layernorm_params(cfg.d_model),
+        "norm2": layernorm_params(cfg.d_model),
+        "norm3": layernorm_params(cfg.d_model),
+        "mlp": mlp_params(k3, cfg.d_model, cfg.d_ff, False, dtype),
+    }
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32, max_dec_pos: int = 4096
+         ) -> dict:
+    ke, kenc, kdec, kp, kpd = split_keys(key, 5)
+    enc_keys = jax.random.split(kenc, cfg.encoder_layers)
+    dec_keys = jax.random.split(kdec, cfg.num_layers)
+    return {
+        "embed": E.embed_params(ke, cfg, dtype),
+        "enc_pos": dense_init(kp, (cfg.encoder_seq, cfg.d_model),
+                              scale=0.02, dtype=dtype),
+        "dec_pos": dense_init(kpd, (max_dec_pos, cfg.d_model),
+                              scale=0.02, dtype=dtype),
+        "encoder": jax.vmap(lambda k: _enc_layer(k, cfg, dtype))(enc_keys),
+        "decoder": jax.vmap(lambda k: _dec_layer(k, cfg, dtype))(dec_keys),
+        "enc_norm": layernorm_params(cfg.d_model),
+        "final_norm": layernorm_params(cfg.d_model),
+    }
+
+
+def encode(params: dict, frames: jax.Array, cfg: ModelConfig) -> jax.Array:
+    """frames [B, T_enc, D] (stub embeddings) -> encoder states [B, T_enc, D]."""
+    t = frames.shape[1]
+    h = frames + params["enc_pos"][None, :t].astype(frames.dtype)
+    positions = jnp.arange(t)[None, :]
+
+    def body(h, lp):
+        a = A.attn_forward(lp["attn"], layernorm(lp["norm1"], h), cfg,
+                           positions, causal=False)
+        h = h + a
+        h = h + mlp(lp["mlp"], layernorm(lp["norm2"], h), "gelu", False)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, params["encoder"])
+    return layernorm(params["enc_norm"], h)
+
+
+def decode_train(params: dict, tokens: jax.Array, enc: jax.Array,
+                 cfg: ModelConfig) -> jax.Array:
+    """Teacher-forced decoder -> logits [B, S, V]."""
+    b, s = tokens.shape
+    h = E.embed(params["embed"], tokens, cfg)
+    h = h + params["dec_pos"][None, :s].astype(h.dtype)
+    positions = jnp.arange(s)[None, :]
+
+    def body(h, lp):
+        a = A.attn_forward(lp["self_attn"], layernorm(lp["norm1"], h), cfg,
+                           positions, causal=True)
+        h = h + a
+        kv = A.cross_kv(lp["cross_attn"], enc, cfg)
+        c = A.attn_forward(lp["cross_attn"], layernorm(lp["norm2"], h), cfg,
+                           positions, kv_override=kv)
+        h = h + c
+        h = h + mlp(lp["mlp"], layernorm(lp["norm3"], h), "gelu", False)
+        return h, None
+
+    h, _ = jax.lax.scan(body, h, params["decoder"])
+    h = layernorm(params["final_norm"], h)
+    return E.unembed(params["embed"], h, cfg)
+
+
+def logits_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+              *, remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    enc = encode(params, batch["frames"], cfg)
+    return decode_train(params, batch["tokens"], enc, cfg), jnp.float32(0)
+
+
+def hidden_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+              *, remat: bool = False) -> jax.Array:
+    enc = encode(params, batch["frames"], cfg)
+    tokens = batch["tokens"]
+    b, s = tokens.shape
+    h = E.embed(params["embed"], tokens, cfg)
+    h = h + params["dec_pos"][None, :s].astype(h.dtype)
+    positions = jnp.arange(s)[None, :]
+
+    def body(h, lp):
+        a = A.attn_forward(lp["self_attn"], layernorm(lp["norm1"], h), cfg,
+                           positions, causal=True)
+        h = h + a
+        kv = A.cross_kv(lp["cross_attn"], enc, cfg)
+        c = A.attn_forward(lp["cross_attn"], layernorm(lp["norm2"], h), cfg,
+                           positions, kv_override=kv)
+        h = h + c
+        h = h + mlp(lp["mlp"], layernorm(lp["norm3"], h), "gelu", False)
+        return h, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["decoder"])
+    return layernorm(params["final_norm"], h)
+
+
+def loss_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, remat: bool = False):
+    from repro.models.losses import chunked_softmax_xent
+    h = hidden_fn(params, batch, cfg, remat=remat)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+    loss = chunked_softmax_xent(h, params["embed"]["embedding"].T,
+                                targets, mask)
+    return loss, {"nll": loss, "moe_aux": jnp.float32(0)}
+
+
+def cross_caches(params: dict, enc: jax.Array, cfg: ModelConfig):
+    """Per-layer cross-attention KV [L, B, T_enc, Hkv, hd] (computed once)."""
+    def body(_, lp):
+        k, v = A.cross_kv(lp["cross_attn"], enc, cfg)
+        return None, (k, v)
+    _, (k, v) = jax.lax.scan(body, None, params["decoder"])
+    return k, v
+
+
+def decode_step_fullkv(params: dict, token: jax.Array, pos: jax.Array,
+                       k_cache, v_cache, cache_len, cross_k, cross_v,
+                       cfg: ModelConfig):
+    """Single-request decode step with FullKV self-cache + static cross KV.
+
+    k_cache/v_cache [L,T,H,hd]; cross_k/cross_v [L,T_enc,H,hd].
+    """
+    h = E.embed(params["embed"], token[None], cfg)[0]
+    h = h + jax.lax.dynamic_index_in_dim(
+        params["dec_pos"], pos, 0, keepdims=False).astype(h.dtype)
+
+    def body(carry, inp):
+        h = carry
+        lp, kc_l, vc_l, ck_l, cv_l = inp
+        x1 = layernorm(lp["norm1"], h)
+        # whisper uses no RoPE; positions are in dec_pos
+        q, k, v = A.qkv_decode(lp["self_attn"], x1, cfg, pos)
+        kc_l = jax.lax.dynamic_update_index_in_dim(kc_l, k, cache_len, 0)
+        vc_l = jax.lax.dynamic_update_index_in_dim(vc_l, v, cache_len, 0)
+        o = A.decode_attend_fullkv(q, kc_l, vc_l, cache_len + 1)
+        h = h + A.out_proj(lp["self_attn"], o)
+        x2 = layernorm(lp["norm2"], h)
+        qc, _, _ = A.qkv_decode(lp["cross_attn"], x2, cfg, pos)
+        t_enc = ck_l.shape[0]
+        oc = A.decode_attend_fullkv(qc, ck_l, cv_l, jnp.int32(t_enc))
+        h = h + A.out_proj(lp["cross_attn"], oc)
+        h = h + mlp(lp["mlp"], layernorm(lp["norm3"], h), "gelu", False)
+        return h, (kc_l, vc_l)
+
+    h, (kc, vc) = jax.lax.scan(
+        body, h, (params["decoder"], k_cache, v_cache, cross_k, cross_v))
+    h = layernorm(params["final_norm"], h)
+    return E.unembed(params["embed"], h, cfg), kc, vc

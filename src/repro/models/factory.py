@@ -1,0 +1,142 @@
+"""Model factory: one uniform interface over all architecture families.
+
+``build_model(cfg)`` returns a :class:`Model` with ``init``/``logits``/
+``loss`` plus family metadata; ``input_specs(cfg, shape, mode)`` produces the
+``jax.ShapeDtypeStruct`` stand-ins the multi-pod dry-run lowers against
+(weak-type-correct, shardable, no device allocation).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Callable, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ArchFamily, InputShape, ModelConfig
+from repro.models import encdec, hybrid, lm, ssm_lm
+
+_FAMILY_MODULES = {
+    ArchFamily.DENSE: lm,
+    ArchFamily.MOE: lm,
+    ArchFamily.VLM: lm,
+    ArchFamily.ENCDEC: encdec,
+    ArchFamily.SSM: ssm_lm,
+    ArchFamily.HYBRID: hybrid,
+}
+
+
+@dataclasses.dataclass(frozen=True)
+class Model:
+    cfg: ModelConfig
+    init: Callable
+    logits: Callable
+    loss: Callable
+    module: object
+
+    def init_params(self, seed: int = 0, dtype=jnp.float32):
+        return self.init(jax.random.PRNGKey(seed), self.cfg, dtype)
+
+
+def build_model(cfg: ModelConfig) -> Model:
+    mod = _FAMILY_MODULES[cfg.family]
+    return Model(cfg=cfg, init=mod.init, logits=mod.logits_fn,
+                 loss=mod.loss_fn, module=mod)
+
+
+# ---------------------------------------------------------------------------
+# Dry-run input specs
+# ---------------------------------------------------------------------------
+
+def input_specs(cfg: ModelConfig, shape: InputShape,
+                thinkv_budget: int = 0) -> Dict[str, jax.ShapeDtypeStruct]:
+    """ShapeDtypeStruct stand-ins for every model input of a dry-run cell.
+
+    ``train``/``prefill`` kinds describe full-sequence batches;
+    ``decode`` kinds describe ONE new token against a KV cache of
+    ``shape.seq_len`` (FullKV) or the ThinKV budget-bound pool
+    (``thinkv_budget > 0``), matching the assignment's serve_step semantics.
+    """
+    b, s = shape.global_batch, shape.seq_len
+    i32, f32, bf16 = jnp.int32, jnp.float32, jnp.bfloat16
+    sd = jax.ShapeDtypeStruct
+
+    if shape.kind == "train":
+        batch = {"tokens": sd((b, s), i32), "targets": sd((b, s), i32)}
+        if cfg.family == ArchFamily.VLM:
+            batch["patches"] = sd((b, cfg.num_image_tokens,
+                                   cfg.frontend_dim), f32)
+        if cfg.family == ArchFamily.ENCDEC:
+            batch["frames"] = sd((b, cfg.encoder_seq, cfg.d_model), f32)
+        return batch
+
+    if shape.kind == "prefill":
+        batch = {"tokens": sd((b, s), i32)}
+        if cfg.family == ArchFamily.VLM:
+            batch["patches"] = sd((b, cfg.num_image_tokens,
+                                   cfg.frontend_dim), f32)
+        if cfg.family == ArchFamily.ENCDEC:
+            batch["frames"] = sd((b, cfg.encoder_seq, cfg.d_model), f32)
+        return batch
+
+    # ---- decode: one token + state --------------------------------------
+    hd, hkv = cfg.head_dim, cfg.num_kv_heads
+    batch = {"tokens": sd((b,), i32), "positions": sd((b,), i32)}
+
+    if cfg.family == ArchFamily.SSM:
+        from repro.layers.ssm import mamba1_dims
+        di, _, n, cw = mamba1_dims(cfg)
+        batch["conv_state"] = sd((b, cfg.num_layers, cw, di), f32)
+        batch["ssm_state"] = sd((b, cfg.num_layers, di, n), f32)
+        return batch
+
+    n_attn = cfg.num_attention_layers()
+    if cfg.family == ArchFamily.HYBRID:
+        from repro.layers.ssm import mamba2_dims
+        di, nh, hp, g, n, cw = mamba2_dims(cfg)
+        batch["conv_state"] = sd((b, cfg.num_layers, cw, di + 2 * g * n), f32)
+        batch["ssm_state"] = sd((b, cfg.num_layers, nh, hp, n), f32)
+
+    if thinkv_budget > 0:
+        # ThinKV pool: physical size bound by budget, not seq_len
+        from repro.config import ThinKVConfig
+        from repro.core.ct_cache import make_dims
+        tk = ThinKVConfig(token_budget=thinkv_budget)
+        dims = make_dims(tk, n_attn, hkv, hd)
+        sg = dims.scale_groups
+        batch.update({
+            "k_codes": sd((b, n_attn, dims.NS, hkv, hd), jnp.uint8),
+            "v_codes": sd((b, n_attn, dims.NS, hkv, hd), jnp.uint8),
+            "k_scales": sd((b, n_attn, dims.NS, hkv, sg), bf16),
+            "v_scales": sd((b, n_attn, dims.NS, hkv, sg), bf16),
+            "slot_state": sd((b, n_attn, dims.NS), jnp.uint8),
+            "slot_bits": sd((b, n_attn, dims.NS), jnp.uint8),
+            "buf_k": sd((b, n_attn, dims.G, hkv, hd), bf16),
+            "buf_v": sd((b, n_attn, dims.G, hkv, hd), bf16),
+            "buf_len": sd((b,), i32),
+        })
+    else:
+        batch.update({
+            "k_cache": sd((b, n_attn, s, hkv, hd), bf16),
+            "v_cache": sd((b, n_attn, s, hkv, hd), bf16),
+            "cache_len": sd((b,), i32),
+        })
+    if cfg.family == ArchFamily.ENCDEC:
+        if thinkv_budget > 0:
+            # cross-attention KV is TBQ-quantized (NVFP4) but never evicted
+            # (DESIGN.md Sec. 4): codes + E4M3 scales instead of bf16
+            from repro.core.quantization import GROUP
+            batch["cross_k_codes"] = sd(
+                (b, cfg.num_layers, cfg.encoder_seq, hkv, hd), jnp.uint8)
+            batch["cross_v_codes"] = sd(
+                (b, cfg.num_layers, cfg.encoder_seq, hkv, hd), jnp.uint8)
+            batch["cross_k_scales"] = sd(
+                (b, cfg.num_layers, cfg.encoder_seq, hkv, hd // GROUP), bf16)
+            batch["cross_v_scales"] = sd(
+                (b, cfg.num_layers, cfg.encoder_seq, hkv, hd // GROUP), bf16)
+        else:
+            batch["cross_k"] = sd((b, cfg.num_layers, cfg.encoder_seq, hkv,
+                                   hd), bf16)
+            batch["cross_v"] = sd((b, cfg.num_layers, cfg.encoder_seq, hkv,
+                                   hd), bf16)
+    return batch

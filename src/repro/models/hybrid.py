@@ -1,0 +1,185 @@
+"""zamba2: Mamba-2 backbone + ONE shared attention block invoked after every
+``hybrid_attn_every`` backbone layers (single weight copy, 13 invocations for
+81 layers).
+
+Only the shared-attention invocations own KV caches — ThinKV manages exactly
+those (DESIGN.md Sec. 4).  Structure: the first 78 layers run as an outer
+scan over 13 groups (inner scan over 6 stacked mamba layers + the shared
+block), the remaining 3 as a tail scan — HLO stays O(groups).
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import attention as A
+from repro.layers import embedding as E
+from repro.layers import ssm as S
+from repro.layers.common import split_keys
+from repro.layers.mlp import mlp, mlp_params
+from repro.layers.norms import rmsnorm, rmsnorm_params
+
+
+def _groups(cfg: ModelConfig) -> Tuple[int, int]:
+    e = max(cfg.hybrid_attn_every, 1)
+    return cfg.num_layers // e, cfg.num_layers % e   # (num_groups, tail)
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ke, kl, ka, km = split_keys(key, 4)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+
+    def lp(k):
+        return {"mixer": S.mamba2_params(k, cfg, dtype),
+                "norm": rmsnorm_params(cfg.d_model)}
+
+    return {
+        "embed": E.embed_params(ke, cfg, dtype),
+        "layers": jax.vmap(lp)(layer_keys),
+        "shared": {
+            "attn": A.attn_params(ka, cfg, dtype),
+            "mlp": mlp_params(km, cfg.d_model, cfg.d_ff, cfg.mlp_gated,
+                              dtype),
+            "norm1": rmsnorm_params(cfg.d_model),
+            "norm2": rmsnorm_params(cfg.d_model),
+        },
+        "final_norm": rmsnorm_params(cfg.d_model),
+    }
+
+
+def _mamba_scan(params_slice, h, cfg, remat=False):
+    def body(h, lp):
+        from repro.distributed.sharding import constrain
+        h = constrain(h, "dp", None, None)
+        y = S.mamba2_forward(lp["mixer"],
+                             rmsnorm(lp["norm"], h, cfg.norm_eps), cfg)
+        return h + y, None
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params_slice)
+    return h
+
+
+def _shared_block(sp, h, cfg, positions):
+    a = A.attn_forward(sp["attn"], rmsnorm(sp["norm1"], h, cfg.norm_eps),
+                       cfg, positions, causal=True)
+    h = h + a
+    m = mlp(sp["mlp"], rmsnorm(sp["norm2"], h, cfg.norm_eps), cfg.act,
+            cfg.mlp_gated)
+    return h + m
+
+
+def logits_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+              *, remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    h = E.embed(params["embed"], batch["tokens"], cfg)
+    positions = jnp.arange(h.shape[1])[None, :]
+    ng, tail = _groups(cfg)
+    e = cfg.hybrid_attn_every
+
+    grouped = jax.tree.map(
+        lambda x: x[: ng * e].reshape(ng, e, *x.shape[1:]), params["layers"])
+    tail_p = jax.tree.map(lambda x: x[ng * e:], params["layers"])
+
+    def group_body(h, gp):
+        h = _mamba_scan(gp, h, cfg, remat)
+        h = _shared_block(params["shared"], h, cfg, positions)
+        return h, None
+
+    h, _ = jax.lax.scan(group_body, h, grouped)
+    if tail:
+        h = _mamba_scan(tail_p, h, cfg, remat)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return E.unembed(params["embed"], h, cfg), jnp.float32(0)
+
+
+def hidden_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+              *, remat: bool = False) -> jax.Array:
+    h = E.embed(params["embed"], batch["tokens"], cfg)
+    positions = jnp.arange(h.shape[1])[None, :]
+    ng, tail = _groups(cfg)
+    e = cfg.hybrid_attn_every
+    grouped = jax.tree.map(
+        lambda x: x[: ng * e].reshape(ng, e, *x.shape[1:]), params["layers"])
+    tail_p = jax.tree.map(lambda x: x[ng * e:], params["layers"])
+
+    def group_body(h, gp):
+        h = _mamba_scan(gp, h, cfg, remat)
+        h = _shared_block(params["shared"], h, cfg, positions)
+        return h, None
+
+    h, _ = jax.lax.scan(group_body, h, grouped)
+    if tail:
+        h = _mamba_scan(tail_p, h, cfg, remat)
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps)
+
+
+def loss_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, remat: bool = False):
+    from repro.models.losses import chunked_softmax_xent
+    h = hidden_fn(params, batch, cfg, remat=remat)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+    w = params["embed"]["embedding"].T if cfg.tie_embeddings \
+        else params["embed"]["lm_head"]
+    loss = chunked_softmax_xent(h, w, targets, mask)
+    return loss, {"nll": loss, "moe_aux": jnp.float32(0)}
+
+
+# ---------------------------------------------------------------------------
+# decode: mamba states + FullKV shared-attn cache (ThinKV path in serving/)
+# ---------------------------------------------------------------------------
+
+def init_decode_state(cfg: ModelConfig):
+    one = S.mamba2_init_state(cfg)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one)
+
+
+def decode_step_fullkv(params: dict, token: jax.Array, pos: jax.Array,
+                       state, k_cache, v_cache, cache_len, cfg: ModelConfig):
+    """k_cache/v_cache [n_attn, T, H, hd] for the shared-attn invocations."""
+    h = E.embed(params["embed"], token[None], cfg)[0]
+    ng, tail = _groups(cfg)
+    e = cfg.hybrid_attn_every
+
+    def mamba_body(h, inp):
+        lp, st = inp
+        y, st2 = S.mamba2_decode_step(
+            lp["mixer"], rmsnorm(lp["norm"], h, cfg.norm_eps), st, cfg)
+        return h + y, st2
+
+    grouped = jax.tree.map(
+        lambda x: x[: ng * e].reshape(ng, e, *x.shape[1:]), params["layers"])
+    tail_p = jax.tree.map(lambda x: x[ng * e:], params["layers"])
+    gstate = jax.tree.map(
+        lambda x: x[: ng * e].reshape(ng, e, *x.shape[1:]), state)
+    tstate = jax.tree.map(lambda x: x[ng * e:], state)
+    sp = params["shared"]
+
+    def group_body(h, inp):
+        gp, gst, kc_l, vc_l = inp
+        h, gst2 = jax.lax.scan(mamba_body, h, (gp, gst))
+        x1 = rmsnorm(sp["norm1"], h, cfg.norm_eps)
+        q, k, v = A.qkv_decode(sp["attn"], x1, cfg, pos)
+        kc_l = jax.lax.dynamic_update_index_in_dim(kc_l, k, cache_len, 0)
+        vc_l = jax.lax.dynamic_update_index_in_dim(vc_l, v, cache_len, 0)
+        o = A.decode_attend_fullkv(q, kc_l, vc_l, cache_len + 1)
+        h = h + A.out_proj(sp["attn"], o)
+        h = h + mlp(sp["mlp"], rmsnorm(sp["norm2"], h, cfg.norm_eps),
+                    cfg.act, cfg.mlp_gated)
+        return h, (gst2, kc_l, vc_l)
+
+    h, (gstate2, kc, vc) = jax.lax.scan(group_body, h,
+                                        (grouped, gstate, k_cache, v_cache))
+    if tail:
+        h, tstate2 = jax.lax.scan(mamba_body, h, (tail_p, tstate))
+    else:
+        tstate2 = tstate
+    new_state = jax.tree.map(
+        lambda g, t: jnp.concatenate([g.reshape(ng * e, *g.shape[2:]), t], 0),
+        gstate2, tstate2)
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return E.unembed(params["embed"], h, cfg), new_state, kc, vc

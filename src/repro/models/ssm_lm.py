@@ -1,0 +1,101 @@
+"""falcon-mamba: attention-free Mamba-1 LM.
+
+No KV cache exists; decode state is (conv window, SSM state) per layer —
+O(1) in sequence length, so ThinKV is inapplicable (DESIGN.md Sec. 4) and
+``long_500k`` runs natively.
+"""
+from __future__ import annotations
+
+from typing import Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig
+from repro.layers import embedding as E
+from repro.layers import ssm as S
+from repro.layers.common import split_keys
+from repro.layers.norms import rmsnorm, rmsnorm_params
+
+
+def init(key, cfg: ModelConfig, dtype=jnp.float32) -> dict:
+    ke, kl = split_keys(key, 2)
+    layer_keys = jax.random.split(kl, cfg.num_layers)
+
+    def lp(k):
+        return {"mixer": S.mamba1_params(k, cfg, dtype),
+                "norm": rmsnorm_params(cfg.d_model)}
+
+    return {
+        "embed": E.embed_params(ke, cfg, dtype),
+        "layers": jax.vmap(lp)(layer_keys),
+        "final_norm": rmsnorm_params(cfg.d_model),
+    }
+
+
+def logits_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+              *, remat: bool = False) -> Tuple[jax.Array, jax.Array]:
+    h = E.embed(params["embed"], batch["tokens"], cfg)
+
+    def body(h, lp):
+        y = S.mamba1_forward(lp["mixer"], rmsnorm(lp["norm"], h,
+                                                  cfg.norm_eps), cfg)
+        return h + y, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return E.unembed(params["embed"], h, cfg), jnp.float32(0)
+
+
+def hidden_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+              *, remat: bool = False) -> jax.Array:
+    h = E.embed(params["embed"], batch["tokens"], cfg)
+
+    def body(h, lp):
+        from repro.distributed.sharding import constrain
+        h = constrain(h, "dp", None, None)
+        y = S.mamba1_forward(lp["mixer"], rmsnorm(lp["norm"], h,
+                                                  cfg.norm_eps), cfg)
+        return h + y, None
+
+    if remat:
+        body = jax.checkpoint(body, prevent_cse=False)
+    h, _ = jax.lax.scan(body, h, params["layers"])
+    return rmsnorm(params["final_norm"], h, cfg.norm_eps)
+
+
+def loss_fn(params: dict, batch: Dict[str, jax.Array], cfg: ModelConfig,
+            *, remat: bool = False):
+    from repro.models.losses import chunked_softmax_xent
+    h = hidden_fn(params, batch, cfg, remat=remat)
+    targets = batch["targets"]
+    mask = batch.get("loss_mask", jnp.ones_like(targets, jnp.float32))
+    w = params["embed"]["embedding"].T if cfg.tie_embeddings \
+        else params["embed"]["lm_head"]
+    loss = chunked_softmax_xent(h, w, targets, mask)
+    return loss, {"nll": loss, "moe_aux": jnp.float32(0)}
+
+
+def init_decode_state(cfg: ModelConfig):
+    """Stacked per-layer (conv, h) states."""
+    one = S.mamba1_init_state(cfg)
+    return jax.tree.map(
+        lambda x: jnp.broadcast_to(x, (cfg.num_layers,) + x.shape), one)
+
+
+def decode_step(params: dict, token: jax.Array, state, cfg: ModelConfig):
+    """O(1) decode: token [] -> (logits [V], new state)."""
+    h = E.embed(params["embed"], token[None], cfg)[0]
+
+    def body(h, inp):
+        lp, st = inp
+        y, st2 = S.mamba1_decode_step(lp["mixer"],
+                                      rmsnorm(lp["norm"], h, cfg.norm_eps),
+                                      st, cfg)
+        return h + y, st2
+
+    h, new_state = jax.lax.scan(body, h, (params["layers"], state))
+    h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+    return E.unembed(params["embed"], h, cfg), new_state

@@ -1,0 +1,236 @@
+"""ThinKV serving engine: continuous batching + the full paper loop.
+
+Per decode tick (vmapped over request slots):
+  1. embed the slot's current token;
+  2. scan layers: project qkv (RoPE'd), write KV into the TBQ buffer plane,
+     attend over (CT pool ∪ buffer ∪ current token) and measure attention
+     sparsity for the calibrated layers;
+  3. `advance_after_write`: group commit (TBQ quantize + CT slot reuse) +
+     budget eviction every g tokens, thought refresh + TBE every tau;
+  4. sample the next token.
+
+Prompt prefill streams through the same tick (prefill tokens are R-type —
+segment 0 opens as REASONING, paper Sec. 6.1).  Host-side, the Scheduler
+admits queued requests into retired slots and the engine resets those
+slots' pools in place.
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+import time
+from typing import Dict, List, Optional, Sequence
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.config import ArchFamily, ModelConfig, ServeConfig, ThinKVConfig
+from repro.core import ct_cache as CC
+from repro.core.thoughts import row_sparsity
+from repro.layers import attention as A
+from repro.layers import embedding as E
+from repro.layers.common import softcap
+from repro.layers.mlp import mlp
+from repro.layers.moe import moe_apply
+from repro.layers.norms import rmsnorm
+from repro.serving.scheduler import Request, Scheduler
+
+NEG_INF = -1e30
+
+
+def _attend_and_stats(dims, q, k_pool, v_pool, valid_pool, buf_k, buf_v,
+                      n_buf):
+    """Attention over pool ∪ buffer[:n_buf]; returns (out, sparsity)."""
+    k = jnp.concatenate([k_pool, buf_k.astype(jnp.float32)], 0)
+    v = jnp.concatenate([v_pool, buf_v.astype(jnp.float32)], 0)
+    valid = jnp.concatenate(
+        [valid_pool, jnp.arange(dims.G) < n_buf], 0)
+    hq, hd = q.shape
+    hkv = k.shape[1]
+    gq = hq // hkv
+    qh = q.reshape(hkv, gq, hd).astype(jnp.float32)
+    s = jnp.einsum("hgd,nhd->hgn", qh, k) / jnp.sqrt(float(hd))
+    s = jnp.where(valid[None, None, :], s, NEG_INF)
+    p = jax.nn.softmax(s, axis=-1)
+    p = jnp.where(valid[None, None, :], p, 0.0)
+    out = jnp.einsum("hgn,nhd->hgd", p, v).reshape(hq, hd)
+    # paper App. C.2: maxpool over group, renormalize, measure
+    pooled = jnp.max(p, axis=1)
+    pooled = jnp.where(valid[None, :], pooled, 0.0)
+    pooled = pooled / jnp.maximum(
+        jnp.sum(pooled, -1, keepdims=True), 1e-30)
+    spars = jnp.mean(row_sparsity(
+        pooled, jnp.broadcast_to(valid[None, :], pooled.shape)))
+    return out.astype(q.dtype), spars
+
+
+class ThinKVEngine:
+    """Decoder-only LM serving with ThinKV (dense / MoE / VLM backbones)."""
+
+    def __init__(self, cfg: ServeConfig, params=None,
+                 lstar: Optional[Sequence[int]] = None,
+                 kmeans_on_host: bool = False):
+        assert cfg.model.family in (ArchFamily.DENSE, ArchFamily.MOE,
+                                    ArchFamily.VLM), \
+            "engine demo covers decoder-only backbones (the paper's scope)"
+        self.cfg = cfg
+        self.mcfg = cfg.model
+        self.tk = cfg.thinkv
+        from repro.models import build_model
+        self.model = build_model(cfg.model)
+        self.params = params if params is not None \
+            else self.model.init_params(cfg.seed)
+        self.dims = CC.make_dims(self.tk, cfg.model.num_layers,
+                                 cfg.model.num_kv_heads, cfg.model.head_dim)
+        n_lstar = min(self.tk.num_calib_layers, cfg.model.num_layers)
+        self.lstar = np.asarray(lstar if lstar is not None
+                                else range(n_lstar))
+        self.scheduler = Scheduler(cfg.max_seqs)
+        self.caches = jax.vmap(lambda _: CC.init_cache(self.dims))(
+            jnp.arange(cfg.max_seqs))
+        self._tick = jax.jit(self._make_tick())
+        self._reset_slot = jax.jit(self._make_reset())
+        self.metrics: Dict[str, float] = {"ticks": 0, "tokens": 0}
+
+    # ------------------------------------------------------------------
+    def _make_tick(self):
+        cfg, tk, dims = self.mcfg, self.tk, self.dims
+        lstar = jnp.asarray(self.lstar)
+
+        def one_slot(params, cache: CC.CTCache, token, active, rng):
+            pos = cache.num_tokens
+            h = E.embed(params["embed"], token[None], cfg)[0]
+
+            def body(carry, inp):
+                h, buf_k, buf_v = carry
+                lidx, lp = inp
+                x1 = rmsnorm(lp["norm1"], h, cfg.norm_eps)
+                q, k, v = A.qkv_decode(lp["attn"], x1, cfg, pos)
+                bk_l = jax.lax.dynamic_update_index_in_dim(
+                    buf_k[lidx], k.astype(buf_k.dtype), cache.buf_len, 0)
+                bv_l = jax.lax.dynamic_update_index_in_dim(
+                    buf_v[lidx], v.astype(buf_v.dtype), cache.buf_len, 0)
+                buf_k = buf_k.at[lidx].set(bk_l)
+                buf_v = buf_v.at[lidx].set(bv_l)
+                bits = cache.slot_bits[lidx].astype(jnp.int32)[:, None, None]
+                from repro.core import quantization as Q
+                kd = Q.dequantize_by_bitcode(
+                    cache.k_codes[lidx],
+                    cache.k_scales[lidx].astype(jnp.float32), bits)
+                vd = Q.dequantize_by_bitcode(
+                    cache.v_codes[lidx],
+                    cache.v_scales[lidx].astype(jnp.float32), bits)
+                valid = cache.slot_state[lidx] == CC.VALID
+                o, spars = _attend_and_stats(dims, q, kd, vd, valid, bk_l,
+                                             bv_l, cache.buf_len + 1)
+                h = h + A.out_proj(lp["attn"], o)
+                x2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
+                if cfg.moe is not None:
+                    m, _ = moe_apply(lp["moe"], x2[None, None], cfg)
+                    m = m[0, 0]
+                else:
+                    m = mlp(lp["mlp"], x2, cfg.act, cfg.mlp_gated)
+                return (h + m, buf_k, buf_v), spars
+
+            (h, buf_k, buf_v), spars_all = jax.lax.scan(
+                body, (h, cache.buf_k, cache.buf_v),
+                (jnp.arange(cfg.num_layers), params["layers"]))
+            cache = cache.replace(buf_k=buf_k, buf_v=buf_v)
+            sparsity = jnp.mean(spars_all[lstar])
+            new_cache = CC.advance_after_write(tk, dims, cache, sparsity)
+            cache = jax.tree.map(
+                lambda new, old: jnp.where(active, new, old), new_cache,
+                cache)
+
+            h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+            logits = softcap(E.unembed(params["embed"], h, cfg),
+                             cfg.logit_softcap)
+            if self.cfg.temperature > 0:
+                nxt = jax.random.categorical(
+                    rng, logits / self.cfg.temperature)
+            else:
+                nxt = jnp.argmax(logits)
+            return nxt.astype(jnp.int32), cache, sparsity
+
+        def tick(params, caches, tokens, active, rng):
+            rngs = jax.random.split(rng, tokens.shape[0])
+            return jax.vmap(one_slot, in_axes=(None, 0, 0, 0, 0))(
+                params, caches, tokens, active, rngs)
+
+        return tick
+
+    def _make_reset(self):
+        dims = self.dims
+
+        def reset(caches, slot_idx):
+            fresh = CC.init_cache(dims)
+            return jax.tree.map(lambda all_, f: all_.at[slot_idx].set(f),
+                                caches, fresh)
+        return reset
+
+    # ------------------------------------------------------------------
+    def submit(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
+               eos_token: Optional[int] = None):
+        for i, p in enumerate(prompts):
+            self.scheduler.submit(Request(
+                uid=i, prompt=np.asarray(p, np.int32),
+                max_new_tokens=max_new_tokens, eos_token=eos_token))
+
+    def run(self, max_ticks: int = 10_000) -> List[Request]:
+        """Continuous-batching loop until all submitted requests finish."""
+        sch = self.scheduler
+        rng = jax.random.PRNGKey(self.cfg.seed)
+        # per-slot host state
+        feed = np.zeros(self.cfg.max_seqs, np.int32)
+        prefill_pos = np.zeros(self.cfg.max_seqs, np.int64)
+
+        for slot in sch.admit():
+            feed[slot.idx] = slot.request.prompt[0]
+            prefill_pos[slot.idx] = 1
+        t0 = time.perf_counter()
+        for _ in range(max_ticks):
+            if not sch.busy():
+                break
+            active = np.array([not s.free for s in sch.slots])
+            rng, sub = jax.random.split(rng)
+            nxt, self.caches, spars = self._tick(
+                self.params, self.caches, jnp.asarray(feed),
+                jnp.asarray(active), sub)
+            nxt = np.asarray(nxt)
+            self.metrics["ticks"] += 1
+            self.metrics["tokens"] += int(active.sum())
+
+            freed = []
+            for slot in sch.active_slots():
+                i = slot.idx
+                req = slot.request
+                if prefill_pos[i] < len(req.prompt):
+                    feed[i] = req.prompt[prefill_pos[i]]   # still prefilling
+                    prefill_pos[i] += 1
+                    continue
+                tok = int(nxt[i])
+                req.output.append(tok)
+                slot.tokens_out += 1
+                feed[i] = tok
+                done = slot.tokens_out >= req.max_new_tokens or \
+                    (req.eos_token is not None and tok == req.eos_token)
+                if done:
+                    req.stats = self.slot_stats(i)
+                    sch.retire(slot)
+                    freed.append(i)
+            for i in freed:
+                self.caches = self._reset_slot(self.caches, jnp.int32(i))
+                prefill_pos[i] = 0
+            for slot in sch.admit():
+                feed[slot.idx] = slot.request.prompt[0]
+                prefill_pos[slot.idx] = 1
+        self.metrics["wall_s"] = time.perf_counter() - t0
+        return sch.finished
+
+    # ------------------------------------------------------------------
+    def slot_stats(self, i: int) -> Dict:
+        one = jax.tree.map(lambda x: x[i], self.caches)
+        from repro.core.thinkv import compression_ratio
+        comp = compression_ratio(self.tk, self.dims, one, one.num_tokens)
+        return {k: np.asarray(v).tolist() for k, v in comp.items()}

@@ -1,0 +1,74 @@
+"""Continuous-batching request scheduler (the vLLM-scheduler role).
+
+Fixed request slots (static shapes for jit); a FIFO queue admits requests
+into free slots; finished requests (EOS or max tokens) retire and their
+slot's CT pool is reset for the next admission.
+"""
+from __future__ import annotations
+
+import dataclasses
+from collections import deque
+from typing import Deque, Dict, List, Optional
+
+import numpy as np
+
+
+@dataclasses.dataclass
+class Request:
+    uid: int
+    prompt: np.ndarray                   # int32 tokens
+    max_new_tokens: int = 256
+    eos_token: Optional[int] = None
+    # filled by the engine
+    output: List[int] = dataclasses.field(default_factory=list)
+    done: bool = False
+    stats: Dict = dataclasses.field(default_factory=dict)
+
+
+@dataclasses.dataclass
+class Slot:
+    idx: int
+    request: Optional[Request] = None
+    tokens_out: int = 0
+
+    @property
+    def free(self) -> bool:
+        return self.request is None
+
+
+class Scheduler:
+    def __init__(self, num_slots: int):
+        self.slots = [Slot(i) for i in range(num_slots)]
+        self.queue: Deque[Request] = deque()
+        self.finished: List[Request] = []
+
+    def submit(self, req: Request) -> None:
+        self.queue.append(req)
+
+    def admit(self) -> List[Slot]:
+        """Move queued requests into free slots; returns newly filled."""
+        newly = []
+        for slot in self.slots:
+            if slot.free and self.queue:
+                slot.request = self.queue.popleft()
+                slot.tokens_out = 0
+                newly.append(slot)
+        return newly
+
+    def active_slots(self) -> List[Slot]:
+        return [s for s in self.slots if not s.free]
+
+    def retire(self, slot: Slot) -> Request:
+        req = slot.request
+        req.done = True
+        self.finished.append(req)
+        slot.request = None
+        slot.tokens_out = 0
+        return req
+
+    @property
+    def pending(self) -> int:
+        return len(self.queue)
+
+    def busy(self) -> bool:
+        return bool(self.queue) or any(not s.free for s in self.slots)

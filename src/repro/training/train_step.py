@@ -1,0 +1,67 @@
+"""The jitted train step: value_and_grad + AdamW, with optional microbatch
+gradient accumulation and optional cross-pod int8 gradient compression.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Callable, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.config import ModelConfig, OptimizerConfig, TrainConfig
+from repro.training import optimizer as O
+
+
+def make_loss(model_loss: Callable, cfg: ModelConfig, remat: bool):
+    def loss(params, batch):
+        return model_loss(params, batch, cfg, remat=remat)
+    return loss
+
+
+def make_train_step(model_loss: Callable, cfg: ModelConfig,
+                    opt_cfg: OptimizerConfig, *, remat: bool = True,
+                    microbatches: int = 1,
+                    grad_transform: Optional[Callable] = None):
+    """Returns train_step(params, opt_state, batch) ->
+    (params, opt_state, metrics).
+
+    ``microbatches`` > 1 accumulates gradients with a lax.scan over batch
+    splits (sequential grad accumulation).  ``grad_transform`` hooks the
+    gradient pytree before the optimizer (gradient compression lives here).
+    """
+    loss_fn = make_loss(model_loss, cfg, remat)
+    grad_fn = jax.value_and_grad(loss_fn, has_aux=True)
+
+    def train_step(params, opt_state, batch):
+        if microbatches > 1:
+            def split(x):
+                b = x.shape[0]
+                return x.reshape(microbatches, b // microbatches,
+                                 *x.shape[1:])
+            mb = jax.tree.map(split, batch)
+
+            def acc(carry, mb_i):
+                gsum, lsum = carry
+                (l, _), g = grad_fn(params, mb_i)
+                return (jax.tree.map(jnp.add, gsum, g), lsum + l), None
+
+            zeros = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (grads, ltot), _ = jax.lax.scan(acc, (zeros, jnp.float32(0)), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, grads)
+            loss = ltot / microbatches
+            metrics = {}
+        else:
+            (loss, metrics), grads = grad_fn(params, batch)
+        if grad_transform is not None:
+            grads = grad_transform(grads)
+        params, opt_state, opt_metrics = O.adamw_update(
+            opt_cfg, grads, opt_state, params)
+        out = {"loss": loss, **opt_metrics}
+        if isinstance(metrics, dict):
+            out.update({k: v for k, v in metrics.items()
+                        if isinstance(v, jax.Array)})
+        return params, opt_state, out
+
+    return train_step

@@ -1,0 +1,15 @@
+import os
+
+# Smoke tests and benches see the real single CPU device; ONLY the dry-run
+# launcher forces 512 host devices (and does so before importing jax).
+# Distributed tests that need a small multi-device mesh live in
+# test_distributed.py, which re-execs itself with 8 devices.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")
+
+import numpy as np  # noqa: E402
+import pytest  # noqa: E402
+
+
+@pytest.fixture
+def rng():
+    return np.random.default_rng(0)

@@ -1,0 +1,62 @@
+"""TBE K-means medoid selection."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.kmeans import kmeans_select
+
+
+def test_exact_keep_count(rng):
+    x = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    valid = jnp.ones(64, bool)
+    for keep in (4, 8, 16, 32):
+        mask = kmeans_select(x, valid, jnp.int32(keep))
+        assert int(mask.sum()) == keep
+
+
+def test_keep_exceeding_valid_returns_valid(rng):
+    x = jnp.asarray(rng.standard_normal((32, 8)), jnp.float32)
+    valid = jnp.arange(32) < 10
+    mask = kmeans_select(x, valid, jnp.int32(16))
+    assert int(mask.sum()) == 10
+    assert bool((mask == valid).all())
+
+
+def test_only_valid_selected(rng):
+    x = jnp.asarray(rng.standard_normal((48, 8)), jnp.float32)
+    valid = jnp.asarray(rng.random(48) < 0.5)
+    mask = kmeans_select(x, valid, jnp.int32(6))
+    assert not bool((mask & ~valid).any())
+
+
+def test_deterministic(rng):
+    x = jnp.asarray(rng.standard_normal((64, 16)), jnp.float32)
+    valid = jnp.ones(64, bool)
+    m1 = kmeans_select(x, valid, jnp.int32(8))
+    m2 = kmeans_select(x, valid, jnp.int32(8))
+    assert bool((m1 == m2).all())
+
+
+def test_cluster_structure_respected():
+    """Two well-separated blobs with keep=2 -> one medoid per blob."""
+    r = np.random.default_rng(1)
+    a = r.normal(0, 0.1, (16, 4)) + 10
+    b = r.normal(0, 0.1, (16, 4)) - 10
+    x = jnp.asarray(np.concatenate([a, b]), jnp.float32)
+    mask = np.asarray(kmeans_select(x, jnp.ones(32, bool), jnp.int32(2)))
+    assert mask.sum() == 2
+    assert mask[:16].sum() == 1 and mask[16:].sum() == 1
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(1, 40), st.integers(1, 48))
+def test_property_counts(seed, keep, n_valid):
+    r = np.random.default_rng(seed)
+    n = 48
+    n_valid = min(n_valid, n)
+    x = jnp.asarray(r.standard_normal((n, 8)), jnp.float32)
+    valid = jnp.arange(n) < n_valid
+    mask = kmeans_select(x, valid, jnp.int32(keep))
+    assert int(mask.sum()) == min(keep, n_valid)
+    assert not bool((mask & ~valid).any())

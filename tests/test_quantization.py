@@ -1,0 +1,133 @@
+"""TBQ data formats: grids, roundtrips, packing, scale discipline."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import quantization as Q
+
+BITS = (2, 4, 8)
+
+
+def test_nvfp4_grid_exact():
+    codes = jnp.arange(16, dtype=jnp.uint8)
+    vals = np.asarray(Q.nvfp4_decode(codes))
+    pos = [0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0]
+    np.testing.assert_allclose(vals[:8], pos)
+    np.testing.assert_allclose(vals[8:], [-v for v in pos])
+
+
+def test_nvfp4_encode_round_to_nearest():
+    x = jnp.asarray([0.0, 0.24, 0.26, 0.9, 1.3, 1.9, 2.6, 3.6, 5.1, 6.0,
+                     -0.3, -5.9])
+    got = np.asarray(Q.nvfp4_decode(Q.nvfp4_encode(x)))
+    exp = [0.0, 0.0, 0.5, 1.0, 1.5, 2.0, 3.0, 4.0, 6.0, 6.0, -0.5, -6.0]
+    np.testing.assert_allclose(got, exp)
+
+
+def test_ternary_grid():
+    x = jnp.asarray([-1.0, -0.6, -0.4, 0.0, 0.4, 0.6, 1.0])
+    got = np.asarray(Q.ternary_decode(Q.ternary_encode(x)))
+    np.testing.assert_allclose(got, [-1, -1, 0, 0, 0, 1, 1])
+
+
+@pytest.mark.parametrize("bits", BITS)
+@pytest.mark.parametrize("d", (32, 128, 256))
+def test_group_roundtrip_error_bounded(rng, bits, d):
+    x = jnp.asarray(rng.standard_normal((24, d)), jnp.float32)
+    codes, scales = Q.quantize_group(x, bits)
+    y = Q.dequantize_group(codes, scales, bits)
+    err = float(jnp.sqrt(jnp.mean((x - y) ** 2)) /
+                jnp.sqrt(jnp.mean(x ** 2)))
+    limit = {2: 0.80, 4: 0.16, 8: 0.01}[bits]
+    assert err < limit, (bits, err)
+    # scales live on the E4M3 grid
+    s = np.asarray(scales)
+    np.testing.assert_array_equal(s, np.asarray(Q.e4m3_round(scales)))
+
+
+@pytest.mark.parametrize("bits", BITS)
+def test_encode_never_saturates_past_grid(rng, bits):
+    """The bumped E4M3 scale guarantees |x|/scale <= qmax."""
+    x = jnp.asarray(rng.standard_normal((64, 64)) * 100, jnp.float32)
+    codes, scales = Q.quantize_group(x, bits)
+    y = Q.dequantize_group(codes, scales, bits)
+    qmax = {2: 1.0, 4: 6.0, 8: 127.0}[bits]
+    # dequantized magnitude can never exceed scale * qmax
+    g = Q.GROUP
+    ymax = np.abs(np.asarray(y)).reshape(64, 64 // g, g).max(-1)
+    assert (ymax <= np.asarray(scales) * qmax + 1e-6).all()
+
+
+def test_pack_unpack_roundtrip(rng):
+    c4 = jnp.asarray(rng.integers(0, 16, (8, 128)), jnp.uint8)
+    assert (Q.unpack_nibbles(Q.pack_nibbles(c4)) == c4).all()
+    c2 = jnp.asarray(rng.integers(0, 4, (8, 128)), jnp.uint8)
+    assert (Q.unpack_ternary(Q.pack_ternary(c2)) == c2).all()
+
+
+def test_fp8_per_tensor(rng):
+    x = jnp.asarray(rng.standard_normal((32, 64)) * 10, jnp.float32)
+    codes, scale = Q.quantize_fp8(x)
+    y = Q.dequantize_fp8(codes, scale)
+    err = float(jnp.sqrt(jnp.mean((x - y) ** 2)) / jnp.sqrt(jnp.mean(x ** 2)))
+    assert err < 0.04
+    assert codes.dtype == Q.F8
+
+
+def test_dequant_by_bitcode_matches_static(rng):
+    x = jnp.asarray(rng.standard_normal((10, 2, 32)), jnp.float32)
+    for bits in BITS:
+        codes, scales = Q.quantize_group(x, bits)
+        y1 = Q.dequantize_group(codes, scales, bits)
+        bits_arr = jnp.full((10, 1, 1), bits, jnp.int32)
+        y2 = Q.dequantize_by_bitcode(codes, scales, bits_arr)
+        np.testing.assert_allclose(np.asarray(y1), np.asarray(y2))
+
+
+def test_precision_hierarchy_error_ordering(rng):
+    """FP8-class < NVFP4 < ternary error (paper App. D.3 hierarchy)."""
+    x = jnp.asarray(rng.standard_normal((64, 128)), jnp.float32)
+    errs = {}
+    for bits in BITS:
+        codes, scales = Q.quantize_group(x, bits)
+        y = Q.dequantize_group(codes, scales, bits)
+        errs[bits] = float(jnp.mean((x - y) ** 2))
+    assert errs[8] < errs[4] < errs[2]
+
+
+def test_mx_channel_group_keys_vs_kivi_per_channel(rng):
+    """DESIGN.md Sec. 3: MX-style channel-group key scales are within noise
+    of KIVI per-channel at g=16 for post-RoPE-like keys."""
+    # keys with channel-structured outliers (what KIVI targets)
+    base = rng.standard_normal((16, 128))
+    base[:, ::16] *= 6.0
+    x = jnp.asarray(base, jnp.float32)
+    c1, s1 = Q.quantize_group(x, 4)
+    y1 = Q.dequantize_group(c1, s1, 4)
+    c2, s2 = Q.quantize_per_channel(x, 4)
+    y2 = Q.dequantize_per_channel(c2, s2, 4)
+    e1 = float(jnp.mean((x - y1) ** 2))
+    e2 = float(jnp.mean((x - y2) ** 2))
+    assert e1 <= e2 * 1.5, (e1, e2)
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1), st.sampled_from(BITS))
+def test_property_roundtrip_error_bounded_by_scale(seed, bits):
+    """|x - dq(q(x))| <= scale * max_grid_gap elementwise."""
+    r = np.random.default_rng(seed)
+    x = jnp.asarray(r.standard_normal((4, 32)) * r.uniform(0.1, 10),
+                    jnp.float32)
+    codes, scales = Q.quantize_group(x, bits)
+    y = Q.dequantize_group(codes, scales, bits)
+    gap = {2: 1.0, 4: 1.0, 8: 0.5}[bits]   # max half-gap on each grid
+    bound = np.repeat(np.asarray(scales), Q.GROUP, -1) * gap + 1e-6
+    assert (np.abs(np.asarray(x - y)) <= bound).all()
+
+
+def test_cache_bits_accounting():
+    assert Q.cache_bits_per_element(4) == pytest.approx(4.5)
+    assert Q.cache_bits_per_element(2, physical_nibble_plane=False) == \
+        pytest.approx(2.5)
+    assert Q.cache_bits_per_element(8) == pytest.approx(8.5)

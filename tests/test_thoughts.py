@@ -1,0 +1,84 @@
+"""Thought decomposition: sparsity measurement, classifier, KDE calibration."""
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ThoughtType
+from repro.core import calibration as CAL
+from repro.core import thoughts as TH
+from repro.data.synthetic import ReasoningTraceGen, SPARSITY_SIG
+
+
+def test_row_sparsity_definition():
+    # probs: one dominant, many tiny (< 1% of max)
+    p = jnp.asarray([[0.91] + [0.001] * 90])
+    s = float(TH.row_sparsity(p)[0])
+    assert s == pytest.approx(90 / 91, abs=1e-6)
+
+
+def test_row_sparsity_uniform_is_dense():
+    p = jnp.full((1, 64), 1 / 64)
+    assert float(TH.row_sparsity(p)[0]) == 0.0
+
+
+def test_row_sparsity_masks_invalid():
+    p = jnp.asarray([[0.5, 0.001, 0.25, 0.25]])
+    valid = jnp.asarray([[True, True, False, False]])
+    s = float(TH.row_sparsity(p, valid)[0])
+    assert s == pytest.approx(0.5)
+
+
+def test_classifier_ordering():
+    """E (low) < R (mid) < T (high) per Obs. 1b."""
+    th = (0.5, 0.8)
+    assert int(TH.classify(jnp.float32(0.3), th)) == ThoughtType.EXECUTION
+    assert int(TH.classify(jnp.float32(0.65), th)) == ThoughtType.REASONING
+    assert int(TH.classify(jnp.float32(0.9), th)) == ThoughtType.TRANSITION
+
+
+def test_gqa_group_sparsity_runs(rng):
+    scores = jnp.asarray(rng.standard_normal((8, 64)) * 4, jnp.float32)
+    s = float(TH.gqa_group_sparsity(scores, group_size=4))
+    assert 0.0 <= s <= 1.0
+
+
+def test_kde_finds_trimodal_thresholds():
+    r = np.random.default_rng(0)
+    samples = np.concatenate([
+        r.normal(0.35, 0.05, 400), r.normal(0.67, 0.05, 400),
+        r.normal(0.90, 0.03, 200)])
+    grid = np.linspace(0, 1, 512)
+    dens = CAL.gaussian_kde(samples, grid)
+    modes, minima = CAL.find_modes_and_minima(dens, grid)
+    assert len(modes) == 3
+    assert len(minima) == 2
+    assert 0.4 < minima[0] < 0.6
+    assert 0.72 < minima[1] < 0.88
+
+
+def test_calibration_recovers_planted_structure():
+    """Algorithm 1 end-to-end on synthetic traces: L* = planted layers and
+    thresholds separate the planted signatures."""
+    gen = ReasoningTraceGen(dataset="aime", seed=3)
+    lstar_true = [2, 5, 9, 13]
+    traces = gen.calibration_traces(num_prompts=6, length=3000,
+                                    num_layers=16, lstar=lstar_true)
+    res = CAL.calibrate(traces, num_thoughts=3, num_calib_layers=4)
+    assert set(res.layer_subset) == set(lstar_true), res.layer_subset
+    t1, t2 = res.thresholds
+    mu_e = SPARSITY_SIG[int(ThoughtType.EXECUTION)][0]
+    mu_r = SPARSITY_SIG[int(ThoughtType.REASONING)][0]
+    mu_t = SPARSITY_SIG[int(ThoughtType.TRANSITION)][0]
+    assert mu_e < t1 < mu_r < t2 < mu_t, res.thresholds
+
+
+def test_calibrated_classifier_accuracy():
+    """Classifier with calibrated thresholds labels planted tokens >95%."""
+    gen = ReasoningTraceGen(dataset="aime", seed=5)
+    traces = gen.calibration_traces(4, 2000, 16)
+    res = CAL.calibrate(traces, 3, 4)
+    trace = gen.generate(4000)
+    pred = np.asarray(TH.classify(jnp.asarray(trace.sparsities),
+                                  tuple(res.thresholds)))
+    acc = float((pred == trace.thought_types).mean())
+    assert acc > 0.95, acc
