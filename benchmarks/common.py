@@ -203,12 +203,13 @@ def run_thinkv(stream: Stream, budget: int, tau: int = 32, group: int = 8,
                       max_segments=max(n // tau + 2, 8), kmeans_iters=4)
     dims = CC.make_dims(tk, num_layers=1, kv_heads=h, head_dim=d)
     cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
     step = jax.jit(functools.partial(TV.step_token, tk, dims))
     masks = np.zeros((n, n), bool)
     for i in range(n):
-        cache = step(cache, jnp.asarray(stream.k[None, i]),
-                     jnp.asarray(stream.v[None, i]),
-                     jnp.float32(stream.sparsities[i]))
+        cache, view = step(cache, view, jnp.asarray(stream.k[None, i]),
+                           jnp.asarray(stream.v[None, i]),
+                           jnp.float32(stream.sparsities[i]))
         pos = np.asarray(cache.slot_pos[0])
         stt = np.asarray(cache.slot_state[0])
         kept = pos[(stt == 1) & (pos >= 0)]

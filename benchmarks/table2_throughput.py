@@ -1,6 +1,6 @@
 """Table 2/3 reproduction: memory-footprint model -> max batch -> throughput.
 
-Two parts:
+Three parts:
 1. **Memory model** (exact, analytic — matches the paper's batch-size
    arithmetic): per-request KV footprint under FullKV / eviction-only
    (R-KV-style, bf16 at budget) / ThinKV (4-bit pool + scales + metadata),
@@ -9,6 +9,11 @@ Two parts:
    of gather-based compaction (R-KV style: index + materialize the kept
    set every step) vs CT in-place slot reuse (scatter of one g-token group
    every g steps), on real jitted ops — the Obs. 4a/4b mechanism.
+3. **Measured engine throughput**: the continuous-batching engine end to
+   end under both decode backends (``reference`` = dense dequant XLA;
+   ``kernel`` = ``ct_paged_attention`` — interpret mode off-TPU, so the
+   kernel numbers on CPU measure dispatch structure, not HBM wins) plus
+   chunked batched prefill tokens/s.
 """
 from __future__ import annotations
 
@@ -115,6 +120,84 @@ def measured_maintenance(budget=1024, layers=8, h=8, d=128, group=16,
     }
 
 
+def engine_throughput(arch="r1-llama-8b", requests=3, slots=2,
+                      prompt_len=24, max_new=24, seed=0):
+    """Measured decode tokens/s per backend + chunked-prefill tokens/s.
+
+    Off-TPU the kernel backend runs the Pallas kernel in INTERPRET mode —
+    orders of magnitude slower than compiled; its number here validates the
+    path end to end rather than demonstrating the HBM win (that is the
+    TPU-compiled measurement in the ROADMAP's open items).
+    """
+    from repro.config import ServeConfig, ThinKVConfig as TKC
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import ThinKVEngine
+
+    mcfg = get_smoke_config(arch)
+    tk = TKC(refresh_interval=16, group_size=8, block_size=8,
+             token_budget=48, retention_schedule=(16, 8, 4),
+             min_retention=4, max_segments=64, kmeans_iters=4)
+    scfg = ServeConfig(model=mcfg, thinkv=tk, max_seqs=slots,
+                       temperature=0.0)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, mcfg.vocab_size, prompt_len)
+               for _ in range(requests)]
+
+    rows = {}
+    params = None
+    for backend in ("reference", "kernel"):
+        eng = ThinKVEngine(scfg, params=params, backend=backend)
+        params = eng.params
+        # warm the tick + prefill jits OUTSIDE the timed window (first call
+        # pays trace/compile — dominant on CPU, huge for interpret mode)
+        eng.submit([prompts[0].copy()], max_new_tokens=2)
+        eng.run()
+        base = dict(eng.metrics)
+        # prefill-only pass: same prompts, 1 token (no decode ticks) —
+        # isolates prefill wall time so the decode rate excludes it
+        eng.submit([p.copy() for p in prompts], max_new_tokens=1)
+        t0 = time.perf_counter()
+        eng.run()
+        prefill_wall = time.perf_counter() - t0
+        mid = dict(eng.metrics)
+        eng.submit([p.copy() for p in prompts], max_new_tokens=max_new)
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        decode_toks = eng.metrics["tokens"] - mid["tokens"]
+        prefill_toks = mid["prefill_tokens"] - base["prefill_tokens"]
+        decode_wall = max(wall - prefill_wall, 1e-9)   # ~= wall minus the
+        # second run's (equal-prompt) prefill phase
+        rows[backend] = {
+            "decode_tokens": decode_toks,
+            "prefill_tokens": prefill_toks,
+            "wall_s": wall,
+            "decode_tok_per_s": decode_toks / decode_wall,
+            "prefill_chunks": (mid["prefill_chunks"]
+                               - base["prefill_chunks"]),
+            "requests": len(done),
+        }
+    # prefill tokens/s measured separately: prompt-only requests on a
+    # freshly warmed reference engine
+    eng = ThinKVEngine(scfg, params=params, backend="reference")
+    eng.submit([prompts[0].copy()], max_new_tokens=1)
+    eng.run()
+    warm_prefill = eng.metrics["prefill_tokens"]
+    warm_chunks = eng.metrics["prefill_chunks"]
+    eng.submit([p.copy() for p in prompts], max_new_tokens=1)
+    t0 = time.perf_counter()
+    eng.run()
+    wall = time.perf_counter() - t0
+    toks = eng.metrics["prefill_tokens"] - warm_prefill
+    rows["prefill"] = {
+        "tokens": toks,
+        "wall_s": wall,
+        "tok_per_s": toks / max(wall, 1e-9),
+        "chunks": eng.metrics["prefill_chunks"] - warm_chunks,
+    }
+    return rows
+
+
 def main(out_path="benchmarks/results/table2_throughput.json"):
     out = {}
     for dev, hbm in [("A100-80GB", 80.0), ("TPUv5e-16GB", 16.0)]:
@@ -129,6 +212,16 @@ def main(out_path="benchmarks/results/table2_throughput.json"):
     print(f"  cache maintenance: gather {m['gather_us_per_token']:.1f}us/tok"
           f" vs CT {m['ct_us_per_token']:.2f}us/tok "
           f"({m['speedup']:.0f}x)")
+    out["engine"] = engine_throughput()
+    e = out["engine"]
+    kmode = "compiled" if jax.default_backend() == "tpu" else "interpret"
+    print(f"  engine decode: reference "
+          f"{e['reference']['decode_tok_per_s']:.1f} tok/s vs "
+          f"kernel[{kmode}] {e['kernel']['decode_tok_per_s']:.1f} tok/s | "
+          f"batched prefill {e['prefill']['tok_per_s']:.1f} tok/s "
+          f"({e['prefill']['chunks']} chunks)")
+    import os
+    os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
     return out

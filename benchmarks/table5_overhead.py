@@ -29,6 +29,7 @@ def call_rates(n=1024, tau=128, group=16, budget=256, seed=0):
                       kmeans_iters=4)
     dims = CC.make_dims(tk, num_layers=2, kv_heads=2, head_dim=64)
     cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
     step = jax.jit(functools.partial(TV.step_token, tk, dims))
     gen = ReasoningTraceGen(dataset="aime", seg_len_range=(100, 300),
                             seed=seed)
@@ -41,7 +42,8 @@ def call_rates(n=1024, tau=128, group=16, budget=256, seed=0):
     for i in range(n):
         k = jnp.asarray(rng.standard_normal((2, 2, 64)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((2, 2, 64)), jnp.float32)
-        cache = step(cache, k, v, jnp.float32(trace.sparsities[i]))
+        cache, view = step(cache, view, k, v,
+                           jnp.float32(trace.sparsities[i]))
         if (i + 1) % group == 0:
             commits += 1
         if (i + 1) % tau == 0:
@@ -77,12 +79,13 @@ def component_times(tau=128, group=16, budget=256, seed=0):
                       min_retention=4, max_segments=16, kmeans_iters=4)
     dims = CC.make_dims(tk, num_layers=2, kv_heads=2, head_dim=64)
     cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
     rng = np.random.default_rng(seed)
     step = jax.jit(functools.partial(TV.step_token, tk, dims))
     for i in range(2 * tau):
         k = jnp.asarray(rng.standard_normal((2, 2, 64)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((2, 2, 64)), jnp.float32)
-        cache = step(cache, k, v, jnp.float32(0.65))
+        cache, view = step(cache, view, k, v, jnp.float32(0.65))
 
     comps = {}
 
@@ -105,11 +108,11 @@ def component_times(tau=128, group=16, budget=256, seed=0):
     attn = jax.jit(functools.partial(TV.decode_attention_ref, dims),
                    static_argnames=("layer",))
 
-    t("attention_us", lambda: attn(cache, q, layer=0))
-    t("commit_group_us", lambda: commit(cache))
-    t("tbe_anneal_us", lambda: anneal(cache))
-    t("budget_evict_us", lambda: budget_fn(cache))
-    t("refresh_us", lambda: refresh(cache, jnp.float32(0.9)))
+    t("attention_us", lambda: attn(cache, view, q, layer=0))
+    t("commit_group_us", lambda: commit(cache, view))
+    t("tbe_anneal_us", lambda: anneal(cache, view))
+    t("budget_evict_us", lambda: budget_fn(cache, view))
+    t("refresh_us", lambda: refresh(cache, view, jnp.float32(0.9)))
     return comps
 
 

@@ -1,0 +1,7 @@
+#!/usr/bin/env bash
+# Tier-1 verification (see ROADMAP.md): the full pytest suite on CPU.
+# Usage: scripts/ci.sh [extra pytest args]
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+exec python -m pytest -x -q "$@"

@@ -16,13 +16,29 @@ TPU adaptations (DESIGN.md Sec. 3):
 * scales are E4M3-rounded values stored in bf16 planes (bit-exact e4m3
   numerics; accounted as 1 byte in the memory model — see DESIGN.md Sec. 7).
 
+Data model (this PR's paged refactor):
+
+* :class:`PoolView` holds the HEAVY planes (nibble codes + group scales) in
+  **paged layout** ``[L, num_blocks, block_size, H, ...]`` — the exact
+  layout the ``ct_paged_attention`` kernel streams from HBM.
+* :class:`CTCache` holds only per-request METADATA (slot/segment state,
+  thought bookkeeping) and the full-precision TBQ buffer.  Metadata planes
+  stay flat ``[L, NS]`` (NS = num_blocks * block_size) because the
+  allocation/annealing logic addresses logical slots linearly.
+* :class:`GlobalPool` is the serving engine's SHARED physical pool: one
+  PoolView of ``NP`` physical blocks plus a free bitmap, with per-request
+  per-layer block tables (``-1`` = unmapped) translating logical blocks to
+  physical blocks.  Requests claim physical blocks at group commits and
+  return them when TBE frees a block (or the request retires), so slots
+  freed by one request are reused by others — vLLM-style paging on top of
+  CT's in-place slot reuse.
+
 All state is fixed-shape and jit/vmap friendly.  Functions here operate on a
 SINGLE request with all attention layers stacked on the leading axis; the
-serving engine vmaps over request slots.
+serving engine vmaps/scans over request slots.
 """
 from __future__ import annotations
 
-import functools
 from typing import NamedTuple, Tuple
 
 import jax
@@ -38,12 +54,14 @@ SCALE_DTYPE = jnp.bfloat16      # e4m3-rounded values (see module docstring)
 
 FREE, VALID, EVICTED = jnp.uint8(0), jnp.uint8(1), jnp.uint8(2)
 
+UNMAPPED = jnp.int32(-1)        # block-table entry with no physical block
+
 
 class CacheDims(NamedTuple):
     """Static geometry of a CT cache."""
 
     L: int          # attention layers
-    NB: int         # physical blocks per layer
+    NB: int         # logical blocks per layer per request
     BS: int         # block size (tokens)
     H: int          # kv heads
     D: int          # head dim
@@ -70,14 +88,59 @@ def make_dims(cfg: ThinKVConfig, num_layers: int, kv_heads: int,
                      nibble=nibble)
 
 
+# ---------------------------------------------------------------------------
+# Pool planes (paged layout) and per-request metadata
+# ---------------------------------------------------------------------------
+
+class PoolView(NamedTuple):
+    """Quantized KV planes in paged layout.
+
+    Per-request views have ``num_blocks == dims.NB``; the engine's shared
+    :class:`GlobalPool` holds the same planes with ``NP`` physical blocks.
+    """
+
+    k_codes: jax.Array      # [L, nb, BS, H, D] uint8
+    v_codes: jax.Array      # [L, nb, BS, H, D] uint8
+    k_scales: jax.Array     # [L, nb, BS, H, D//GROUP] bf16 (e4m3-valued)
+    v_scales: jax.Array     # [L, nb, BS, H, D//GROUP] bf16
+
+
+def init_pool_view(dims: CacheDims, num_blocks: int | None = None
+                   ) -> PoolView:
+    nb = dims.NB if num_blocks is None else num_blocks
+    L, BS, H, D = dims.L, dims.BS, dims.H, dims.D
+    sg = dims.scale_groups
+    return PoolView(
+        k_codes=jnp.zeros((L, nb, BS, H, D), jnp.uint8),
+        v_codes=jnp.zeros((L, nb, BS, H, D), jnp.uint8),
+        k_scales=jnp.zeros((L, nb, BS, H, sg), SCALE_DTYPE),
+        v_scales=jnp.zeros((L, nb, BS, H, sg), SCALE_DTYPE),
+    )
+
+
+def view_flat(view: PoolView) -> Tuple[jax.Array, ...]:
+    """Paged planes -> flat [L, NS, ...] (free reshape)."""
+    def f(a):
+        L, nb, bs = a.shape[:3]
+        return a.reshape(L, nb * bs, *a.shape[3:])
+    return tuple(f(a) for a in view)
+
+
+def view_paged(dims: CacheDims, *flat: jax.Array) -> PoolView:
+    def p(a):
+        L = a.shape[0]
+        return a.reshape(L, -1, dims.BS, *a.shape[2:])
+    return PoolView(*(p(a) for a in flat))
+
+
 @jax.tree_util.register_pytree_node_class
 class CTCache:
-    """Pytree of cache planes for one request."""
+    """Pytree of per-request cache metadata + TBQ buffer for one request."""
 
-    FIELDS = ("k_codes", "v_codes", "k_scales", "v_scales", "slot_state",
-              "slot_seg", "slot_pos", "slot_bits", "block_type", "seg_type",
-              "seg_level", "buf_k", "buf_v", "buf_len", "cur_seg",
-              "cur_thought", "prev_thought", "num_tokens")
+    FIELDS = ("slot_state", "slot_seg", "slot_pos", "slot_bits",
+              "block_type", "seg_type", "seg_level", "buf_k", "buf_v",
+              "buf_len", "cur_seg", "cur_thought", "prev_thought",
+              "num_tokens")
 
     def __init__(self, **kw):
         for f in self.FIELDS:
@@ -97,16 +160,12 @@ class CTCache:
 
 
 def init_cache(dims: CacheDims) -> CTCache:
-    """Empty cache; segment 0 opens as REASONING (prefill tokens are treated
-    as R-type, paper Sec. 6.1)."""
+    """Empty cache metadata; segment 0 opens as REASONING (prefill tokens
+    are treated as R-type, paper Sec. 6.1)."""
     L, NS, H, D, G, S = dims.L, dims.NS, dims.H, dims.D, dims.G, dims.S
     seg_type = jnp.full((S,), -1, jnp.int32).at[0].set(
         jnp.int32(ThoughtType.REASONING))
     return CTCache(
-        k_codes=jnp.zeros((L, NS, H, D), jnp.uint8),
-        v_codes=jnp.zeros((L, NS, H, D), jnp.uint8),
-        k_scales=jnp.zeros((L, NS, H, dims.scale_groups), SCALE_DTYPE),
-        v_scales=jnp.zeros((L, NS, H, dims.scale_groups), SCALE_DTYPE),
         slot_state=jnp.zeros((L, NS), jnp.uint8),
         slot_seg=jnp.full((L, NS), -1, jnp.int32),
         slot_pos=jnp.full((L, NS), -1, jnp.int32),
@@ -148,7 +207,7 @@ def _quantize_group_by_thought(cfg: ThinKVConfig, k: jax.Array, v: jax.Array,
 
 
 def _alloc_slots_one_layer(dims: CacheDims, slot_state, block_type, thought):
-    """Pick G slot addresses for a group of thought type t.
+    """Pick G logical slot addresses for a group of thought type t.
 
     Priority (paper Sec. 5.2 walkthrough):
       4 — evicted slot in a same-type block (in-place reuse)
@@ -176,12 +235,13 @@ def _alloc_slots_one_layer(dims: CacheDims, slot_state, block_type, thought):
     return idx, ok
 
 
-def commit_group(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache
-                 ) -> CTCache:
+def commit_group(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
+                 view: PoolView) -> Tuple[CTCache, PoolView]:
     """Quantize the (full) buffer and write it into the pool, reusing evicted
     slots in place.  vmapped over layers."""
     t = cache.cur_thought
     positions = cache.num_tokens - dims.G + jnp.arange(dims.G, dtype=jnp.int32)
+    k_codes_f, v_codes_f, k_scales_f, v_scales_f = view_flat(view)
 
     def one_layer(buf_k, buf_v, k_codes, v_codes, k_scales, v_scales,
                   slot_state, slot_seg, slot_pos, slot_bits, block_type):
@@ -215,39 +275,37 @@ def commit_group(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache
 
     outs = jax.vmap(one_layer)(
         cache.buf_k.astype(jnp.float32), cache.buf_v.astype(jnp.float32),
-        cache.k_codes, cache.v_codes, cache.k_scales, cache.v_scales,
+        k_codes_f, v_codes_f, k_scales_f, v_scales_f,
         cache.slot_state, cache.slot_seg, cache.slot_pos, cache.slot_bits,
         cache.block_type)
     (k_codes, v_codes, k_scales, v_scales, slot_state, slot_seg, slot_pos,
      slot_bits, block_type) = outs
-    return cache.replace(
-        k_codes=k_codes, v_codes=v_codes, k_scales=k_scales,
-        v_scales=v_scales, slot_state=slot_state, slot_seg=slot_seg,
-        slot_pos=slot_pos, slot_bits=slot_bits, block_type=block_type,
-        buf_len=jnp.int32(0))
+    cache = cache.replace(
+        slot_state=slot_state, slot_seg=slot_seg, slot_pos=slot_pos,
+        slot_bits=slot_bits, block_type=block_type, buf_len=jnp.int32(0))
+    return cache, view_paged(dims, k_codes, v_codes, k_scales, v_scales)
 
 
-def advance_after_write(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-                        sparsity: jax.Array | None = None) -> CTCache:
-    """Post-forward bookkeeping when the engine has already written the
-    current token's KV into the buffer planes at index ``buf_len``:
-    advance counters, commit+budget on a full group, refresh at tau."""
-    cache = cache.replace(buf_len=cache.buf_len + 1,
-                          num_tokens=cache.num_tokens + 1)
-    cache = jax.lax.cond(
-        cache.buf_len >= dims.G,
-        lambda c: budget_evict(cfg, dims, commit_group(cfg, dims, c)),
-        lambda c: c, cache)
-    if sparsity is None:
-        return cache
-    at_refresh = (cache.num_tokens % cfg.refresh_interval) == 0
-    return jax.lax.cond(at_refresh,
-                        lambda c: refresh(cfg, dims, c, sparsity),
-                        lambda c: c, cache)
+def commit_and_evict_if_full(cfg: ThinKVConfig, dims: CacheDims,
+                             cache: CTCache, view: PoolView
+                             ) -> Tuple[CTCache, PoolView]:
+    """Commit the buffer as a group and enforce the per-layer budget when
+    the buffer is full (paper Listing 1 checks `kv_size(l) > budget` in the
+    step loop; the cache only grows at commits, so commit time is the
+    faithful check point)."""
+
+    def do_commit(args):
+        c, v = args
+        c, v = commit_group(cfg, dims, c, v)
+        return budget_evict(cfg, dims, c, v), v
+
+    return jax.lax.cond(cache.buf_len >= dims.G, do_commit, lambda a: a,
+                        (cache, view))
 
 
 def append_token(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-                 k_t: jax.Array, v_t: jax.Array) -> CTCache:
+                 view: PoolView, k_t: jax.Array, v_t: jax.Array
+                 ) -> Tuple[CTCache, PoolView]:
     """Append one token's [L,H,D] KV to the fp buffer; commit when full."""
     i = cache.buf_len
     cache = cache.replace(
@@ -258,13 +316,7 @@ def append_token(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
         buf_len=i + 1,
         num_tokens=cache.num_tokens + 1,
     )
-    # commit a full group, then enforce the per-layer budget (paper Listing 1
-    # checks `kv_size(l) > budget` in the step loop; the cache only grows at
-    # commits, so commit time is the faithful check point)
-    return jax.lax.cond(
-        cache.buf_len >= dims.G,
-        lambda c: budget_evict(cfg, dims, commit_group(cfg, dims, c)),
-        lambda c: c, cache)
+    return commit_and_evict_if_full(cfg, dims, cache, view)
 
 
 # ---------------------------------------------------------------------------
@@ -286,7 +338,8 @@ def _anneal_one_segment(cfg: ThinKVConfig, dims: CacheDims, seg: jax.Array,
                         enable: jax.Array, k_codes, k_scales, slot_state,
                         slot_seg, slot_bits, seg_level_row):
     """Anneal segment ``seg`` one retention level in ONE layer.  Returns
-    updated (slot_state, seg_level_row)."""
+    updated (slot_state, seg_level_row).  ``k_codes``/``k_scales`` are the
+    layer's FLAT [NS, ...] planes."""
     idx, valid = _segment_tokens(dims, slot_seg, slot_state, seg)
     level = seg_level_row[seg]
     target = retention_at(level, cfg)
@@ -327,9 +380,10 @@ def _free_empty_blocks(dims: CacheDims, slot_state, block_type):
 
 
 def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-                   before_seg: jax.Array) -> CTCache:
+                   view: PoolView, before_seg: jax.Array) -> CTCache:
     """Case 1: a transition segment ended — anneal every preceding segment
     (including previous transitions) one retention level, in every layer."""
+    k_codes_f, _, k_scales_f, _ = view_flat(view)
 
     def one_layer(k_codes, k_scales, slot_state, slot_seg, slot_bits,
                   seg_level_row):
@@ -347,7 +401,7 @@ def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
         return slot_state, seg_level_row
 
     slot_state, seg_level = jax.vmap(one_layer)(
-        cache.k_codes, cache.k_scales, cache.slot_state, cache.slot_seg,
+        k_codes_f, k_scales_f, cache.slot_state, cache.slot_seg,
         cache.slot_bits, cache.seg_level)
     slot_state, block_type = jax.vmap(
         lambda s, b: _free_empty_blocks(dims, s, b))(slot_state,
@@ -357,9 +411,10 @@ def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 
 
 def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-                 max_rounds: int = 4) -> CTCache:
+                 view: PoolView, max_rounds: int = 4) -> CTCache:
     """Case 2: cache above budget with no transition — anneal the oldest,
     least-important segment one level per round until within budget."""
+    k_codes_f, _, k_scales_f, _ = view_flat(view)
 
     def one_layer(k_codes, k_scales, slot_state, slot_seg, slot_bits,
                   seg_level_row):
@@ -394,7 +449,7 @@ def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
         return slot_state, seg_level_row
 
     slot_state, seg_level = jax.vmap(one_layer)(
-        cache.k_codes, cache.k_scales, cache.slot_state, cache.slot_seg,
+        k_codes_f, k_scales_f, cache.slot_state, cache.slot_seg,
         cache.slot_bits, cache.seg_level)
     slot_state, block_type = jax.vmap(
         lambda s, b: _free_empty_blocks(dims, s, b))(slot_state,
@@ -408,7 +463,7 @@ def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 # ---------------------------------------------------------------------------
 
 def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-            sparsity: jax.Array) -> CTCache:
+            view: PoolView, sparsity: jax.Array) -> CTCache:
     """Every tau steps: classify the sparsity into a thought type, close the
     current segment, trigger TBE if the closing segment was a transition,
     then enforce the budget."""
@@ -418,7 +473,7 @@ def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 
     cache = jax.lax.cond(
         ended_type == jnp.int32(ThoughtType.TRANSITION),
-        lambda c: tbe_anneal_all(cfg, dims, c, before_seg=ended_seg),
+        lambda c: tbe_anneal_all(cfg, dims, c, view, before_seg=ended_seg),
         lambda c: c, cache)
 
     nxt = jnp.minimum(ended_seg + 1, dims.S - 1)
@@ -428,23 +483,168 @@ def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
         prev_thought=cache.cur_thought,
         cur_thought=new_thought,
     )
-    return budget_evict(cfg, dims, cache)
+    return budget_evict(cfg, dims, cache, view)
+
+
+# ---------------------------------------------------------------------------
+# Shared global block pool (engine-level paging across request slots)
+# ---------------------------------------------------------------------------
+
+class GlobalPool(NamedTuple):
+    """Physical block pool shared by every request slot.
+
+    ``view`` planes are ``[L, NP, BS, ...]``; ``free`` is a per-layer
+    physical-block free bitmap.  Per-request per-layer block tables
+    (``[L, NB]`` int32, UNMAPPED = -1) live with the engine.
+    """
+
+    view: PoolView
+    free: jax.Array         # [L, NP] bool
+
+
+def init_global_pool(dims: CacheDims, num_blocks: int) -> GlobalPool:
+    return GlobalPool(
+        view=init_pool_view(dims, num_blocks),
+        free=jnp.ones((dims.L, num_blocks), bool),
+    )
+
+
+def init_block_table(dims: CacheDims) -> jax.Array:
+    return jnp.full((dims.L, dims.NB), UNMAPPED, jnp.int32)
+
+
+def gather_view(pool_view: PoolView, table: jax.Array) -> PoolView:
+    """Per-request paged view through a [L, NB] block table.
+
+    Unmapped entries gather block 0 — their contents are irrelevant because
+    every slot of an unmapped logical block is FREE in the metadata.
+    """
+    safe = jnp.maximum(table, 0)
+
+    def g(plane):
+        return jax.vmap(lambda p, t: p[t])(plane, safe)
+    return PoolView(*(g(p) for p in pool_view))
+
+
+def scatter_view(pool_view: PoolView, table: jax.Array, view: PoolView
+                 ) -> PoolView:
+    """Write a per-request view back through its table (unmapped dropped)."""
+    np_blocks = pool_view.k_codes.shape[1]
+    idx = jnp.where(table >= 0, table, np_blocks)       # OOB -> dropped
+
+    def s(plane, vplane):
+        return jax.vmap(
+            lambda p, t, v: p.at[t].set(v, mode="drop"))(plane, idx, vplane)
+    return PoolView(*(s(p, v) for p, v in zip(pool_view, view)))
+
+
+def sync_block_tables(dims: CacheDims, pool: GlobalPool, table: jax.Array,
+                      cache: CTCache, view: PoolView
+                      ) -> Tuple[GlobalPool, jax.Array, CTCache]:
+    """Reconcile a request's logical blocks with the physical pool after a
+    CT update: release freed blocks, map newly claimed ones (lowest free
+    physical id first), scatter the view back, and revert any logical
+    claims the pool could not back (allocation failure under
+    oversubscription — surfaced as still-FREE slots, never corruption).
+    """
+    np_blocks = pool.free.shape[1]
+    new_bt = cache.block_type
+
+    def one_layer(free_row, table_row, new_row):
+        freed = (new_row == -1) & (table_row >= 0)
+        free_row = free_row.at[jnp.where(freed, table_row, np_blocks)].set(
+            True, mode="drop")
+        table_row = jnp.where(freed, UNMAPPED, table_row)
+
+        need = (new_row >= 0) & (table_row < 0)
+        # ascending free physical ids; rank i of `need` gets the i-th one
+        order = jnp.where(free_row, jnp.arange(np_blocks, dtype=jnp.int32),
+                          jnp.int32(np_blocks + 1))
+        free_sorted = jnp.argsort(order).astype(jnp.int32)
+        n_free = jnp.sum(free_row.astype(jnp.int32))
+        rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+        cand = free_sorted[jnp.clip(rank, 0, np_blocks - 1)]
+        got = need & (rank < n_free)
+        table_row = jnp.where(got, cand, table_row)
+        free_row = free_row.at[jnp.where(got, cand, np_blocks)].set(
+            False, mode="drop")
+        alloc_failed = need & ~got
+        return free_row, table_row, alloc_failed
+
+    free, table, alloc_failed = jax.vmap(one_layer)(
+        pool.free, table, new_bt)
+
+    # revert claims that could not be backed
+    failed_slots = jnp.repeat(alloc_failed, dims.BS, axis=1)    # [L, NS]
+    cache = cache.replace(
+        slot_state=jnp.where(failed_slots, FREE, cache.slot_state),
+        block_type=jnp.where(alloc_failed, jnp.int8(-1), cache.block_type))
+
+    pool_view = scatter_view(pool.view, table, view)
+    return GlobalPool(view=pool_view, free=free), table, cache
+
+
+def release_blocks(dims: CacheDims, pool: GlobalPool, table: jax.Array
+                   ) -> GlobalPool:
+    """Return every mapped block of a retired request to the free pool."""
+    np_blocks = pool.free.shape[1]
+    idx = jnp.where(table >= 0, table, np_blocks)
+    free = jax.vmap(lambda f, t: f.at[t].set(True, mode="drop"))(
+        pool.free, idx)
+    return GlobalPool(view=pool.view, free=free)
+
+
+def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
+                   table: jax.Array, cache: CTCache, sparsity: jax.Array,
+                   active: jax.Array, n_new: jax.Array | int = 1
+                   ) -> Tuple[GlobalPool, jax.Array, CTCache]:
+    """Engine-side ``advance_after_write`` against the shared global pool.
+
+    ``n_new`` tokens were written into the buffer this call (1 per decode
+    tick; up to g for a prefill chunk — chunks align with group commits).
+    The pool is only touched when a commit or refresh is actually due
+    (every g / tau tokens) — the gather/scatter through the block table is
+    cold-path maintenance, never per-token traffic.
+    """
+
+    def advance(args):
+        pool, table, cache = args
+        cache = cache.replace(buf_len=cache.buf_len + n_new,
+                              num_tokens=cache.num_tokens + n_new)
+        at_commit = cache.buf_len >= dims.G
+        at_refresh = (cache.num_tokens % cfg.refresh_interval) == 0
+
+        def maintain(args):
+            pool, table, cache = args
+            view = gather_view(pool.view, table)
+            cache, view = commit_and_evict_if_full(cfg, dims, cache, view)
+            cache = jax.lax.cond(
+                at_refresh,
+                lambda c: refresh(cfg, dims, c, view, sparsity),
+                lambda c: c, cache)
+            pool, table, cache = sync_block_tables(
+                dims, pool, table, cache, view)
+            return pool, table, cache
+
+        return jax.lax.cond(at_commit | at_refresh, maintain, lambda a: a,
+                            (pool, table, cache))
+
+    return jax.lax.cond(active, advance, lambda a: a, (pool, table, cache))
 
 
 # ---------------------------------------------------------------------------
 # Read side: dequantize / reference attention inputs / metrics
 # ---------------------------------------------------------------------------
 
-def dequant_layer(dims: CacheDims, cache: CTCache, layer: int
-                  ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+def dequant_layer(dims: CacheDims, cache: CTCache, view: PoolView,
+                  layer: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
     """Reference read of one layer: (k, v, valid) with k/v [NS,H,D] f32."""
+    k_codes_f, v_codes_f, k_scales_f, v_scales_f = view_flat(view)
     bits = cache.slot_bits[layer].astype(jnp.int32)[:, None, None]
-    k = Q.dequantize_by_bitcode(cache.k_codes[layer],
-                                cache.k_scales[layer].astype(jnp.float32),
-                                bits)
-    v = Q.dequantize_by_bitcode(cache.v_codes[layer],
-                                cache.v_scales[layer].astype(jnp.float32),
-                                bits)
+    k = Q.dequantize_by_bitcode(k_codes_f[layer],
+                                k_scales_f[layer].astype(jnp.float32), bits)
+    v = Q.dequantize_by_bitcode(v_codes_f[layer],
+                                v_scales_f[layer].astype(jnp.float32), bits)
     valid = cache.slot_state[layer] == VALID
     return k, v, valid
 

@@ -46,13 +46,26 @@ def e4m3_round(x: jax.Array) -> jax.Array:
     return jnp.clip(x, -E4M3_MAX, E4M3_MAX).astype(F8).astype(jnp.float32)
 
 
+def _e4m3_next_up(s: jax.Array) -> jax.Array:
+    """Next representable E4M3 value above ``s`` (s positive, on the grid).
+
+    Exact bit-increment on the f8 pattern — correct in the SUBNORMAL range
+    too, where the grid step is absolute (2^-9) and a relative bump like
+    ``s * 1.0625`` can round straight back down (gap up to 33%)."""
+    bits = jax.lax.bitcast_convert_type(s.astype(F8), jnp.uint8)
+    up = jax.lax.bitcast_convert_type((bits + 1).astype(jnp.uint8), F8)
+    # at the top of the grid the incremented pattern is e4m3fn NaN — stay
+    # saturated at E4M3_MAX (encode clips; matches the pre-fix behaviour)
+    return jnp.where(s >= E4M3_MAX, E4M3_MAX, up.astype(jnp.float32))
+
+
 def _group_scale(amax: jax.Array, qmax: float) -> jax.Array:
     """E4M3 group scale; guarded so that x/scale stays within the code grid."""
     raw = jnp.maximum(amax, SCALE_EPS) / qmax
     s = e4m3_round(raw)
-    # e4m3 rounding may round *down*; bump to the next representable value so
-    # |x|/s never exceeds qmax (keeps encode saturation-free).
-    s = jnp.where(s * qmax < amax, e4m3_round(raw * 1.0625), s)
+    # round-to-nearest may land one grid step BELOW raw; step up exactly one
+    # e4m3 value so |x|/s never exceeds qmax (keeps encode saturation-free)
+    s = jnp.where(s * qmax < amax, _e4m3_next_up(s), s)
     return jnp.maximum(s, SCALE_EPS)
 
 

@@ -4,19 +4,21 @@ Couples the CT cache with the model's decode step:
 
     for each generated token:
         q, k, v = project_qkv(h)
-        cache = append_token(cache, k, v)          # TBQ buffer / group commit
-        h = attention(q, cache)                    # CT paged attention
+        cache, pool = append_token(cache, pool, k, v)  # TBQ buffer / commit
+        h = attention(q, cache, pool)                  # CT paged attention
         if step % tau == 0:
-            s = sparsity over L* layers            # thought refresh
-            cache = refresh(cache, s)              # classify + TBE + budget
+            s = sparsity over L* layers                # thought refresh
+            cache = refresh(cache, pool, s)            # classify + TBE
 
-The heavy read path (`decode_attention`) has a Pallas kernel
-(`repro.kernels.ct_paged_attention`); `decode_attention_ref` here is the
-pure-jnp oracle the kernel is validated against and the CPU fallback.
+State is split per the paged refactor: :class:`~repro.core.ct_cache.CTCache`
+carries metadata + the TBQ buffer, :class:`~repro.core.ct_cache.PoolView`
+carries the quantized planes in paged ``[L, NB, BS, H, ...]`` layout — the
+layout the Pallas kernel (`repro.kernels.ct_paged_attention`) streams.
+`decode_attention_ref` here is the pure-jnp oracle the kernel is validated
+against and the CPU fallback.
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -38,7 +40,7 @@ def _gqa_scores(q: jax.Array, k: jax.Array) -> jax.Array:
 
 
 def decode_attention_ref(dims: CC.CacheDims, cache: CC.CTCache,
-                         q: jax.Array, layer: int,
+                         view: CC.PoolView, q: jax.Array, layer: int,
                          return_probs: bool = False):
     """Reference decode attention for one layer over (paged cache ∪ buffer).
 
@@ -46,7 +48,7 @@ def decode_attention_ref(dims: CC.CacheDims, cache: CC.CTCache,
       q: [Hq, D] query for the current token (RoPE already applied).
     Returns: out [Hq, D] (and optionally probs + validity for stats).
     """
-    k_c, v_c, valid_c = CC.dequant_layer(dims, cache, layer)
+    k_c, v_c, valid_c = CC.dequant_layer(dims, cache, view, layer)
     buf_valid = jnp.arange(dims.G) < cache.buf_len
     k = jnp.concatenate([k_c, cache.buf_k[layer].astype(jnp.float32)], 0)
     v = jnp.concatenate([v_c, cache.buf_v[layer].astype(jnp.float32)], 0)
@@ -62,11 +64,11 @@ def decode_attention_ref(dims: CC.CacheDims, cache: CC.CTCache,
     return out
 
 
-def layer_sparsity(dims: CC.CacheDims, cache: CC.CTCache, q: jax.Array,
-                   layer: int) -> jax.Array:
+def layer_sparsity(dims: CC.CacheDims, cache: CC.CTCache, view: CC.PoolView,
+                   q: jax.Array, layer: int) -> jax.Array:
     """Decode-step sparsity for one calibrated layer (paper App. C.2: GQA
     max-pool over the group, renormalize, measure)."""
-    _, p, valid = decode_attention_ref(dims, cache, q, layer,
+    _, p, valid = decode_attention_ref(dims, cache, view, q, layer,
                                        return_probs=True)
     pooled = jnp.max(p, axis=1)                           # [H, N] maxpool
     pooled = jnp.where(valid[None, :], pooled, NEG_INF)
@@ -76,18 +78,20 @@ def layer_sparsity(dims: CC.CacheDims, cache: CC.CTCache, q: jax.Array,
 
 
 def step_token(cfg: ThinKVConfig, dims: CC.CacheDims, cache: CC.CTCache,
-               k_t: jax.Array, v_t: jax.Array,
-               sparsity: Optional[jax.Array] = None) -> CC.CTCache:
+               view: CC.PoolView, k_t: jax.Array, v_t: jax.Array,
+               sparsity: Optional[jax.Array] = None
+               ) -> Tuple[CC.CTCache, CC.PoolView]:
     """One generation step's cache updates: append (+commit), and at tau
     boundaries run the thought refresh with the supplied sparsity."""
-    cache = CC.append_token(cfg, dims, cache, k_t, v_t)
+    cache, view = CC.append_token(cfg, dims, cache, view, k_t, v_t)
     if sparsity is None:
-        return cache
+        return cache, view
     at_refresh = (cache.num_tokens % cfg.refresh_interval) == 0
-    return jax.lax.cond(
+    cache = jax.lax.cond(
         at_refresh,
-        lambda c: CC.refresh(cfg, dims, c, sparsity),
+        lambda c: CC.refresh(cfg, dims, c, view, sparsity),
         lambda c: c, cache)
+    return cache, view
 
 
 # ---------------------------------------------------------------------------

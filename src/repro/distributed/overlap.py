@@ -29,7 +29,9 @@ def chunked_all_to_all(x: jax.Array, axis_name: str, num_chunks: int,
     via ppermute while ``compute`` runs on already-arrived chunks.
     Requires n % num_chunks == 0.
     """
-    size = jax.lax.axis_size(axis_name)
+    # psum of a Python constant is evaluated eagerly -> concrete axis size
+    # (jax.lax.axis_size does not exist in current JAX)
+    size = jax.lax.psum(1, axis_name)
     idx = jax.lax.axis_index(axis_name)
     perm = [(i, (i + 1) % size) for i in range(size)]
 
@@ -57,7 +59,7 @@ def overlapped_moe_ffn(x: jax.Array, w_up: jax.Array, w_down: jax.Array,
     """
 
     def local(x_l, wu, wd):
-        size = jax.lax.axis_size(axis)
+        size = mesh.shape[axis]
         n = x_l.shape[0]
         per = n // size
         xs = x_l.reshape(size, per, -1)

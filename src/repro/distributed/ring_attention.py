@@ -59,7 +59,7 @@ def ring_attention(q, k, v, mesh, axis: str = "model"):
 
     def local(ql, kl, vl):
         idx = jax.lax.axis_index(axis)
-        size = jax.lax.axis_size(axis)
+        size = m          # static mesh axis size (jax.lax has no axis_size)
         bl, sq = ql.shape[0], ql.shape[1]
         qh = ql.reshape(bl, sq, hkv, g, d).astype(jnp.float32)
         rows = jnp.arange(sq)

@@ -1,7 +1,8 @@
 """CT paged decode-attention Pallas TPU kernel (paper Sec. 5 'Continuous
 Thinking', adapted per DESIGN.md Sec. 3).
 
-One (kv-head, block)-grid flash-decoding pass over the quantized paged cache:
+One (request, kv-head, block)-grid flash-decoding pass over the quantized
+paged cache:
 
 * the quantized cache (nibble codes + E4M3 group scales) is the ONLY HBM
   traffic — dequantization (code decode + scale multiply) is fused in VMEM
@@ -9,17 +10,27 @@ One (kv-head, block)-grid flash-decoding pass over the quantized paged cache:
 * the paper's eviction/segment masks enter as the per-slot ``slot_state``
   plane: soft-evicted slots are masked out of the softmax, never compacted;
 * PagedAttention's block-table indirection is kept via scalar prefetch
-  (``block_table[b] -> physical block``); per-request pools use identity
-  tables, a shared global pool passes a real mapping;
+  (``block_table[r, b] -> physical block``): the CODE/SCALE planes are the
+  engine's SHARED physical pool ([NP, BS, ...]) indexed through the table,
+  while ``slot_state``/``slot_bits`` are per-request logical metadata
+  ([R, NB, BS]) indexed directly — requests only ever touch physical
+  blocks their table maps;
 * flash accumulation state (m, l, acc) lives in VMEM scratch across the
   sequential block grid dimension; (m, l) are returned so the wrapper can
   merge the attention over the full-precision TBQ buffer ``B_buf``.
+
+The batched entry point serves a whole continuous-batching tick (one launch
+per layer for every request slot); the single-request wrapper remains for
+tests and the single-sequence controller.  The query-group axis ``GQ`` is
+``Hq // H`` for decode and ``chunk * Hq // H`` for the chunked prefill path
+(every chunk token attends the same frozen pool, so chunk queries fold into
+the q-group axis).
 
 Tiling: a KV block is (block_size=16, head_dim=128) per head — exactly one
 TPU (16,128) tile; codes are uint8 lanes, scales one bf16 (16,8) tile.
 
 Validated on CPU against ``ref.ct_paged_attention_ref`` in interpret mode
-(``tests/test_kernels_ct_attention.py`` sweeps shapes/dtypes).
+(``tests/test_kernels.py`` sweeps shapes/dtypes/bit-widths).
 """
 from __future__ import annotations
 
@@ -63,7 +74,7 @@ def _decode_codes(codes_u8, bits_u8, scales, group: int):
 def _kernel(block_table, q_ref, kc_ref, vc_ref, ks_ref, vs_ref, state_ref,
             bits_ref, o_ref, m_ref, l_ref, acc_ref, *, group: int,
             blocks_per_seq: int):
-    b = pl.program_id(1)
+    b = pl.program_id(2)
 
     @pl.when(b == 0)
     def _init():
@@ -71,13 +82,13 @@ def _kernel(block_table, q_ref, kc_ref, vc_ref, ks_ref, vs_ref, state_ref,
         m_ref[...] = jnp.full(m_ref.shape, NEG_INF, m_ref.dtype)
         l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
 
-    q = q_ref[0].astype(jnp.float32)                       # [Gq, D]
+    q = q_ref[0, 0].astype(jnp.float32)                    # [GQ, D]
     kc = kc_ref[0, :, 0]                                   # [BS, D] u8
     vc = vc_ref[0, :, 0]
     ks = ks_ref[0, :, 0]                                   # [BS, D//g]
     vs = vs_ref[0, :, 0]
-    state = state_ref[0]                                   # [BS]
-    bits = bits_ref[0]
+    state = state_ref[0, 0]                                # [BS]
+    bits = bits_ref[0, 0]
 
     k = _decode_codes(kc, bits, ks, group)                 # [BS, D]
     v = _decode_codes(vc, bits, vs, group)
@@ -85,11 +96,11 @@ def _kernel(block_table, q_ref, kc_ref, vc_ref, ks_ref, vs_ref, state_ref,
     d = q.shape[-1]
     s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                             preferred_element_type=jnp.float32)
-    s = s * (1.0 / (d ** 0.5))                             # [Gq, BS]
+    s = s * (1.0 / (d ** 0.5))                             # [GQ, BS]
     valid = (state == VALID)
     s = jnp.where(valid[None, :], s, NEG_INF)
 
-    m_prev, l_prev = m_ref[0], l_ref[0]                    # [Gq, 1]
+    m_prev, l_prev = m_ref[0, 0], l_ref[0, 0]              # [GQ, 1]
     m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
     p = jnp.exp(s - m_new)
     p = jnp.where(valid[None, :], p, 0.0)
@@ -97,12 +108,81 @@ def _kernel(block_table, q_ref, kc_ref, vc_ref, ks_ref, vs_ref, state_ref,
     l_new = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
     acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
         p, v, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
-    m_ref[0] = m_new
-    l_ref[0] = l_new
+    m_ref[0, 0] = m_new
+    l_ref[0, 0] = l_new
 
     @pl.when(b == blocks_per_seq - 1)
     def _final():
-        o_ref[0] = acc_ref[...] / jnp.maximum(l_ref[0], 1e-30)
+        o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[0, 0], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "interpret"))
+def ct_paged_attention_batched(qh: jax.Array, k_codes: jax.Array,
+                               v_codes: jax.Array, k_scales: jax.Array,
+                               v_scales: jax.Array, slot_state: jax.Array,
+                               slot_bits: jax.Array, block_table: jax.Array,
+                               *, group: int = 16, interpret: bool = False
+                               ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Paged decode attention over a SHARED quantized pool, one layer, every
+    request slot in one launch.
+
+    Args:
+      qh:         [R, H, GQ, D]  queries per kv head (post-RoPE).
+      k_codes:    [NP, BS, H, D] uint8 physical pool planes.
+      v_codes:    [NP, BS, H, D]
+      k_scales:   [NP, BS, H, D//group]  (bf16, E4M3-valued)
+      v_scales:   [NP, BS, H, D//group]
+      slot_state: [R, NB, BS]    uint8 per-request logical (1 == valid).
+      slot_bits:  [R, NB, BS]    uint8 in {2,4,8}.
+      block_table:[R, NB]        int32 logical -> physical block (>= 0;
+                  clamp unmapped entries to 0 — their slots must be FREE).
+
+    Returns:
+      out [R, H, GQ, D] f32, m [R, H, GQ, 1], l [R, H, GQ, 1] flash stats
+      for merging with the B_buf attention.
+    """
+    r, h, gq, d = qh.shape
+    npool, bs, hp, _ = k_codes.shape
+    assert hp == h, (hp, h)
+    nb = block_table.shape[-1]
+
+    grid = (r, h, nb)
+    kern = functools.partial(_kernel, group=group, blocks_per_seq=nb)
+
+    out, m, l = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=1,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, gq, d), lambda rr, hh, b, bt: (rr, hh, 0, 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda rr, hh, b, bt: (bt[rr, b], 0, hh, 0)),
+                pl.BlockSpec((1, bs, 1, d),
+                             lambda rr, hh, b, bt: (bt[rr, b], 0, hh, 0)),
+                pl.BlockSpec((1, bs, 1, d // group),
+                             lambda rr, hh, b, bt: (bt[rr, b], 0, hh, 0)),
+                pl.BlockSpec((1, bs, 1, d // group),
+                             lambda rr, hh, b, bt: (bt[rr, b], 0, hh, 0)),
+                pl.BlockSpec((1, 1, bs), lambda rr, hh, b, bt: (rr, b, 0)),
+                pl.BlockSpec((1, 1, bs), lambda rr, hh, b, bt: (rr, b, 0)),
+            ],
+            out_specs=[
+                pl.BlockSpec((1, 1, gq, d), lambda rr, hh, b, bt: (rr, hh, 0, 0)),
+                pl.BlockSpec((1, 1, gq, 1), lambda rr, hh, b, bt: (rr, hh, 0, 0)),
+                pl.BlockSpec((1, 1, gq, 1), lambda rr, hh, b, bt: (rr, hh, 0, 0)),
+            ],
+            scratch_shapes=[pltpu.VMEM((gq, d), jnp.float32)],
+        ),
+        out_shape=[
+            jax.ShapeDtypeStruct((r, h, gq, d), jnp.float32),
+            jax.ShapeDtypeStruct((r, h, gq, 1), jnp.float32),
+            jax.ShapeDtypeStruct((r, h, gq, 1), jnp.float32),
+        ],
+        interpret=interpret,
+    )(block_table, qh, k_codes, v_codes, k_scales, v_scales, slot_state,
+      slot_bits)
+    return out, m, l
 
 
 @functools.partial(jax.jit, static_argnames=("group", "interpret"))
@@ -112,60 +192,26 @@ def ct_paged_attention(q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
                        block_table: jax.Array, *, group: int = 16,
                        interpret: bool = False
                        ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Paged decode attention over a quantized CT pool (one request+layer).
+    """Single-request wrapper (one request+layer) over the batched kernel.
 
     Args:
-      q:          [Hq, D]      current query (post-RoPE).
-      k_codes:    [NP, BS, H, D]   uint8 pool planes (NP physical blocks).
-      v_codes:    [NP, BS, H, D]
-      k_scales:   [NP, BS, H, D//group]  (bf16, E4M3-valued)
-      v_scales:   [NP, BS, H, D//group]
-      slot_state: [NP, BS]      uint8 (1 == valid).
-      slot_bits:  [NP, BS]      uint8 in {2,4,8}.
-      block_table:[NB_seq]      int32: sequence block -> physical block.
+      q:          [Hq, D]        current query (post-RoPE).
+      k_codes/v_codes/k_scales/v_scales: [NP, BS, H, ...] pool planes.
+      slot_state/slot_bits: [NP, BS] PHYSICAL-layout metadata (legacy
+                  single-request convention: gathered through the table
+                  here so the batched kernel sees the logical view).
+      block_table:[NB]           int32 sequence block -> physical block.
 
     Returns:
-      out [Hq, D] f32, m [H, Gq, 1], l [H, Gq, 1] flash stats for merging
-      with the B_buf attention.
+      out [Hq, D] f32, m [H, Gq, 1], l [H, Gq, 1].
     """
     hq, d = q.shape
-    npool, bs, h, _ = k_codes.shape
+    h = k_codes.shape[2]
     gq = hq // h
-    nb = block_table.shape[0]
-    qh = q.reshape(h, gq, d)
-
-    grid = (h, nb)
-    kern = functools.partial(_kernel, group=group, blocks_per_seq=nb)
-
-    out, m, l = pl.pallas_call(
-        kern,
-        grid_spec=pltpu.PrefetchScalarGridSpec(
-            num_scalar_prefetch=1,
-            grid=grid,
-            in_specs=[
-                pl.BlockSpec((1, gq, d), lambda hh, b, bt: (hh, 0, 0)),
-                pl.BlockSpec((1, bs, 1, d), lambda hh, b, bt: (bt[b], 0, hh, 0)),
-                pl.BlockSpec((1, bs, 1, d), lambda hh, b, bt: (bt[b], 0, hh, 0)),
-                pl.BlockSpec((1, bs, 1, d // group),
-                             lambda hh, b, bt: (bt[b], 0, hh, 0)),
-                pl.BlockSpec((1, bs, 1, d // group),
-                             lambda hh, b, bt: (bt[b], 0, hh, 0)),
-                pl.BlockSpec((1, bs), lambda hh, b, bt: (bt[b], 0)),
-                pl.BlockSpec((1, bs), lambda hh, b, bt: (bt[b], 0)),
-            ],
-            out_specs=[
-                pl.BlockSpec((1, gq, d), lambda hh, b, bt: (hh, 0, 0)),
-                pl.BlockSpec((1, gq, 1), lambda hh, b, bt: (hh, 0, 0)),
-                pl.BlockSpec((1, gq, 1), lambda hh, b, bt: (hh, 0, 0)),
-            ],
-            scratch_shapes=[pltpu.VMEM((gq, d), jnp.float32)],
-        ),
-        out_shape=[
-            jax.ShapeDtypeStruct((h, gq, d), jnp.float32),
-            jax.ShapeDtypeStruct((h, gq, 1), jnp.float32),
-            jax.ShapeDtypeStruct((h, gq, 1), jnp.float32),
-        ],
-        interpret=interpret,
-    )(block_table, qh, k_codes, v_codes, k_scales, v_scales, slot_state,
-      slot_bits)
-    return out.reshape(hq, d), m, l
+    qh = q.reshape(1, h, gq, d)
+    state = jnp.take(slot_state, block_table, axis=0)[None]    # [1, NB, BS]
+    bits = jnp.take(slot_bits, block_table, axis=0)[None]
+    out, m, l = ct_paged_attention_batched(
+        qh, k_codes, v_codes, k_scales, v_scales, state, bits,
+        block_table[None], group=group, interpret=interpret)
+    return out[0].reshape(hq, d), m[0], l[0]

@@ -23,7 +23,7 @@ NEG_INF = -1e30
 
 def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
             block_q: int, block_k: int, kv_blocks: int, causal: bool,
-            window: int, scale: float):
+            window: int, scale: float, mo_ref=None, lo_ref=None):
     qi = pl.program_id(1)
     ki = pl.program_id(2)
 
@@ -64,16 +64,31 @@ def _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
     def _final():
         o_ref[0] = (acc_ref[...] /
                     jnp.maximum(l_ref[...], 1e-30)).astype(o_ref.dtype)
+        if mo_ref is not None:
+            mo_ref[0] = m_ref[...]
+            lo_ref[0] = l_ref[...]
+
+
+def _kernel_stats(q_ref, k_ref, v_ref, o_ref, mo_ref, lo_ref, m_ref, l_ref,
+                  acc_ref, **kw):
+    """Stats variant: (m, l) are also OUTPUTS (written at the last kv step)
+    so the chunked-prefill path can flash-merge with the paged pool."""
+    _kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
+            mo_ref=mo_ref, lo_ref=lo_ref, **kw)
 
 
 @functools.partial(jax.jit, static_argnames=("causal", "window", "block_q",
-                                             "block_k", "interpret"))
+                                             "block_k", "interpret",
+                                             "return_stats"))
 def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
                   causal: bool = True, window: int = 0, block_q: int = 128,
-                  block_k: int = 128, interpret: bool = False) -> jax.Array:
+                  block_k: int = 128, interpret: bool = False,
+                  return_stats: bool = False):
     """q [S, Hq, D], k/v [S, H, D] -> out [S, Hq, D] (f32).
 
     GQA: each q head attends the kv head ``h // (Hq//H)``.
+    ``return_stats`` additionally returns per-query flash stats
+    (m, l) [S, Hq, 1] for partition merging.
     """
     s_len, hq, d = q.shape
     _, h, _ = k.shape
@@ -88,24 +103,43 @@ def flash_prefill(q: jax.Array, k: jax.Array, v: jax.Array, *,
     vt = jnp.swapaxes(v, 0, 1)
 
     grid = (hq, qb, kb)
-    kern = functools.partial(_kernel, block_q=bq, block_k=bk, kv_blocks=kb,
-                             causal=causal, window=window,
-                             scale=1.0 / (d ** 0.5))
+    kw = dict(block_q=bq, block_k=bk, kv_blocks=kb, causal=causal,
+              window=window, scale=1.0 / (d ** 0.5))
+    in_specs = [
+        pl.BlockSpec((1, bq, d), lambda hh, qi, ki: (hh, qi, 0)),
+        pl.BlockSpec((1, bk, d), lambda hh, qi, ki: (hh // gq, ki, 0)),
+        pl.BlockSpec((1, bk, d), lambda hh, qi, ki: (hh // gq, ki, 0)),
+    ]
+    o_spec = pl.BlockSpec((1, bq, d), lambda hh, qi, ki: (hh, qi, 0))
+    scratch = [
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, 1), jnp.float32),
+        pltpu.VMEM((bq, d), jnp.float32),
+    ]
+    if return_stats:
+        s_spec = pl.BlockSpec((1, bq, 1), lambda hh, qi, ki: (hh, qi, 0))
+        out, m, l = pl.pallas_call(
+            functools.partial(_kernel_stats, **kw),
+            grid=grid,
+            in_specs=in_specs,
+            out_specs=[o_spec, s_spec, s_spec],
+            out_shape=[
+                jax.ShapeDtypeStruct((hq, s_len, d), jnp.float32),
+                jax.ShapeDtypeStruct((hq, s_len, 1), jnp.float32),
+                jax.ShapeDtypeStruct((hq, s_len, 1), jnp.float32),
+            ],
+            scratch_shapes=scratch,
+            interpret=interpret,
+        )(qt, kt, vt)
+        return (jnp.swapaxes(out, 0, 1), jnp.swapaxes(m, 0, 1),
+                jnp.swapaxes(l, 0, 1))
     out = pl.pallas_call(
-        kern,
+        functools.partial(_kernel, **kw),
         grid=grid,
-        in_specs=[
-            pl.BlockSpec((1, bq, d), lambda hh, qi, ki: (hh, qi, 0)),
-            pl.BlockSpec((1, bk, d), lambda hh, qi, ki: (hh // gq, ki, 0)),
-            pl.BlockSpec((1, bk, d), lambda hh, qi, ki: (hh // gq, ki, 0)),
-        ],
-        out_specs=pl.BlockSpec((1, bq, d), lambda hh, qi, ki: (hh, qi, 0)),
+        in_specs=in_specs,
+        out_specs=o_spec,
         out_shape=jax.ShapeDtypeStruct((hq, s_len, d), jnp.float32),
-        scratch_shapes=[
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, 1), jnp.float32),
-            pltpu.VMEM((bq, d), jnp.float32),
-        ],
+        scratch_shapes=scratch,
         interpret=interpret,
     )(qt, kt, vt)
     return jnp.swapaxes(out, 0, 1)

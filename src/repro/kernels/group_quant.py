@@ -27,6 +27,16 @@ def _e4m3_round(x):
     return jnp.clip(x, -448.0, 448.0).astype(F8).astype(jnp.float32)
 
 
+def _e4m3_next_up(s):
+    """Next e4m3 value above ``s`` (exact bit increment — correct in the
+    subnormal range where a relative bump under-shoots the grid step);
+    mirrors ``core.quantization._e4m3_next_up``."""
+    bits = jax.lax.bitcast_convert_type(s.astype(F8), jnp.uint8)
+    up = jax.lax.bitcast_convert_type((bits + 1).astype(jnp.uint8), F8)
+    # top-of-grid increment is e4m3fn NaN: stay saturated at the max
+    return jnp.where(s >= 448.0, 448.0, up.astype(jnp.float32))
+
+
 def _kernel(x_ref, codes_ref, scales_ref, *, bits: int, group: int):
     x = x_ref[...].astype(jnp.float32)                  # [R, D]
     r, d = x.shape
@@ -35,7 +45,7 @@ def _kernel(x_ref, codes_ref, scales_ref, *, bits: int, group: int):
     qmax = {2: 1.0, 4: 6.0, 8: 127.0}[bits]
     raw = jnp.maximum(amax, SCALE_EPS) / qmax
     s = _e4m3_round(raw)
-    s = jnp.where(s * qmax < amax, _e4m3_round(raw * 1.0625), s)
+    s = jnp.where(s * qmax < amax, _e4m3_next_up(s), s)
     s = jnp.maximum(s, SCALE_EPS)
     y = xg / s[:, :, None]
     if bits == 4:

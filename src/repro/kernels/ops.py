@@ -8,7 +8,6 @@ kernels in interpret mode (used by the correctness tests);
 """
 from __future__ import annotations
 
-import functools
 from typing import Optional, Tuple
 
 import jax
@@ -16,7 +15,8 @@ import jax.numpy as jnp
 
 from repro.core import ct_cache as CC
 from repro.kernels import ref as R
-from repro.kernels.ct_paged_attention import ct_paged_attention
+from repro.kernels.ct_paged_attention import (ct_paged_attention,
+                                              ct_paged_attention_batched)
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.group_quant import group_quant
 
@@ -33,7 +33,7 @@ def _use_pallas(force: Optional[str]) -> Tuple[bool, bool]:
 def paged_decode_attention(q, k_codes, v_codes, k_scales, v_scales,
                            slot_state, slot_bits, block_table, *,
                            group: int = 16, force: Optional[str] = None):
-    """CT paged attention -> (out [Hq,D], m, l)."""
+    """CT paged attention, single request -> (out [Hq,D], m, l)."""
     use, interp = _use_pallas(force)
     if use:
         return ct_paged_attention(q, k_codes, v_codes, k_scales, v_scales,
@@ -42,6 +42,29 @@ def paged_decode_attention(q, k_codes, v_codes, k_scales, v_scales,
     return R.ct_paged_attention_ref(q, k_codes, v_codes, k_scales, v_scales,
                                     slot_state, slot_bits, block_table,
                                     group=group)
+
+
+def paged_decode_attention_batched(qh, k_codes, v_codes, k_scales, v_scales,
+                                   slot_state, slot_bits, block_table, *,
+                                   group: int = 16,
+                                   force: Optional[str] = None):
+    """Batched CT paged attention over the SHARED physical pool: one launch
+    per layer for every request slot of a continuous-batching tick.
+
+    qh [R, H, GQ, D]; planes [NP, BS, H, ...]; slot_state/slot_bits
+    [R, NB, BS] logical; block_table [R, NB] (unmapped entries must be
+    clamped to a valid physical id by the caller — their slots are FREE so
+    the state mask zeroes their contribution).
+    Returns (out [R, H, GQ, D], m [R, H, GQ, 1], l [R, H, GQ, 1]).
+    """
+    use, interp = _use_pallas(force)
+    if use:
+        return ct_paged_attention_batched(
+            qh, k_codes, v_codes, k_scales, v_scales, slot_state, slot_bits,
+            block_table, group=group, interpret=interp)
+    return R.ct_paged_attention_batched_ref(
+        qh, k_codes, v_codes, k_scales, v_scales, slot_state, slot_bits,
+        block_table, group=group)
 
 
 def buffer_attention(q, buf_k, buf_v, buf_len):
@@ -68,17 +91,20 @@ def buffer_attention(q, buf_k, buf_v, buf_len):
 
 
 def thinkv_decode_attention(dims: CC.CacheDims, cache: CC.CTCache,
-                            q: jax.Array, layer: int, *,
+                            view: CC.PoolView, q: jax.Array, layer: int, *,
                             force: Optional[str] = None) -> jax.Array:
-    """Full ThinKV decode attention for one layer: paged pool ∪ B_buf."""
+    """Full ThinKV decode attention for one layer: paged pool ∪ B_buf.
+
+    Single-request form: the request's paged view IS its physical pool, so
+    the block table is the identity (the engine's shared-pool path goes
+    through :func:`paged_decode_attention_batched` with real tables).
+    """
     shp = (dims.NB, dims.BS)
-    table = jnp.arange(dims.NB, dtype=jnp.int32)   # per-request pool: identity
+    table = jnp.arange(dims.NB, dtype=jnp.int32)
     out_p, m_p, l_p = paged_decode_attention(
         q,
-        cache.k_codes[layer].reshape(dims.NB, dims.BS, dims.H, dims.D),
-        cache.v_codes[layer].reshape(dims.NB, dims.BS, dims.H, dims.D),
-        cache.k_scales[layer].reshape(dims.NB, dims.BS, dims.H, -1),
-        cache.v_scales[layer].reshape(dims.NB, dims.BS, dims.H, -1),
+        view.k_codes[layer], view.v_codes[layer],
+        view.k_scales[layer], view.v_scales[layer],
         cache.slot_state[layer].reshape(shp),
         cache.slot_bits[layer].reshape(shp),
         table, group=16, force=force)
@@ -107,3 +133,19 @@ def prefill_attention(q, k, v, *, causal: bool = True, window: int = 0,
         return flash_prefill(q, k, v, causal=causal, window=window,
                              interpret=interp)
     return R.flash_prefill_ref(q, k, v, causal=causal, window=window)
+
+
+def prefill_attention_stats(q, k, v, *, causal: bool = True, window: int = 0,
+                            kv_valid=None, force: Optional[str] = None):
+    """Prefill attention with per-query flash stats (m, l) [S, Hq, 1] —
+    the chunk partition of the chunked-prefill path; merged against the
+    paged-pool partition by the engine.  ``kv_valid`` masks padded kv
+    positions (ref path only; the kernel path requires unpadded chunks).
+    """
+    use, interp = _use_pallas(force)
+    s_len = q.shape[0]
+    if use and kv_valid is None and s_len % 128 == 0:
+        return flash_prefill(q, k, v, causal=causal, window=window,
+                             interpret=interp, return_stats=True)
+    return R.flash_prefill_stats_ref(q, k, v, causal=causal, window=window,
+                                     kv_valid=kv_valid)

@@ -16,40 +16,62 @@ NEG_INF = -1e30
 VALID = 1
 
 
+def ct_paged_attention_batched_ref(qh, k_codes, v_codes, k_scales, v_scales,
+                                   slot_state, slot_bits, block_table, *,
+                                   group: int = 16
+                                   ) -> Tuple[jax.Array, jax.Array,
+                                              jax.Array]:
+    """Oracle for
+    :func:`repro.kernels.ct_paged_attention.ct_paged_attention_batched`.
+
+    qh [R, H, GQ, D]; code/scale planes [NP, BS, H, ...] (shared pool);
+    slot_state/slot_bits [R, NB, BS] logical; block_table [R, NB].
+    """
+    r, h, gq, d = qh.shape
+    _, bs = k_codes.shape[0], k_codes.shape[1]
+
+    def one(qh_r, state_r, bits_r, table_r):
+        take = lambda a: jnp.take(a, table_r, axis=0)
+        kc, vc = take(k_codes), take(v_codes)
+        ks, vs = take(k_scales), take(v_scales)
+        nb = table_r.shape[0]
+        n = nb * bs
+        flat = lambda a: a.reshape(n, *a.shape[2:])
+        bits_n = flat(bits_r).astype(jnp.int32)[:, None, None]
+        k = Q.dequantize_by_bitcode(flat(kc), flat(ks).astype(jnp.float32),
+                                    bits_n, g=group)       # [n,H,D]
+        v = Q.dequantize_by_bitcode(flat(vc), flat(vs).astype(jnp.float32),
+                                    bits_n, g=group)
+        valid = flat(state_r) == VALID                      # [n]
+        s = jnp.einsum("hgd,nhd->hgn", qh_r.astype(jnp.float32), k)
+        s = s / jnp.sqrt(float(d))
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = jnp.where(valid[None, None, :], p, 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out = jnp.einsum("hgn,nhd->hgd", p / jnp.maximum(l, 1e-30), v)
+        return out, m, l
+
+    return jax.vmap(one)(qh, slot_state, slot_bits, block_table)
+
+
 def ct_paged_attention_ref(q, k_codes, v_codes, k_scales, v_scales,
                            slot_state, slot_bits, block_table, *,
                            group: int = 16
                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """Oracle for :func:`repro.kernels.ct_paged_attention.ct_paged_attention`."""
+    """Oracle for :func:`repro.kernels.ct_paged_attention.ct_paged_attention`
+    (single request; slot_state/slot_bits in PHYSICAL [NP, BS] layout)."""
     hq, d = q.shape
-    npool, bs, h, _ = k_codes.shape
+    h = k_codes.shape[2]
     gq = hq // h
-
-    # gather the sequence's blocks through the table
-    take = lambda a: jnp.take(a, block_table, axis=0)
-    kc, vc = take(k_codes), take(v_codes)
-    ks, vs = take(k_scales), take(v_scales)
-    state, bits = take(slot_state), take(slot_bits)
-
-    nb = block_table.shape[0]
-    n = nb * bs
-    flat = lambda a: a.reshape(n, *a.shape[2:])
-    bits_n = flat(bits).astype(jnp.int32)[:, None, None]
-    k = Q.dequantize_by_bitcode(flat(kc), flat(ks).astype(jnp.float32),
-                                bits_n, g=group)       # [n,H,D]
-    v = Q.dequantize_by_bitcode(flat(vc), flat(vs).astype(jnp.float32),
-                                bits_n, g=group)
-    valid = flat(state) == VALID                        # [n]
-
-    qh = q.reshape(h, gq, d).astype(jnp.float32)
-    s = jnp.einsum("hgd,nhd->hgn", qh, k) / jnp.sqrt(float(d))
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
-    m = jnp.max(s, axis=-1, keepdims=True)
-    p = jnp.exp(s - m)
-    p = jnp.where(valid[None, None, :], p, 0.0)
-    l = jnp.sum(p, axis=-1, keepdims=True)
-    out = jnp.einsum("hgn,nhd->hgd", p / jnp.maximum(l, 1e-30), v)
-    return out.reshape(hq, d), m, l
+    qh = q.reshape(1, h, gq, d)
+    state = jnp.take(slot_state, block_table, axis=0)[None]
+    bits = jnp.take(slot_bits, block_table, axis=0)[None]
+    out, m, l = ct_paged_attention_batched_ref(
+        qh, k_codes, v_codes, k_scales, v_scales, state, bits,
+        block_table[None], group=group)
+    return out[0].reshape(hq, d), m[0], l[0]
 
 
 def merge_flash_ref(out_a, m_a, l_a, out_b, m_b, l_b):
@@ -98,20 +120,40 @@ def flash_prefill_ref(q, k, v, *, causal: bool = True,
     q: [S, Hq, D], k/v: [S, H, D].  GQA broadcast; optional sliding window.
     Returns [S, Hq, D] f32.
     """
+    out, _, _ = flash_prefill_stats_ref(q, k, v, causal=causal,
+                                        window=window)
+    return out
+
+
+def flash_prefill_stats_ref(q, k, v, *, causal: bool = True, window: int = 0,
+                            kv_valid=None
+                            ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Like :func:`flash_prefill_ref` but also returns per-query flash stats
+    (m, l) [S, Hq, 1] so the chunked-prefill path can merge this partition
+    with the paged-pool partition.  ``kv_valid`` optionally masks padded kv
+    positions ([T] bool)."""
     s_len, hq, d = q.shape
-    _, h, _ = k.shape
+    t_len, h, _ = k.shape
     gq = hq // h
     qh = q.reshape(s_len, h, gq, d).astype(jnp.float32)
     scores = jnp.einsum("shgd,thd->hgst", qh, k.astype(jnp.float32))
     scores = scores / jnp.sqrt(float(d))
     i = jnp.arange(s_len)[:, None]
-    j = jnp.arange(s_len)[None, :]
-    mask = jnp.ones((s_len, s_len), bool)
+    j = jnp.arange(t_len)[None, :]
+    mask = jnp.ones((s_len, t_len), bool)
     if causal:
-        mask &= j <= i
+        mask &= j <= i + (t_len - s_len)
     if window > 0:
-        mask &= j > i - window
+        mask &= j > i + (t_len - s_len) - window
+    if kv_valid is not None:
+        mask &= kv_valid[None, :]
     scores = jnp.where(mask[None, None], scores, NEG_INF)
-    p = jax.nn.softmax(scores, axis=-1)
-    out = jnp.einsum("hgst,thd->shgd", p, v.astype(jnp.float32))
-    return out.reshape(s_len, hq, d)
+    m = jnp.max(scores, axis=-1, keepdims=True)            # [h,g,s,1]
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask[None, None], p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    out = jnp.einsum("hgst,thd->shgd", p / jnp.maximum(l, 1e-30),
+                     v.astype(jnp.float32))
+    # [h,g,s,1] -> [s, hq, 1]
+    to_q = lambda a: a[..., 0].transpose(2, 0, 1).reshape(s_len, hq, 1)
+    return out.reshape(s_len, hq, d), to_q(m), to_q(l)

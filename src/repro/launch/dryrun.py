@@ -187,7 +187,8 @@ def run_cell(arch: str, shape_name: str, variant: str, mesh_kind: str,
             t_compile = time.time() - t0 - t_lower
             mem = compiled.memory_analysis()
             print(compiled.memory_analysis())      # proves it fits
-            cost = compiled.cost_analysis()
+            from repro.roofline.analysis import xla_cost_analysis
+            cost = xla_cost_analysis(compiled)
             print({k: cost.get(k) for k in ("flops", "bytes accessed")})
             terms = terms_from_compiled(
                 compiled, arch=arch, shape=shape_name, variant=variant,

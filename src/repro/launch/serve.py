@@ -27,6 +27,10 @@ def main():
     ap.add_argument("--tau", type=int, default=16)
     ap.add_argument("--group", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--backend", default="auto",
+                    choices=("auto", "reference", "kernel"),
+                    help="decode attention path: dense dequant (reference) "
+                         "or the ct_paged_attention kernel")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -36,7 +40,7 @@ def main():
                       max_segments=256, kmeans_iters=4)
     cfg = ServeConfig(model=mcfg, thinkv=tk, max_seqs=args.slots,
                       temperature=args.temperature)
-    eng = ThinKVEngine(cfg)
+    eng = ThinKVEngine(cfg, backend=args.backend)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, mcfg.vocab_size, args.prompt_len)
                for _ in range(args.requests)]

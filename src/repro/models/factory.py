@@ -104,11 +104,13 @@ def input_specs(cfg: ModelConfig, shape: InputShape,
         tk = ThinKVConfig(token_budget=thinkv_budget)
         dims = make_dims(tk, n_attn, hkv, hd)
         sg = dims.scale_groups
+        nb, bs = dims.NB, dims.BS
         batch.update({
-            "k_codes": sd((b, n_attn, dims.NS, hkv, hd), jnp.uint8),
-            "v_codes": sd((b, n_attn, dims.NS, hkv, hd), jnp.uint8),
-            "k_scales": sd((b, n_attn, dims.NS, hkv, sg), bf16),
-            "v_scales": sd((b, n_attn, dims.NS, hkv, sg), bf16),
+            # paged pool planes [.., NB, BS, ..] — the kernel's HBM layout
+            "k_codes": sd((b, n_attn, nb, bs, hkv, hd), jnp.uint8),
+            "v_codes": sd((b, n_attn, nb, bs, hkv, hd), jnp.uint8),
+            "k_scales": sd((b, n_attn, nb, bs, hkv, sg), bf16),
+            "v_scales": sd((b, n_attn, nb, bs, hkv, sg), bf16),
             "slot_state": sd((b, n_attn, dims.NS), jnp.uint8),
             "slot_bits": sd((b, n_attn, dims.NS), jnp.uint8),
             "buf_k": sd((b, n_attn, dims.G, hkv, hd), bf16),

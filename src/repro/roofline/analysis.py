@@ -40,6 +40,22 @@ _COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
 _SHAPE_RE = re.compile(r"\b([a-z0-9]+)\[([0-9,]*)\]")
 
 
+def xla_cost_analysis(compiled) -> Dict[str, float]:
+    """Normalized ``Compiled.cost_analysis()`` across JAX versions.
+
+    Older JAX returns ``[{...}]`` (one dict per partition), newer versions
+    return the dict directly; some builds return ``None`` for backends with
+    no cost model.  Always returns a (possibly empty) ``{metric: value}``
+    dict so callers can index by name.
+    """
+    cost = compiled.cost_analysis()
+    if cost is None:
+        return {}
+    if isinstance(cost, (list, tuple)):
+        cost = cost[0] if cost else {}
+    return dict(cost)
+
+
 def _shape_bytes(dtype: str, dims: str) -> int:
     n = 1
     for d in dims.split(","):

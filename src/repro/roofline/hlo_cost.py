@@ -326,7 +326,12 @@ class HloCostModel:
         res_elems, res_bytes = _shape_elems_bytes(op.shape)
 
         # ---- bytes (only outside fusions) --------------------------------
-        if top and kind not in _NO_BYTES and kind != "fusion":
+        # control-flow wrappers (call/while/conditional/fusion) contribute
+        # their CALLED computations' bytes, not a boundary read/write — the
+        # CPU backend wraps parallelized elementwise ops in `call`s, and
+        # counting the call boundary double-counts every wrapped op
+        if top and kind not in _NO_BYTES and kind not in (
+                "fusion", "call", "while", "conditional", "async-start"):
             if kind in ("slice", "dynamic-slice"):
                 # reads only the sliced window, writes the result
                 b = 2 * res_bytes

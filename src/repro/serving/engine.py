@@ -1,23 +1,37 @@
 """ThinKV serving engine: continuous batching + the full paper loop.
 
-Per decode tick (vmapped over request slots):
-  1. embed the slot's current token;
+The engine owns a SHARED global block pool (``core.ct_cache.GlobalPool``):
+one physical set of quantized planes in paged ``[L, NP, BS, H, ...]``
+layout, with per-request per-layer block tables mapping logical CT blocks
+to physical blocks.  Blocks freed by TBE eviction (or request retirement)
+return to the global free list and are reused by other requests.
+
+Per decode tick (one jitted call for every request slot):
+  1. embed each slot's current token;
   2. scan layers: project qkv (RoPE'd), write KV into the TBQ buffer plane,
-     attend over (CT pool ∪ buffer ∪ current token) and measure attention
-     sparsity for the calibrated layers;
-  3. `advance_after_write`: group commit (TBQ quantize + CT slot reuse) +
-     budget eviction every g tokens, thought refresh + TBE every tau;
+     attend over (CT pool ∪ buffer) and measure attention sparsity for the
+     calibrated layers.  Two attention backends:
+       * ``backend="kernel"``   — ONE batched ``ct_paged_attention`` launch
+         per layer reads only the quantized pool through the block tables
+         (compiled on TPU, interpret mode on CPU) and is flash-merged with
+         the fp TBQ-buffer attention via the kernel's (m, l) stats;
+       * ``backend="reference"``— the dense path: gather the request's
+         view, dequantize the entire pool to fp, joint softmax (the seed
+         behaviour, kept as the parity oracle);
+  3. ``engine_advance``: group commit (TBQ quantize + CT slot reuse +
+     physical block mapping) + budget eviction every g tokens, thought
+     refresh + TBE every tau — pool gather/scatter happens ONLY then;
   4. sample the next token.
 
-Prompt prefill streams through the same tick (prefill tokens are R-type —
-segment 0 opens as REASONING, paper Sec. 6.1).  Host-side, the Scheduler
-admits queued requests into retired slots and the engine resets those
-slots' pools in place.
+Prompts no longer trickle one token per tick: admission runs a CHUNKED
+BATCHED PREFILL (chunks of g tokens, ``kernels/flash_prefill`` semantics
+for the intra-chunk causal part, the paged kernel for the frozen-pool
+part), committing each full chunk as one TBQ group — mathematically the
+same cache evolution as the token-by-token loop (chunks align with group
+commits; tau % g == 0 keeps refreshes on chunk boundaries).
 """
 from __future__ import annotations
 
-import dataclasses
-import functools
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -25,55 +39,84 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 
-from repro.config import ArchFamily, ModelConfig, ServeConfig, ThinKVConfig
+from repro.config import ArchFamily, ServeConfig
 from repro.core import ct_cache as CC
 from repro.core.thoughts import row_sparsity
+from repro.kernels import ops as K
+from repro.kernels import ref as KR
 from repro.layers import attention as A
 from repro.layers import embedding as E
 from repro.layers.common import softcap
 from repro.layers.mlp import mlp
 from repro.layers.moe import moe_apply
 from repro.layers.norms import rmsnorm
+from repro.layers.rope import apply_rope, rope_freqs
 from repro.serving.scheduler import Request, Scheduler
 
 NEG_INF = -1e30
 
 
-def _attend_and_stats(dims, q, k_pool, v_pool, valid_pool, buf_k, buf_v,
-                      n_buf):
-    """Attention over pool ∪ buffer[:n_buf]; returns (out, sparsity)."""
-    k = jnp.concatenate([k_pool, buf_k.astype(jnp.float32)], 0)
-    v = jnp.concatenate([v_pool, buf_v.astype(jnp.float32)], 0)
+def _joint_attend(q, k_pool, v_pool, valid_pool, buf_k, buf_v, buf_mask):
+    """Dense joint attention over (pool ∪ buffer/chunk) with probs.
+
+    q [T, Hq, D]; k_pool/v_pool [NS, H, D]; buf [G, H, D];
+    valid_pool [NS]; buf_mask [T, G] per-query buffer visibility.
+    Returns (out [T, Hq, D], probs [T, H, gq, NS+G], valid [T, NS+G]).
+    """
+    t, hq, hd = q.shape
+    h = k_pool.shape[1]
+    gq = hq // h
+    k = jnp.concatenate([k_pool, buf_k.astype(k_pool.dtype)], 0)
+    v = jnp.concatenate([v_pool, buf_v.astype(v_pool.dtype)], 0)
     valid = jnp.concatenate(
-        [valid_pool, jnp.arange(dims.G) < n_buf], 0)
-    hq, hd = q.shape
-    hkv = k.shape[1]
-    gq = hq // hkv
-    qh = q.reshape(hkv, gq, hd).astype(jnp.float32)
-    s = jnp.einsum("hgd,nhd->hgn", qh, k) / jnp.sqrt(float(hd))
-    s = jnp.where(valid[None, None, :], s, NEG_INF)
+        [jnp.broadcast_to(valid_pool[None], (t, valid_pool.shape[0])),
+         buf_mask], 1)                                       # [T, NS+G]
+    qh = q.reshape(t, h, gq, hd).astype(jnp.float32)
+    s = jnp.einsum("thgd,nhd->thgn", qh,
+                   k.astype(jnp.float32)) / jnp.sqrt(float(hd))
+    s = jnp.where(valid[:, None, None, :], s, NEG_INF)
     p = jax.nn.softmax(s, axis=-1)
-    p = jnp.where(valid[None, None, :], p, 0.0)
-    out = jnp.einsum("hgn,nhd->hgd", p, v).reshape(hq, hd)
-    # paper App. C.2: maxpool over group, renormalize, measure
-    pooled = jnp.max(p, axis=1)
-    pooled = jnp.where(valid[None, :], pooled, 0.0)
-    pooled = pooled / jnp.maximum(
-        jnp.sum(pooled, -1, keepdims=True), 1e-30)
-    spars = jnp.mean(row_sparsity(
-        pooled, jnp.broadcast_to(valid[None, :], pooled.shape)))
-    return out.astype(q.dtype), spars
+    p = jnp.where(valid[:, None, None, :], p, 0.0)
+    out = jnp.einsum("thgn,nhd->thgd", p,
+                     v.astype(jnp.float32)).reshape(t, hq, hd)
+    return out.astype(q.dtype), p, valid
+
+
+def _probs_sparsity(p_t, valid_t):
+    """Paper App. C.2 sparsity from one query's probs [H, gq, N]."""
+    pooled = jnp.max(p_t, axis=1)
+    pooled = jnp.where(valid_t[None, :], pooled, 0.0)
+    pooled = pooled / jnp.maximum(jnp.sum(pooled, -1, keepdims=True), 1e-30)
+    return jnp.mean(row_sparsity(
+        pooled, jnp.broadcast_to(valid_t[None, :], pooled.shape)))
 
 
 class ThinKVEngine:
-    """Decoder-only LM serving with ThinKV (dense / MoE / VLM backbones)."""
+    """Decoder-only LM serving with ThinKV (dense / MoE / VLM backbones).
+
+    ``backend``:
+      * ``"kernel"``    — paged-attention kernel decode path (compiled on
+        TPU, interpret mode elsewhere);
+      * ``"reference"`` — dense-dequant XLA path (parity oracle);
+      * ``"auto"``      — kernel on TPU, reference on CPU.
+    """
 
     def __init__(self, cfg: ServeConfig, params=None,
                  lstar: Optional[Sequence[int]] = None,
-                 kmeans_on_host: bool = False):
+                 backend: str = "auto", pool_blocks: Optional[int] = None,
+                 record_logits: bool = False):
         assert cfg.model.family in (ArchFamily.DENSE, ArchFamily.MOE,
                                     ArchFamily.VLM), \
             "engine demo covers decoder-only backbones (the paper's scope)"
+        assert cfg.thinkv.refresh_interval % cfg.thinkv.group_size == 0, \
+            "chunked prefill needs tau % g == 0 (refreshes on commits)"
+        if backend == "auto":
+            backend = "kernel" if jax.default_backend() == "tpu" \
+                else "reference"
+        assert backend in ("kernel", "reference"), backend
+        self.backend = backend
+        # interpret-mode kernels off-TPU; compiled on TPU
+        self._force = None if jax.default_backend() == "tpu" else "pallas"
         self.cfg = cfg
         self.mcfg = cfg.model
         self.tk = cfg.thinkv
@@ -84,81 +127,305 @@ class ThinKVEngine:
         self.dims = CC.make_dims(self.tk, cfg.model.num_layers,
                                  cfg.model.num_kv_heads, cfg.model.head_dim)
         n_lstar = min(self.tk.num_calib_layers, cfg.model.num_layers)
-        self.lstar = np.asarray(lstar if lstar is not None
-                                else range(n_lstar))
+        self.lstar = tuple(int(x) for x in (
+            lstar if lstar is not None else range(n_lstar)))
         self.scheduler = Scheduler(cfg.max_seqs)
+        self.num_pool_blocks = pool_blocks if pool_blocks is not None \
+            else cfg.max_seqs * self.dims.NB
+        self.pool = CC.init_global_pool(self.dims, self.num_pool_blocks)
+        self.tables = jnp.broadcast_to(
+            CC.init_block_table(self.dims)[None],
+            (cfg.max_seqs, self.dims.L, self.dims.NB)).copy()
         self.caches = jax.vmap(lambda _: CC.init_cache(self.dims))(
             jnp.arange(cfg.max_seqs))
         self._tick = jax.jit(self._make_tick())
+        self._prefill_chunk = jax.jit(self._make_prefill_chunk())
         self._reset_slot = jax.jit(self._make_reset())
-        self.metrics: Dict[str, float] = {"ticks": 0, "tokens": 0}
+        self.record_logits = record_logits
+        self.trace: List[Dict] = []          # per-call logits (for parity)
+        self.metrics: Dict[str, float] = {"ticks": 0, "tokens": 0,
+                                          "prefill_tokens": 0,
+                                          "prefill_chunks": 0}
+
+    # ------------------------------------------------------------------
+    # attention helpers shared by tick + prefill
+    # ------------------------------------------------------------------
+
+    def _dense_layer(self, q, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
+                     table_l, buf_k, buf_v, buf_mask):
+        """Reference path for ONE slot, one layer: gather the request's
+        view through its table, dense-dequant, joint softmax with probs.
+
+        q [T, Hq, D]; planes [NP, BS, ...]; state/bits [NS]; table [NB].
+        """
+        safe = jnp.maximum(table_l, 0)
+        flat = lambda a: a[safe].reshape(-1, *a.shape[2:])
+        bits = bits_l.astype(jnp.int32)[:, None, None]
+        from repro.core import quantization as Q
+        kd = Q.dequantize_by_bitcode(flat(kc_l),
+                                     flat(ks_l).astype(jnp.float32), bits)
+        vd = Q.dequantize_by_bitcode(flat(vc_l),
+                                     flat(vs_l).astype(jnp.float32), bits)
+        valid = state_l == CC.VALID
+        return _joint_attend(q, kd, vd, valid, buf_k, buf_v, buf_mask)
+
+    def _kernel_layer_batched(self, q, kc_l, vc_l, ks_l, vs_l, state_l,
+                              bits_l, table_l, bk_l, bv_l, n_buf):
+        """Kernel path for ALL slots, one layer: one batched paged launch
+        merged with the fp buffer attention via flash stats.
+
+        q [R, Hq, D]; planes [NP, BS, ...]; state/bits [R, NS];
+        table [R, NB]; buffers [R, G, H, D]; n_buf [R].
+        """
+        dims = self.dims
+        r, hq, hd = q.shape
+        h = dims.H
+        gq = hq // h
+        qh = q.reshape(r, h, gq, hd).astype(jnp.float32)
+        shp = (r, dims.NB, dims.BS)
+        o_p, m_p, l_p = K.paged_decode_attention_batched(
+            qh, kc_l, vc_l, ks_l, vs_l, state_l.reshape(shp),
+            bits_l.reshape(shp), jnp.maximum(table_l, 0),
+            force=self._force)
+
+        def merge_one(o_p_r, m_p_r, l_p_r, q_r, bk_r, bv_r, nb_r):
+            o_b, m_b, l_b = K.buffer_attention(q_r.astype(jnp.float32),
+                                               bk_r, bv_r, nb_r)
+            return KR.merge_flash_ref(o_p_r.reshape(hq, hd), m_p_r, l_p_r,
+                                      o_b, m_b, l_b)
+
+        out = jax.vmap(merge_one)(o_p, m_p, l_p, q, bk_l, bv_l, n_buf)
+        return out.astype(q.dtype)
 
     # ------------------------------------------------------------------
     def _make_tick(self):
         cfg, tk, dims = self.mcfg, self.tk, self.dims
         lstar = jnp.asarray(self.lstar)
+        backend = self.backend
+        R = self.cfg.max_seqs
 
-        def one_slot(params, cache: CC.CTCache, token, active, rng):
-            pos = cache.num_tokens
-            h = E.embed(params["embed"], token[None], cfg)[0]
+        def tick(params, pool, tables, caches, tokens, active, rng):
+            h = jax.vmap(lambda t: E.embed(params["embed"], t[None],
+                                           cfg)[0])(tokens)      # [R, Dm]
+            pos = caches.num_tokens                              # [R]
+            buf_len = caches.buf_len                             # [R]
+            # slots whose refresh fires in THIS tick's engine_advance
+            refresh_due = active & \
+                ((caches.num_tokens + 1) % tk.refresh_interval == 0)
 
             def body(carry, inp):
                 h, buf_k, buf_v = carry
-                lidx, lp = inp
+                lidx, lp, kc_l, vc_l, ks_l, vs_l = inp
                 x1 = rmsnorm(lp["norm1"], h, cfg.norm_eps)
-                q, k, v = A.qkv_decode(lp["attn"], x1, cfg, pos)
-                bk_l = jax.lax.dynamic_update_index_in_dim(
-                    buf_k[lidx], k.astype(buf_k.dtype), cache.buf_len, 0)
-                bv_l = jax.lax.dynamic_update_index_in_dim(
-                    buf_v[lidx], v.astype(buf_v.dtype), cache.buf_len, 0)
-                buf_k = buf_k.at[lidx].set(bk_l)
-                buf_v = buf_v.at[lidx].set(bv_l)
-                bits = cache.slot_bits[lidx].astype(jnp.int32)[:, None, None]
-                from repro.core import quantization as Q
-                kd = Q.dequantize_by_bitcode(
-                    cache.k_codes[lidx],
-                    cache.k_scales[lidx].astype(jnp.float32), bits)
-                vd = Q.dequantize_by_bitcode(
-                    cache.v_codes[lidx],
-                    cache.v_scales[lidx].astype(jnp.float32), bits)
-                valid = cache.slot_state[lidx] == CC.VALID
-                o, spars = _attend_and_stats(dims, q, kd, vd, valid, bk_l,
-                                             bv_l, cache.buf_len + 1)
+                q, k, v = jax.vmap(
+                    lambda xx, pp: A.qkv_decode(lp["attn"], xx, cfg, pp))(
+                        x1, pos)                                 # [R,Hq,hd]
+
+                def upd(b_r, val_r, bl):
+                    row = jax.lax.dynamic_update_index_in_dim(
+                        b_r[lidx], val_r.astype(b_r.dtype), bl, 0)
+                    return b_r.at[lidx].set(row)
+                buf_k = jax.vmap(upd)(buf_k, k, buf_len)
+                buf_v = jax.vmap(upd)(buf_v, v, buf_len)
+                bk_l = buf_k[:, lidx]                            # [R,G,H,hd]
+                bv_l = buf_v[:, lidx]
+                state_l = caches.slot_state[:, lidx]             # [R, NS]
+                bits_l = caches.slot_bits[:, lidx]
+                table_l = tables[:, lidx]                        # [R, NB]
+                n_buf = buf_len + 1
+                g = dims.G
+                buf_mask = jnp.arange(g)[None] < n_buf[:, None]  # [R, G]
+
+                is_calib = jnp.any(lidx == lstar)
+
+                def dense_all():
+                    def one(q_r, st_r, bt_r, tb_r, bk_r, bv_r, bm_r):
+                        o, p, valid = self._dense_layer(
+                            q_r[None], kc_l, vc_l, ks_l, vs_l, st_r, bt_r,
+                            tb_r, bk_r, bv_r, bm_r[None])
+                        return o[0], _probs_sparsity(p[0], valid[0])
+                    return jax.vmap(one)(q, state_l, bits_l, table_l,
+                                         bk_l, bv_l, buf_mask)
+
+                if backend == "kernel":
+                    o = self._kernel_layer_batched(
+                        q, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
+                        table_l, bk_l, bv_l, n_buf)
+                    # sparsity is only CONSUMED at tau refresh boundaries —
+                    # run the dense probs pass for calibrated layers only on
+                    # ticks where some slot is about to refresh, keeping the
+                    # kernel path free of per-token dense-dequant traffic
+                    spars = jax.lax.cond(
+                        is_calib & jnp.any(refresh_due),
+                        lambda: dense_all()[1],
+                        lambda: jnp.zeros((R,), jnp.float32))
+                else:
+                    o, spars = dense_all()
+
+                h = h + jax.vmap(lambda oo: A.out_proj(lp["attn"], oo))(o)
+                x2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
+                if cfg.moe is not None:
+                    m, _ = moe_apply(lp["moe"], x2[:, None], cfg)
+                    m = m[:, 0]
+                else:
+                    m = mlp(lp["mlp"], x2, cfg.act, cfg.mlp_gated)
+                return (h + m, buf_k, buf_v), spars
+
+            (h, buf_k, buf_v), spars_all = jax.lax.scan(
+                body, (h, caches.buf_k, caches.buf_v),
+                (jnp.arange(cfg.num_layers), params["layers"],
+                 pool.view.k_codes, pool.view.v_codes,
+                 pool.view.k_scales, pool.view.v_scales))
+            caches = caches.replace(buf_k=buf_k, buf_v=buf_v)
+            sparsity = jnp.mean(spars_all[lstar], axis=0)        # [R]
+
+            # cache maintenance against the shared pool: sequential over
+            # slots (disjoint physical blocks; allocation is serialized)
+            def adv(pool, xs):
+                cache_r, table_r, spars_r, active_r = xs
+                pool, table_r, cache_r = CC.engine_advance(
+                    tk, dims, pool, table_r, cache_r, spars_r, active_r)
+                return pool, (table_r, cache_r)
+
+            pool, (tables_out, caches) = jax.lax.scan(
+                adv, pool, (caches, tables, sparsity, active))
+
+            h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+            logits = softcap(E.unembed(params["embed"], h, cfg),
+                             cfg.logit_softcap)                  # [R, V]
+            if self.cfg.temperature > 0:
+                rngs = jax.random.split(rng, R)
+                nxt = jax.vmap(lambda r, lg: jax.random.categorical(
+                    r, lg / self.cfg.temperature))(rngs, logits)
+            else:
+                nxt = jnp.argmax(logits, axis=-1)
+            return (nxt.astype(jnp.int32), pool, tables_out, caches,
+                    sparsity, logits)
+
+        return tick
+
+    # ------------------------------------------------------------------
+    def _make_prefill_chunk(self):
+        cfg, tk, dims = self.mcfg, self.tk, self.dims
+        lstar = jnp.asarray(self.lstar)
+        backend = self.backend
+        C = dims.G                      # chunk == quantization group
+
+        def chunk_step(params, pool, table, cache, tokens_c, n_valid):
+            """Process up to C prompt tokens of ONE slot in a single
+            forward (buffer starts empty: chunks align with commits)."""
+            start = cache.num_tokens
+            positions = start + jnp.arange(C, dtype=jnp.int32)
+            tok_valid = jnp.arange(C) < n_valid
+            refresh_due = ((start + n_valid) % tk.refresh_interval) == 0
+            h = E.embed(params["embed"], tokens_c, cfg)          # [C, Dm]
+
+            def body(carry, inp):
+                h, buf_k, buf_v = carry
+                lidx, lp, kc_l, vc_l, ks_l, vs_l = inp
+                x1 = rmsnorm(lp["norm1"], h, cfg.norm_eps)
+                q, k, v = A._project_qkv(lp["attn"], x1, cfg)    # [C,*,hd]
+                if cfg.position_embedding.value == "rope":
+                    cos, sin = rope_freqs(positions, cfg.head_dim,
+                                          cfg.rope_theta)
+                    q = apply_rope(q, cos, sin)
+                    k = apply_rope(k, cos, sin)
+                km = jnp.where(tok_valid[:, None, None],
+                               k, 0.0).astype(buf_k.dtype)
+                vm = jnp.where(tok_valid[:, None, None],
+                               v, 0.0).astype(buf_v.dtype)
+                buf_k = buf_k.at[lidx].set(km)
+                buf_v = buf_v.at[lidx].set(vm)
+
+                state_l = cache.slot_state[lidx]                 # [NS]
+                bits_l = cache.slot_bits[lidx]
+                table_l = table[lidx]                            # [NB]
+                # query t sees chunk tokens j <= t (self-inclusive)
+                buf_mask = (jnp.arange(C)[None, :] <=
+                            jnp.arange(C)[:, None]) & tok_valid[None, :]
+
+                is_calib = jnp.any(lidx == lstar)
+
+                def dense():
+                    o, p, valid = self._dense_layer(
+                        q, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
+                        table_l, km, vm, buf_mask)
+                    last = jnp.clip(n_valid - 1, 0, C - 1)
+                    return o, _probs_sparsity(p[last], valid[last])
+
+                if backend == "kernel":
+                    o = self._chunk_kernel(q, kc_l, vc_l, ks_l, vs_l,
+                                           state_l, bits_l, table_l,
+                                           km, vm, tok_valid)
+                    # dense probs only when this chunk's end is a tau
+                    # boundary (the only place sparsity is consumed)
+                    spars = jax.lax.cond(is_calib & refresh_due,
+                                         lambda: dense()[1],
+                                         lambda: jnp.float32(0))
+                else:
+                    o, spars = dense()
+
                 h = h + A.out_proj(lp["attn"], o)
                 x2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
                 if cfg.moe is not None:
-                    m, _ = moe_apply(lp["moe"], x2[None, None], cfg)
-                    m = m[0, 0]
+                    m, _ = moe_apply(lp["moe"], x2[None], cfg)
+                    m = m[0]
                 else:
                     m = mlp(lp["mlp"], x2, cfg.act, cfg.mlp_gated)
                 return (h + m, buf_k, buf_v), spars
 
             (h, buf_k, buf_v), spars_all = jax.lax.scan(
                 body, (h, cache.buf_k, cache.buf_v),
-                (jnp.arange(cfg.num_layers), params["layers"]))
+                (jnp.arange(cfg.num_layers), params["layers"],
+                 pool.view.k_codes, pool.view.v_codes,
+                 pool.view.k_scales, pool.view.v_scales))
             cache = cache.replace(buf_k=buf_k, buf_v=buf_v)
             sparsity = jnp.mean(spars_all[lstar])
-            new_cache = CC.advance_after_write(tk, dims, cache, sparsity)
-            cache = jax.tree.map(
-                lambda new, old: jnp.where(active, new, old), new_cache,
-                cache)
+
+            pool, table, cache = CC.engine_advance(
+                tk, dims, pool, table, cache, sparsity,
+                jnp.bool_(True), n_new=n_valid)
 
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
-            logits = softcap(E.unembed(params["embed"], h, cfg),
+            last = jnp.clip(n_valid - 1, 0, C - 1)
+            logits = softcap(E.unembed(params["embed"], h[last], cfg),
                              cfg.logit_softcap)
-            if self.cfg.temperature > 0:
-                nxt = jax.random.categorical(
-                    rng, logits / self.cfg.temperature)
-            else:
-                nxt = jnp.argmax(logits)
-            return nxt.astype(jnp.int32), cache, sparsity
+            return pool, table, cache, logits
 
-        def tick(params, caches, tokens, active, rng):
-            rngs = jax.random.split(rng, tokens.shape[0])
-            return jax.vmap(one_slot, in_axes=(None, 0, 0, 0, 0))(
-                params, caches, tokens, active, rngs)
+        return chunk_step
 
-        return tick
+    def _chunk_kernel(self, q, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
+                      table_l, k_chunk, v_chunk, tok_valid):
+        """Kernel path for one prefill chunk: every chunk query attends the
+        FROZEN pool (queries fold into the kernel's q-group axis) merged
+        with the causal intra-chunk flash part."""
+        dims = self.dims
+        c, hq, hd = q.shape
+        h = dims.H
+        gq = hq // h
+        # [C, Hq, hd] -> [1, H, C*gq, hd]
+        qh = q.reshape(c, h, gq, hd).transpose(1, 0, 2, 3) \
+            .reshape(1, h, c * gq, hd).astype(jnp.float32)
+        shp = (1, dims.NB, dims.BS)
+        o_p, m_p, l_p = K.paged_decode_attention_batched(
+            qh, kc_l, vc_l, ks_l, vs_l, state_l.reshape(shp),
+            bits_l.reshape(shp), jnp.maximum(table_l, 0)[None],
+            force=self._force)
+        # back to per-query layout [C, Hq, ...]
+        unfold = lambda a, d: a[0].reshape(h, c, gq, d).transpose(1, 0, 2, 3) \
+            .reshape(c, hq, d)
+        o_p = unfold(o_p, hd)
+        m_p = unfold(m_p, 1)
+        l_p = unfold(l_p, 1)
+        # causal intra-chunk partition (flash_prefill semantics + stats).
+        # chunk == g <= 16 tokens, so this stays on the reference oracle
+        # (kv_valid masking); large 128-multiple chunks through the
+        # compiled flash_prefill kernel are a ROADMAP open item
+        o_c, m_c, l_c = K.prefill_attention_stats(
+            q.astype(jnp.float32), k_chunk.astype(jnp.float32),
+            v_chunk.astype(jnp.float32), causal=True, kv_valid=tok_valid)
+        return KR.merge_flash_ref(o_p, m_p, l_p, o_c, m_c,
+                                  l_c).astype(q.dtype)
 
     def _make_reset(self):
         dims = self.dims
@@ -170,6 +437,9 @@ class ThinKVEngine:
         return reset
 
     # ------------------------------------------------------------------
+    # host-side loop
+    # ------------------------------------------------------------------
+
     def submit(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
                eos_token: Optional[int] = None):
         for i, p in enumerate(prompts):
@@ -177,54 +447,135 @@ class ThinKVEngine:
                 uid=i, prompt=np.asarray(p, np.int32),
                 max_new_tokens=max_new_tokens, eos_token=eos_token))
 
+    def _admission_gate(self):
+        """Admission-control closure for ONE admit() sweep.
+
+        A request can claim up to NB physical blocks per layer.  Admit only
+        while the pool can worst-case back every occupied slot's REMAINING
+        demand (NB - already-mapped) plus NB for each request admitted
+        earlier in this same sweep — a single stale free-count would
+        over-admit an oversubscribed pool (blocks are claimed lazily at
+        commits, not at admission)."""
+        dims = self.dims
+        free = np.asarray(jnp.sum(self.pool.free, axis=1))       # [L]
+        tables = np.asarray(self.tables)                         # [R, L, NB]
+        occupied = np.array([not s.free for s in self.scheduler.slots])
+        mapped = (tables >= 0).sum(axis=2)                       # [R, L]
+        demand = ((dims.NB - mapped) * occupied[:, None]).sum(0)  # [L]
+        state = {"reserved": 0}
+
+        def gate() -> bool:
+            head = free - demand - state["reserved"] * dims.NB
+            ok = bool(np.min(head) >= dims.NB)
+            if ok:
+                state["reserved"] += 1
+            return ok
+        return gate
+
+    def _release_slot(self, i: int):
+        self.pool = CC.release_blocks(self.dims, self.pool, self.tables[i])
+        self.tables = self.tables.at[i].set(CC.init_block_table(self.dims))
+        self.caches = self._reset_slot(self.caches, jnp.int32(i))
+
+    def _prefill(self, i: int, prompt: np.ndarray) -> np.ndarray:
+        """Chunked batched prefill of one slot; returns last-token logits."""
+        dims = self.dims
+        C = dims.G
+        cache_i = jax.tree.map(lambda x: x[i], self.caches)
+        table_i = self.tables[i]
+        logits = None
+        for s0 in range(0, len(prompt), C):
+            chunk = prompt[s0:s0 + C]
+            n_valid = len(chunk)
+            padded = np.zeros(C, np.int32)
+            padded[:n_valid] = chunk
+            self.pool, table_i, cache_i, logits = self._prefill_chunk(
+                self.params, self.pool, table_i, cache_i,
+                jnp.asarray(padded), jnp.int32(n_valid))
+            self.metrics["prefill_chunks"] += 1
+        self.metrics["prefill_tokens"] += len(prompt)
+        self.tables = self.tables.at[i].set(table_i)
+        self.caches = jax.tree.map(
+            lambda all_, one: all_.at[i].set(one), self.caches, cache_i)
+        if self.record_logits:
+            self.trace.append({"kind": "prefill", "slot": i,
+                               "logits": np.asarray(logits)})
+        return np.asarray(logits)
+
+    def _finish_token(self, slot, tok: int, feed: np.ndarray) -> bool:
+        """Book-keeping for one generated token; returns done."""
+        req = slot.request
+        req.output.append(tok)
+        slot.tokens_out += 1
+        feed[slot.idx] = tok
+        done = slot.tokens_out >= req.max_new_tokens or \
+            (req.eos_token is not None and tok == req.eos_token)
+        if done:
+            req.stats = self.slot_stats(slot.idx)
+            self.scheduler.retire(slot)
+            self._release_slot(slot.idx)
+        return done
+
     def run(self, max_ticks: int = 10_000) -> List[Request]:
         """Continuous-batching loop until all submitted requests finish."""
         sch = self.scheduler
         rng = jax.random.PRNGKey(self.cfg.seed)
-        # per-slot host state
         feed = np.zeros(self.cfg.max_seqs, np.int32)
-        prefill_pos = np.zeros(self.cfg.max_seqs, np.int64)
-
-        for slot in sch.admit():
-            feed[slot.idx] = slot.request.prompt[0]
-            prefill_pos[slot.idx] = 1
         t0 = time.perf_counter()
+
+        def admit_and_prefill():
+            nonlocal rng
+            # keep admitting while prefill can immediately retire requests
+            while True:
+                if not sch.queue or all(not s.free for s in sch.slots):
+                    break       # gate construction syncs device state —
+                                # skip it on the steady-state hot path
+                newly = sch.admit(self._admission_gate())
+                if not newly:
+                    break
+                for slot in newly:
+                    logits = self._prefill(slot.idx, slot.request.prompt)
+                    if self.cfg.temperature > 0:
+                        rng, sub = jax.random.split(rng)
+                        tok = int(jax.random.categorical(
+                            sub, jnp.asarray(logits) / self.cfg.temperature))
+                    else:
+                        tok = int(np.argmax(logits))
+                    self._finish_token(slot, tok, feed)
+
+        admit_and_prefill()
         for _ in range(max_ticks):
             if not sch.busy():
                 break
             active = np.array([not s.free for s in sch.slots])
+            if not active.any():
+                admit_and_prefill()
+                if sch.queue and not any(not s.free for s in sch.slots):
+                    # nothing active, nothing admitted, requests waiting:
+                    # with no in-flight request the pool state can never
+                    # change, so admission can never succeed — fail loudly
+                    # instead of spinning max_ticks and dropping requests
+                    raise RuntimeError(
+                        f"admission livelock: {len(sch.queue)} queued "
+                        f"request(s) but the global pool "
+                        f"({self.num_pool_blocks} blocks) cannot back a "
+                        f"full per-request allocation of {self.dims.NB} "
+                        f"blocks/layer")
+                continue
             rng, sub = jax.random.split(rng)
-            nxt, self.caches, spars = self._tick(
-                self.params, self.caches, jnp.asarray(feed),
-                jnp.asarray(active), sub)
+            nxt, self.pool, self.tables, self.caches, _, logits = \
+                self._tick(self.params, self.pool, self.tables, self.caches,
+                           jnp.asarray(feed), jnp.asarray(active), sub)
             nxt = np.asarray(nxt)
             self.metrics["ticks"] += 1
             self.metrics["tokens"] += int(active.sum())
-
-            freed = []
+            if self.record_logits:
+                self.trace.append({"kind": "decode",
+                                   "active": active.copy(),
+                                   "logits": np.asarray(logits)})
             for slot in sch.active_slots():
-                i = slot.idx
-                req = slot.request
-                if prefill_pos[i] < len(req.prompt):
-                    feed[i] = req.prompt[prefill_pos[i]]   # still prefilling
-                    prefill_pos[i] += 1
-                    continue
-                tok = int(nxt[i])
-                req.output.append(tok)
-                slot.tokens_out += 1
-                feed[i] = tok
-                done = slot.tokens_out >= req.max_new_tokens or \
-                    (req.eos_token is not None and tok == req.eos_token)
-                if done:
-                    req.stats = self.slot_stats(i)
-                    sch.retire(slot)
-                    freed.append(i)
-            for i in freed:
-                self.caches = self._reset_slot(self.caches, jnp.int32(i))
-                prefill_pos[i] = 0
-            for slot in sch.admit():
-                feed[slot.idx] = slot.request.prompt[0]
-                prefill_pos[slot.idx] = 1
+                self._finish_token(slot, int(nxt[slot.idx]), feed)
+            admit_and_prefill()
         self.metrics["wall_s"] = time.perf_counter() - t0
         return sch.finished
 

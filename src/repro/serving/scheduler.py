@@ -8,7 +8,7 @@ from __future__ import annotations
 
 import dataclasses
 from collections import deque
-from typing import Deque, Dict, List, Optional
+from typing import Callable, Deque, Dict, List, Optional
 
 import numpy as np
 
@@ -45,11 +45,19 @@ class Scheduler:
     def submit(self, req: Request) -> None:
         self.queue.append(req)
 
-    def admit(self) -> List[Slot]:
-        """Move queued requests into free slots; returns newly filled."""
+    def admit(self, can_admit: Optional[Callable[[], bool]] = None
+              ) -> List[Slot]:
+        """Move queued requests into free slots; returns newly filled.
+
+        ``can_admit`` is an optional capacity gate (the engine passes its
+        global-block-pool check: a request is only admitted when the shared
+        pool can worst-case back a full per-request block allocation).
+        """
         newly = []
         for slot in self.slots:
             if slot.free and self.queue:
+                if can_admit is not None and not can_admit():
+                    break
                 slot.request = self.queue.popleft()
                 slot.tokens_out = 0
                 newly.append(slot)

@@ -172,13 +172,18 @@ def _pool_attention(q, k_codes, v_codes, k_scales, v_scales, slot_state,
                     slot_bits, buf_k, buf_v, buf_len):
     """One layer's decode attention over (quantized pool ∪ fp buffer).
 
-    q [Hq,hd]; pool planes [NS,H,hd]; buffer [G,H,hd].  XLA path.
+    q [Hq,hd]; pool planes PAGED [NB,BS,H,hd] (flattened here); buffer
+    [G,H,hd].  XLA reference path: densely dequantizes the pool.
 
     §Perf iteration: the pool (NS sharded over `model`) and the buffer
     (replicated, 16 tokens) are attended SEPARATELY and merged via flash
     stats — concatenating them forced GSPMD into involuntary full
     rematerialization of the mixed-sharding operand.
     """
+    nb, bs = k_codes.shape[0], k_codes.shape[1]
+    flat = lambda a: a.reshape(nb * bs, *a.shape[2:])
+    k_codes, v_codes = flat(k_codes), flat(v_codes)
+    k_scales, v_scales = flat(k_scales), flat(v_scales)
     bits = slot_bits.astype(jnp.int32)[:, None, None]
     deq_dtype = jnp.float32 if os.environ.get("REPRO_F32_DEQUANT") \
         else jnp.bfloat16
@@ -206,14 +211,49 @@ def _pool_attention(q, k_codes, v_codes, k_scales, v_scales, slot_state,
     return _merge_parts(part_p, part_b, hq, hd).astype(q.dtype)
 
 
-def make_decode_step_thinkv(cfg: ModelConfig, tk: ThinKVConfig) -> Callable:
+def _pool_attention_kernel(q, k_codes, v_codes, k_scales, v_scales,
+                           slot_state, slot_bits, buf_k, buf_v, buf_len,
+                           force):
+    """Kernel-dispatch variant of :func:`_pool_attention`: the pool is read
+    ONLY through ``ops.paged_decode_attention`` (fused dequant, identity
+    table — serve_step batches are per-request pools by construction) and
+    flash-merged with the fp buffer via the kernel's (m, l) stats."""
+    from repro.kernels import ops as K
+    from repro.kernels import ref as KR
+    nb, bs = k_codes.shape[0], k_codes.shape[1]
+    hq, hd = q.shape
+    table = jnp.arange(nb, dtype=jnp.int32)
+    out_p, m_p, l_p = K.paged_decode_attention(
+        q.astype(jnp.float32), k_codes, v_codes, k_scales, v_scales,
+        slot_state.reshape(nb, bs), slot_bits.reshape(nb, bs), table,
+        force=force)
+    out_b, m_b, l_b = K.buffer_attention(q.astype(jnp.float32), buf_k,
+                                         buf_v, buf_len)
+    return KR.merge_flash_ref(out_p, m_p, l_p, out_b, m_b,
+                              l_b).astype(q.dtype)
+
+
+def make_decode_step_thinkv(cfg: ModelConfig, tk: ThinKVConfig, *,
+                            backend: str = "reference",
+                            force: str | None = None) -> Callable:
     """(params, batch) -> (logits [B,V], buf_k, buf_v, buf_len).
 
-    batch carries the CT pool planes ([B, L_attn, NS, ...]) and the TBQ
-    buffer; the common decode path only *reads* the pool and appends the new
-    token's KV to the buffer (commit/refresh are separate steps).
+    batch carries the CT pool planes in PAGED layout
+    ([B, L_attn, NB, BS, ...]) and the TBQ buffer; the common decode path
+    only *reads* the pool and appends the new token's KV to the buffer
+    (commit/refresh are separate steps).
+
+    ``backend="reference"`` densely dequantizes the pool (XLA; what the
+    dry-run costs); ``backend="kernel"`` routes the pool read through
+    ``ct_paged_attention`` (compiled on TPU, oracle/interpret elsewhere
+    per ``force``).
     """
     n_attn = cfg.num_attention_layers()
+    assert backend in ("reference", "kernel"), backend
+    if backend == "kernel":
+        pool_attn = functools.partial(_pool_attention_kernel, force=force)
+    else:
+        pool_attn = _pool_attention
 
     if cfg.family in (ArchFamily.DENSE, ArchFamily.MOE, ArchFamily.VLM):
         def one(params, token, pos, kcod, vcod, ksc, vsc, sst, sbt,
@@ -231,7 +271,7 @@ def make_decode_step_thinkv(cfg: ModelConfig, tk: ThinKVConfig) -> Callable:
                 bv_l = jax.lax.dynamic_update_index_in_dim(bv_l,
                                                            v.astype(bv_l.dtype),
                                                            buf_len, 0)
-                o = _pool_attention(q, kcod_l, vcod_l, ksc_l, vsc_l, sst_l,
+                o = pool_attn(q, kcod_l, vcod_l, ksc_l, vsc_l, sst_l,
                                     sbt_l, bk_l, bv_l, buf_len + 1)
                 h = h + A.out_proj(lp["attn"], o)
                 x2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
@@ -275,7 +315,7 @@ def make_decode_step_thinkv(cfg: ModelConfig, tk: ThinKVConfig) -> Callable:
                     bk_l, k.astype(bk_l.dtype), buf_len, 0)
                 bv_l = jax.lax.dynamic_update_index_in_dim(
                     bv_l, v.astype(bv_l.dtype), buf_len, 0)
-                o = _pool_attention(q, kcod_l, vcod_l, ksc_l, vsc_l, sst_l,
+                o = pool_attn(q, kcod_l, vcod_l, ksc_l, vsc_l, sst_l,
                                     sbt_l, bk_l, bv_l, buf_len + 1)
                 h = h + A.out_proj(lp["self_attn"], o)
                 x2 = layernorm(lp["norm2"], h)
@@ -347,7 +387,7 @@ def make_decode_step_thinkv(cfg: ModelConfig, tk: ThinKVConfig) -> Callable:
                 bk_l, k.astype(bk_l.dtype), buf_len, 0)
             bv_l = jax.lax.dynamic_update_index_in_dim(
                 bv_l, v.astype(bv_l.dtype), buf_len, 0)
-            o = _pool_attention(q, kcod_l, vcod_l, ksc_l, vsc_l, sst_l,
+            o = pool_attn(q, kcod_l, vcod_l, ksc_l, vsc_l, sst_l,
                                 sbt_l, bk_l, bv_l, buf_len + 1)
             h = h + A.out_proj(sp["attn"], o)
             h = h + mlp(sp["mlp"], rmsnorm(sp["norm2"], h, cfg.norm_eps),

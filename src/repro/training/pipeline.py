@@ -39,7 +39,7 @@ def pipeline_apply(stage_fn: Callable, stage_params, h0: jax.Array,
     def local(params_l, h_all):
         # params_l: this stage's params ([1, ...] slab); h_all [M, mb, ...]
         stage = jax.lax.axis_index(axis)
-        size = jax.lax.axis_size(axis)
+        size = s_axis     # static mesh axis size (jax.lax has no axis_size)
         params_me = jax.tree.map(lambda x: x[0], params_l)
         ticks = m + size - 1
         perm = [(i, (i + 1) % size) for i in range(size)]

@@ -1,0 +1,95 @@
+"""Minimal property-testing shim used when ``hypothesis`` is unavailable.
+
+The container has no network access, so ``pip install hypothesis`` can
+fail; importing it at collection time then breaks three test modules.
+This module re-exports the real hypothesis API when present and otherwise
+provides a small seeded fallback implementing the subset these tests use:
+
+* ``strategies.integers(lo, hi)``
+* ``strategies.sampled_from(seq)``
+* ``strategies.lists(elem, min_size=, max_size=)``
+* ``@given(*strategies)`` — runs the test body ``max_examples`` times with
+  draws from a fixed-seed ``numpy.random.Generator`` (deterministic across
+  runs, like hypothesis with a pinned database).
+* ``@settings(max_examples=, deadline=)`` — honours ``max_examples``.
+
+Usage in tests:  ``from _prop import given, settings, strategies as st``.
+"""
+from __future__ import annotations
+
+try:  # pragma: no cover - exercised only when hypothesis is installed
+    from hypothesis import given, settings, strategies  # noqa: F401
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    import numpy as np
+
+    HAVE_HYPOTHESIS = False
+    _DEFAULT_MAX_EXAMPLES = 20
+
+    class _Strategy:
+        def __init__(self, draw_fn):
+            self._draw = draw_fn
+
+        def draw(self, rng: np.random.Generator):
+            return self._draw(rng)
+
+    class strategies:  # noqa: N801 - mimics the hypothesis module name
+        @staticmethod
+        def integers(min_value: int, max_value: int) -> _Strategy:
+            return _Strategy(
+                lambda rng: int(rng.integers(min_value, max_value + 1)))
+
+        @staticmethod
+        def sampled_from(seq) -> _Strategy:
+            items = list(seq)
+            return _Strategy(
+                lambda rng: items[int(rng.integers(len(items)))])
+
+        @staticmethod
+        def lists(elem: _Strategy, *, min_size: int = 0,
+                  max_size: int = 10) -> _Strategy:
+            def draw(rng):
+                n = int(rng.integers(min_size, max_size + 1))
+                return [elem.draw(rng) for _ in range(n)]
+            return _Strategy(draw)
+
+        @staticmethod
+        def floats(min_value: float, max_value: float) -> _Strategy:
+            return _Strategy(
+                lambda rng: float(rng.uniform(min_value, max_value)))
+
+    def given(*strats: _Strategy):
+        def deco(fn):
+            # NOTE: no functools.wraps — copying __wrapped__ would expose the
+            # inner (seed, ...) signature to pytest, which would then try to
+            # resolve the drawn parameters as fixtures.
+            def runner():
+                n = getattr(runner, "_max_examples", _DEFAULT_MAX_EXAMPLES)
+                # seed from the test name so every property test gets a
+                # distinct stream that is stable ACROSS processes (hash()
+                # is salted by PYTHONHASHSEED; crc32 is not)
+                import zlib
+                seed = zlib.crc32(fn.__qualname__.encode())
+                rng = np.random.default_rng(seed)
+                for i in range(n):
+                    drawn = [s.draw(rng) for s in strats]
+                    try:
+                        fn(*drawn)
+                    except Exception as e:  # noqa: BLE001 - re-raise w/ ctx
+                        raise AssertionError(
+                            f"property falsified on example {i}: "
+                            f"args={drawn!r}") from e
+            runner.__name__ = fn.__name__
+            runner.__doc__ = fn.__doc__
+            runner.__module__ = fn.__module__
+            runner._max_examples = getattr(fn, "_max_examples",
+                                           _DEFAULT_MAX_EXAMPLES)
+            return runner
+        return deco
+
+    def settings(*, max_examples: int = _DEFAULT_MAX_EXAMPLES,
+                 deadline=None, **_ignored):
+        def deco(fn):
+            fn._max_examples = max_examples
+            return fn
+        return deco

@@ -5,7 +5,7 @@ import jax
 import jax.numpy as jnp
 import numpy as np
 import pytest
-from hypothesis import given, settings, strategies as st
+from _prop import given, settings, strategies as st
 
 from repro.config import ThinKVConfig, ThoughtType
 from repro.core import ct_cache as CC
@@ -27,17 +27,18 @@ def _step():
     return jax.jit(functools.partial(TV.step_token, CFG, DIMS))
 
 
-def run_steps(n, seed=0, pattern=("R", "E", "T", "R")):
+def run_steps(n, seed=0, pattern=("R", "E", "T", "R"), with_view=False):
     rng = np.random.default_rng(seed)
     cache = CC.init_cache(DIMS)
+    view = CC.init_pool_view(DIMS)
     step = _step()
     code = {"R": 0.65, "E": 0.3, "T": 0.92}
     for i in range(n):
         k = jnp.asarray(rng.standard_normal((2, 2, 32)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((2, 2, 32)), jnp.float32)
         s = code[pattern[(i // CFG.refresh_interval) % len(pattern)]]
-        cache = step(cache, k, v, jnp.float32(s))
-    return cache
+        cache, view = step(cache, view, k, v, jnp.float32(s))
+    return (cache, view) if with_view else cache
 
 
 def _budget_bound(cache):
@@ -122,8 +123,8 @@ def test_slot_reuse_no_compaction():
 
 
 def test_evicted_slots_masked_from_attention():
-    cache = run_steps(200)
-    k, v, valid = CC.dequant_layer(DIMS, cache, 0)
+    cache, view = run_steps(200, with_view=True)
+    k, v, valid = CC.dequant_layer(DIMS, cache, view, 0)
     stt = np.asarray(cache.slot_state[0])
     assert (np.asarray(valid) == (stt == 1)).all()
 
@@ -153,10 +154,11 @@ def test_compression_ratio_long_generation():
 
 
 def test_attention_finite_after_heavy_eviction():
-    cache = run_steps(500, pattern=("T", "T", "R", "T"))
+    cache, view = run_steps(500, pattern=("T", "T", "R", "T"),
+                            with_view=True)
     q = jnp.asarray(np.random.default_rng(1).standard_normal((4, 32)),
                     jnp.float32)
-    out = TV.decode_attention_ref(DIMS, cache, q, 0)
+    out = TV.decode_attention_ref(DIMS, cache, view, q, 0)
     assert bool(jnp.isfinite(out).all())
 
 

@@ -23,11 +23,12 @@ def test_llm_mode_single_thought_type(rng):
                       sparsity_thresholds=(2.0, 2.0))   # everything -> E
     dims = CC.make_dims(tk, num_layers=1, kv_heads=2, head_dim=32)
     cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
     step = jax.jit(functools.partial(TV.step_token, tk, dims))
     for i in range(200):
         k = jnp.asarray(rng.standard_normal((1, 2, 32)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((1, 2, 32)), jnp.float32)
-        cache = step(cache, k, v, jnp.float32(0.5))
+        cache, view = step(cache, view, k, v, jnp.float32(0.5))
     # single category: every opened segment classifies identically (seg 0
     # is the R-typed prefill segment by definition)
     n_seg = int(cache.cur_seg)

@@ -50,6 +50,24 @@ def test_flash_prefill_vs_ref(rng, s, hq, h, d, window):
                                rtol=3e-5, atol=3e-5)
 
 
+def test_flash_prefill_stats_vs_ref(rng):
+    """return_stats variant: out AND (m, l) match the oracle (the stats
+    feed the chunked-prefill partition merge)."""
+    s, hq, h, d = 128, 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((s, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((s, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((s, h, d)), jnp.float32)
+    o_k, m_k, l_k = flash_prefill(q, k, v, block_q=64, block_k=64,
+                                  interpret=True, return_stats=True)
+    o_r, m_r, l_r = R.flash_prefill_stats_ref(q, k, v)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r),
+                               rtol=3e-5, atol=3e-5)
+
+
 def test_flash_prefill_bf16(rng):
     s, hq, h, d = 128, 4, 2, 64
     q = jnp.asarray(rng.standard_normal((s, hq, d)), jnp.bfloat16)
@@ -65,13 +83,16 @@ def test_flash_prefill_bf16(rng):
 # ct_paged_attention
 # ---------------------------------------------------------------------------
 
-def _cache_args(rng, kv_heads=2, head_dim=64, steps=120, layers=1):
+def _cache_args(rng, kv_heads=2, head_dim=64, steps=120, layers=1,
+                precision=(2, 4, 4)):
     cfg = ThinKVConfig(refresh_interval=32, group_size=16, block_size=16,
                        token_budget=64, retention_schedule=(16, 8, 4),
-                       min_retention=4, max_segments=32, kmeans_iters=4)
+                       min_retention=4, max_segments=32, kmeans_iters=4,
+                       precision=precision)
     dims = CC.make_dims(cfg, num_layers=layers, kv_heads=kv_heads,
                         head_dim=head_dim, slack=2.0)
     cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
     step = jax.jit(functools.partial(TV.step_token, cfg, dims))
     spars = [0.6, 0.3, 0.9, 0.65]
     for i in range(steps):
@@ -79,22 +100,21 @@ def _cache_args(rng, kv_heads=2, head_dim=64, steps=120, layers=1):
                         jnp.float32)
         v = jnp.asarray(rng.standard_normal((layers, kv_heads, head_dim)),
                         jnp.float32)
-        cache = step(cache, k, v, jnp.float32(spars[(i // 32) % 4]))
-    args = (cache.k_codes[0].reshape(dims.NB, dims.BS, kv_heads, head_dim),
-            cache.v_codes[0].reshape(dims.NB, dims.BS, kv_heads, head_dim),
-            cache.k_scales[0].reshape(dims.NB, dims.BS, kv_heads, -1),
-            cache.v_scales[0].reshape(dims.NB, dims.BS, kv_heads, -1),
+        cache, view = step(cache, view, k, v,
+                           jnp.float32(spars[(i // 32) % 4]))
+    args = (view.k_codes[0], view.v_codes[0],
+            view.k_scales[0], view.v_scales[0],
             cache.slot_state[0].reshape(dims.NB, dims.BS),
             cache.slot_bits[0].reshape(dims.NB, dims.BS),
             jnp.arange(dims.NB, dtype=jnp.int32))
-    return cfg, dims, cache, args
+    return cfg, dims, cache, view, args
 
 
 @pytest.mark.parametrize("hq_mult", (1, 4))
 @pytest.mark.parametrize("head_dim", (32, 64, 128))
 def test_ct_paged_attention_vs_ref(rng, hq_mult, head_dim):
     kv_heads = 2
-    _, dims, cache, args = _cache_args(rng, kv_heads, head_dim)
+    _, dims, cache, view, args = _cache_args(rng, kv_heads, head_dim)
     q = jnp.asarray(rng.standard_normal((kv_heads * hq_mult, head_dim)),
                     jnp.float32)
     o_k, m_k, l_k = ct_paged_attention(q, *args, group=16, interpret=True)
@@ -105,10 +125,31 @@ def test_ct_paged_attention_vs_ref(rng, hq_mult, head_dim):
                                rtol=3e-5, atol=3e-5)
 
 
+@pytest.mark.parametrize("precision", ((2, 4, 4), (2, 4, 8), (8, 8, 8)))
+@pytest.mark.parametrize("hq_mult", (1, 2, 4))
+def test_ct_paged_attention_bitwidth_gqa_sweep(rng, precision, hq_mult):
+    """Kernel parity across stored bit-widths {2,4,8} (via the precision
+    policy + scripted thought pattern) and GQA group sizes, with evicted
+    slots present from budget pressure."""
+    kv_heads = 2
+    _, dims, cache, view, args = _cache_args(rng, kv_heads, 64,
+                                             precision=precision)
+    assert bool(np.any(np.asarray(cache.slot_state[0]) == 2)), \
+        "sweep must exercise evicted slots"
+    q = jnp.asarray(rng.standard_normal((kv_heads * hq_mult, 64)),
+                    jnp.float32)
+    o_k, _, l_k = ct_paged_attention(q, *args, group=16, interpret=True)
+    o_r, _, l_r = R.ct_paged_attention_ref(q, *args, group=16)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_r),
+                               rtol=3e-5, atol=3e-5)
+
+
 def test_ct_paged_attention_block_table_indirection(rng):
     """Shuffled physical pool + matching table == identity layout."""
     kv_heads, head_dim = 2, 64
-    _, dims, cache, args = _cache_args(rng, kv_heads, head_dim)
+    _, dims, cache, view, args = _cache_args(rng, kv_heads, head_dim)
     q = jnp.asarray(rng.standard_normal((8, head_dim)), jnp.float32)
     o_id, _, _ = ct_paged_attention(q, *args, group=16, interpret=True)
     perm = np.asarray(rng.permutation(dims.NB), np.int32)
@@ -123,12 +164,52 @@ def test_ct_paged_attention_block_table_indirection(rng):
                                rtol=1e-5, atol=1e-5)
 
 
+def test_ct_paged_attention_batched_vs_ref(rng):
+    """Batched launch (shared pool + per-request tables) == per-request
+    single-launch results."""
+    kv_heads, head_dim, R_ = 2, 64, 3
+    _, dims, cache, view, args = _cache_args(rng, kv_heads, head_dim)
+    kc, vc, ks, vs, state, bits, _ = args
+    # build a shared physical pool holding R shuffled copies
+    NB = dims.NB
+    perms = [np.asarray(rng.permutation(NB), np.int32) for _ in range(R_)]
+    pool_kc = np.zeros((R_ * NB,) + kc.shape[1:], np.asarray(kc).dtype)
+    pool_vc = np.zeros_like(pool_kc)
+    pool_ks = np.zeros((R_ * NB,) + ks.shape[1:], np.float32)
+    pool_vs = np.zeros_like(pool_ks)
+    tables = np.zeros((R_, NB), np.int32)
+    for r, perm in enumerate(perms):
+        phys = r * NB + perm
+        pool_kc[phys] = np.asarray(kc)
+        pool_vc[phys] = np.asarray(vc)
+        pool_ks[phys] = np.asarray(ks, np.float32)
+        pool_vs[phys] = np.asarray(vs, np.float32)
+        tables[r] = phys
+    qs = rng.standard_normal((R_, 8, head_dim)).astype(np.float32)
+    qh = jnp.asarray(qs).reshape(R_, kv_heads, 4, head_dim)
+    o_b, m_b, l_b = ops.paged_decode_attention_batched(
+        qh, jnp.asarray(pool_kc), jnp.asarray(pool_vc),
+        jnp.asarray(pool_ks, jnp.bfloat16), jnp.asarray(pool_vs, jnp.bfloat16),
+        jnp.broadcast_to(state[None], (R_, NB, dims.BS)),
+        jnp.broadcast_to(bits[None], (R_, NB, dims.BS)),
+        jnp.asarray(tables), group=16, force="pallas")
+    for r in range(R_):
+        o_s, _, l_s = R.ct_paged_attention_ref(
+            jnp.asarray(qs[r]), kc, vc, ks, vs, state, bits,
+            jnp.arange(NB, dtype=jnp.int32), group=16)
+        np.testing.assert_allclose(np.asarray(o_b[r]).reshape(8, head_dim),
+                                   np.asarray(o_s), rtol=3e-5, atol=3e-5)
+        np.testing.assert_allclose(np.asarray(l_b[r]), np.asarray(l_s),
+                                   rtol=3e-5, atol=3e-5)
+
+
 def test_full_thinkv_attention_kernel_path(rng):
     """Kernel + B_buf merge == reference decode attention."""
-    cfg, dims, cache, _ = _cache_args(rng, 2, 64, steps=90)
+    cfg, dims, cache, view, _ = _cache_args(rng, 2, 64, steps=90)
     q = jnp.asarray(rng.standard_normal((8, 64)), jnp.float32)
-    o_full = ops.thinkv_decode_attention(dims, cache, q, 0, force="pallas")
-    o_ref = TV.decode_attention_ref(dims, cache, q, 0)
+    o_full = ops.thinkv_decode_attention(dims, cache, view, q, 0,
+                                         force="pallas")
+    o_ref = TV.decode_attention_ref(dims, cache, view, q, 0)
     np.testing.assert_allclose(np.asarray(o_full), np.asarray(o_ref),
                                rtol=3e-4, atol=3e-4)
 

@@ -95,15 +95,16 @@ def test_thinkv_attention_fidelity_vs_fullkv(rng):
                       min_retention=4, max_segments=16, kmeans_iters=4)
     dims = CC.make_dims(tk, num_layers=1, kv_heads=2, head_dim=32)
     cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
     step = jax.jit(functools.partial(TV.step_token, tk, dims))
     n = 120
     ks = rng.standard_normal((n, 2, 32)).astype(np.float32)
     vs = rng.standard_normal((n, 2, 32)).astype(np.float32)
     for i in range(n):
-        cache = step(cache, jnp.asarray(ks[None, i]), jnp.asarray(vs[None, i]),
-                     jnp.float32(0.65))
+        cache, view = step(cache, view, jnp.asarray(ks[None, i]),
+                           jnp.asarray(vs[None, i]), jnp.float32(0.65))
     q = jnp.asarray(rng.standard_normal((4, 32)), jnp.float32)
-    out_tk = TV.decode_attention_ref(dims, cache, q, 0)
+    out_tk = TV.decode_attention_ref(dims, cache, view, q, 0)
     out_full = A.decode_attend_fullkv(q, jnp.asarray(ks), jnp.asarray(vs),
                                       jnp.int32(n))
     cos = float(jnp.sum(out_tk * out_full) /

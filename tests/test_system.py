@@ -31,12 +31,13 @@ def test_calibrate_then_serve_pipeline(rng):
                       sparsity_thresholds=tuple(res.thresholds))
     dims = CC.make_dims(tk, num_layers=2, kv_heads=2, head_dim=32)
     cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
     step = jax.jit(functools.partial(TV.step_token, tk, dims))
     trace = gen.generate(600)
     for i in range(600):
         k = jnp.asarray(rng.standard_normal((2, 2, 32)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((2, 2, 32)), jnp.float32)
-        cache = step(cache, k, v, jnp.float32(trace.sparsities[i]))
+        cache, view = step(cache, view, k, v, jnp.float32(trace.sparsities[i]))
 
     counts = np.asarray(CC.valid_counts(cache))
     floor = tk.min_retention * int(cache.cur_seg) + tk.refresh_interval
@@ -70,12 +71,13 @@ def test_transition_outliers_not_fully_evicted(rng):
                       min_retention=4, max_segments=64, kmeans_iters=4)
     dims = CC.make_dims(tk, num_layers=1, kv_heads=2, head_dim=32)
     cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
     step = jax.jit(functools.partial(TV.step_token, tk, dims))
     spars = [0.9, 0.65, 0.9, 0.3, 0.9, 0.65]   # transition-heavy
     for i in range(400):
         k = jnp.asarray(rng.standard_normal((1, 2, 32)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((1, 2, 32)), jnp.float32)
-        cache = step(cache, k, v, jnp.float32(spars[(i // 16) % 6]))
+        cache, view = step(cache, view, k, v, jnp.float32(spars[(i // 16) % 6]))
     seg = np.asarray(cache.slot_seg[0])
     stt = np.asarray(cache.slot_state[0])
     seg_types = np.asarray(cache.seg_type)
@@ -96,6 +98,7 @@ def test_proactive_vs_per_step_eviction_rates(rng):
                       min_retention=4, max_segments=64, kmeans_iters=4)
     dims = CC.make_dims(tk, num_layers=1, kv_heads=2, head_dim=32)
     cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
     step = jax.jit(functools.partial(TV.step_token, tk, dims))
     spars = [0.65, 0.3, 0.9, 0.65]
     evict_steps = 0
@@ -104,7 +107,7 @@ def test_proactive_vs_per_step_eviction_rates(rng):
     for i in range(n):
         k = jnp.asarray(rng.standard_normal((1, 2, 32)), jnp.float32)
         v = jnp.asarray(rng.standard_normal((1, 2, 32)), jnp.float32)
-        cache = step(cache, k, v, jnp.float32(spars[(i // 16) % 4]))
+        cache, view = step(cache, view, k, v, jnp.float32(spars[(i // 16) % 4]))
         total_committed = (i + 1) - int(cache.buf_len)
         valid = int(np.asarray(CC.valid_counts(cache)[0]))
         evicted_so_far = total_committed - valid
