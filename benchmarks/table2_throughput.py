@@ -11,14 +11,28 @@ Three parts:
    every g steps), on real jitted ops — the Obs. 4a/4b mechanism.
 3. **Measured engine throughput**: the continuous-batching engine end to
    end under both decode backends (``reference`` = dense dequant XLA;
-   ``kernel`` = ``ct_paged_attention`` — interpret mode off-TPU, so the
-   kernel numbers on CPU measure dispatch structure, not HBM wins) plus
-   chunked batched prefill tokens/s.
+   ``kernel`` = the fused single-launch ``ct_paged_attention_fused`` —
+   interpret mode off-TPU, so the kernel numbers on CPU measure dispatch
+   structure, not HBM wins) plus chunked batched prefill tokens/s.  Every
+   backend row reports the PER-TICK ``pallas_call`` LAUNCH COUNT (audited
+   on the tick's jaxpr with scan trip-count multiplication): the fused
+   decode tick is exactly 1 for the kernel backend at ANY layer count.
+4. **Layer sweep** (``--layers``): per-tick decode throughput + launch
+   counts at L in {4, 16, 32} — the launch-amortization win of folding
+   the layer axis into the kernel grid grows linearly with L.
+
+Results are also APPENDED to ``BENCH_table2.json`` at the repo root (one
+record per run, tagged with the git SHA) so the perf trajectory is
+tracked across PRs.  ``--smoke`` runs a tiny interpret-mode configuration
+as a CI kernel-path regression gate.
 """
 from __future__ import annotations
 
+import dataclasses
 import functools
 import json
+import os
+import subprocess
 import time
 
 import jax
@@ -30,6 +44,9 @@ from repro.configs import get_config
 from repro.core import quantization as Q
 
 GB = 1024 ** 3
+
+REPO_ROOT = os.path.abspath(os.path.join(os.path.dirname(__file__), ".."))
+BENCH_LOG = os.path.join(REPO_ROOT, "BENCH_table2.json")
 
 
 def memory_model(arch="r1-llama-8b", gen_len=32768, budget=1024,
@@ -120,23 +137,29 @@ def measured_maintenance(budget=1024, layers=8, h=8, d=128, group=16,
     }
 
 
+def _smoke_tk():
+    from repro.config import ThinKVConfig as TKC
+    return TKC(refresh_interval=16, group_size=8, block_size=8,
+               token_budget=48, retention_schedule=(16, 8, 4),
+               min_retention=4, max_segments=64, kmeans_iters=4)
+
+
 def engine_throughput(arch="r1-llama-8b", requests=3, slots=2,
                       prompt_len=24, max_new=24, seed=0):
-    """Measured decode tokens/s per backend + chunked-prefill tokens/s.
+    """Measured decode tokens/s per backend + chunked-prefill tokens/s,
+    each backend tagged with its per-tick pallas launch count.
 
     Off-TPU the kernel backend runs the Pallas kernel in INTERPRET mode —
     orders of magnitude slower than compiled; its number here validates the
     path end to end rather than demonstrating the HBM win (that is the
     TPU-compiled measurement in the ROADMAP's open items).
     """
-    from repro.config import ServeConfig, ThinKVConfig as TKC
+    from repro.config import ServeConfig
     from repro.configs import get_smoke_config
     from repro.serving.engine import ThinKVEngine
 
     mcfg = get_smoke_config(arch)
-    tk = TKC(refresh_interval=16, group_size=8, block_size=8,
-             token_budget=48, retention_schedule=(16, 8, 4),
-             min_retention=4, max_segments=64, kmeans_iters=4)
+    tk = _smoke_tk()
     scfg = ServeConfig(model=mcfg, thinkv=tk, max_seqs=slots,
                        temperature=0.0)
     rng = np.random.default_rng(seed)
@@ -148,6 +171,7 @@ def engine_throughput(arch="r1-llama-8b", requests=3, slots=2,
     for backend in ("reference", "kernel"):
         eng = ThinKVEngine(scfg, params=params, backend=backend)
         params = eng.params
+        launches = eng.tick_launch_count()
         # warm the tick + prefill jits OUTSIDE the timed window (first call
         # pays trace/compile — dominant on CPU, huge for interpret mode)
         eng.submit([prompts[0].copy()], max_new_tokens=2)
@@ -166,8 +190,10 @@ def engine_throughput(arch="r1-llama-8b", requests=3, slots=2,
         wall = time.perf_counter() - t0
         decode_toks = eng.metrics["tokens"] - mid["tokens"]
         prefill_toks = mid["prefill_tokens"] - base["prefill_tokens"]
-        decode_wall = max(wall - prefill_wall, 1e-9)   # ~= wall minus the
-        # second run's (equal-prompt) prefill phase
+        # ~= wall minus the second run's (equal-prompt) prefill phase;
+        # floored at 5% of wall so timer noise on tiny runs cannot produce
+        # a near-zero denominator (and an absurd tok/s)
+        decode_wall = max(wall - prefill_wall, 0.05 * wall)
         rows[backend] = {
             "decode_tokens": decode_toks,
             "prefill_tokens": prefill_toks,
@@ -176,6 +202,7 @@ def engine_throughput(arch="r1-llama-8b", requests=3, slots=2,
             "prefill_chunks": (mid["prefill_chunks"]
                                - base["prefill_chunks"]),
             "requests": len(done),
+            "pallas_launches_per_tick": launches,
         }
     # prefill tokens/s measured separately: prompt-only requests on a
     # freshly warmed reference engine
@@ -198,7 +225,78 @@ def engine_throughput(arch="r1-llama-8b", requests=3, slots=2,
     return rows
 
 
-def main(out_path="benchmarks/results/table2_throughput.json"):
+def layer_sweep(layers=(4, 16, 32), arch="r1-llama-8b", ticks=6, slots=1,
+                seed=0):
+    """Per-tick decode wall time + pallas launch count at several layer
+    counts: the launch-amortization win of the fused single-launch tick.
+
+    Drives the jitted tick directly (fixed cache state, no scheduler) —
+    the measurement isolates per-tick dispatch + attention cost, which is
+    what the layer fold changes.
+    """
+    from repro.config import ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import ThinKVEngine
+
+    rows = []
+    for L in layers:
+        mcfg = dataclasses.replace(get_smoke_config(arch), num_layers=L)
+        scfg = ServeConfig(model=mcfg, thinkv=_smoke_tk(), max_seqs=slots,
+                           temperature=0.0)
+        row = {"layers": int(L)}
+        params = None
+        for backend in ("reference", "kernel"):
+            eng = ThinKVEngine(scfg, params=params, backend=backend)
+            params = eng.params
+            args = (eng.params, eng.pool, eng.tables, eng.caches,
+                    jnp.zeros(slots, jnp.int32), jnp.ones(slots, bool),
+                    jax.random.PRNGKey(seed))
+            jax.block_until_ready(eng._tick(*args))      # warm the jit
+            t0 = time.perf_counter()
+            for _ in range(ticks):
+                out = eng._tick(*args)
+            jax.block_until_ready(out)
+            wall = time.perf_counter() - t0
+            row[backend] = {
+                "tick_ms": 1e3 * wall / ticks,
+                "decode_tok_per_s": slots * ticks / wall,
+                "pallas_launches_per_tick": eng.tick_launch_count(),
+            }
+        rows.append(row)
+        print(f"  L={L:3d}: reference {row['reference']['tick_ms']:8.1f}"
+              f" ms/tick ({row['reference']['pallas_launches_per_tick']}"
+              f" launches) | kernel {row['kernel']['tick_ms']:8.1f} ms/tick"
+              f" ({row['kernel']['pallas_launches_per_tick']} launch)")
+    return rows
+
+
+def _git_sha() -> str:
+    try:
+        return subprocess.check_output(
+            ["git", "rev-parse", "--short", "HEAD"], cwd=REPO_ROOT,
+            stderr=subprocess.DEVNULL).decode().strip()
+    except Exception:
+        return "unknown"
+
+
+def append_bench_log(record, path=BENCH_LOG):
+    """Append one run record to the cross-PR perf trajectory log."""
+    data = []
+    if os.path.exists(path):
+        try:
+            with open(path) as f:
+                data = json.load(f)
+            assert isinstance(data, list)
+        except Exception:
+            data = []
+    data.append(record)
+    with open(path, "w") as f:
+        json.dump(data, f, indent=2)
+        f.write("\n")
+
+
+def main(out_path="benchmarks/results/table2_throughput.json", *,
+         smoke=False, layers=None):
     out = {}
     for dev, hbm in [("A100-80GB", 80.0), ("TPUv5e-16GB", 16.0)]:
         rows = memory_model(hbm_gb=hbm)
@@ -207,25 +305,61 @@ def main(out_path="benchmarks/results/table2_throughput.json"):
         for r in rows:
             print(f"    {r['method']:16s} {r['footprint_pct_of_full']:6.2f}% "
                   f"of FullKV   max_batch={r['max_batch']}")
-    out["maintenance"] = measured_maintenance()
+    out["maintenance"] = measured_maintenance(steps=64 if smoke else 256)
     m = out["maintenance"]
     print(f"  cache maintenance: gather {m['gather_us_per_token']:.1f}us/tok"
           f" vs CT {m['ct_us_per_token']:.2f}us/tok "
           f"({m['speedup']:.0f}x)")
-    out["engine"] = engine_throughput()
+    if smoke:
+        out["engine"] = engine_throughput(requests=2, slots=2, prompt_len=8,
+                                          max_new=8)
+    else:
+        out["engine"] = engine_throughput()
     e = out["engine"]
     kmode = "compiled" if jax.default_backend() == "tpu" else "interpret"
     print(f"  engine decode: reference "
-          f"{e['reference']['decode_tok_per_s']:.1f} tok/s vs "
-          f"kernel[{kmode}] {e['kernel']['decode_tok_per_s']:.1f} tok/s | "
+          f"{e['reference']['decode_tok_per_s']:.1f} tok/s "
+          f"({e['reference']['pallas_launches_per_tick']} launches/tick) vs "
+          f"kernel[{kmode}] {e['kernel']['decode_tok_per_s']:.1f} tok/s "
+          f"({e['kernel']['pallas_launches_per_tick']} launch/tick) | "
           f"batched prefill {e['prefill']['tok_per_s']:.1f} tok/s "
           f"({e['prefill']['chunks']} chunks)")
-    import os
-    os.makedirs(os.path.dirname(out_path), exist_ok=True)
+    if e["kernel"]["pallas_launches_per_tick"] != 1:
+        raise SystemExit(
+            "kernel-path regression: decode tick dispatches "
+            f"{e['kernel']['pallas_launches_per_tick']} pallas launches "
+            "(expected exactly 1 — the fused single-launch tick)")
+    if layers is None:
+        layers = (2, 4) if smoke else (4, 16, 32)
+    out["layer_sweep"] = layer_sweep(layers=layers)
+    if os.path.dirname(out_path):
+        os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
         json.dump(out, f, indent=2)
+    append_bench_log({
+        "git_sha": _git_sha(),
+        "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
+        "backend_mode": kmode,
+        "smoke": bool(smoke),
+        "engine": out["engine"],
+        "layer_sweep": out["layer_sweep"],
+    })
+    print(f"  perf trajectory appended to {BENCH_LOG}")
     return out
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny interpret-mode run (CI kernel-path "
+                         "regression gate)")
+    ap.add_argument("--layers", type=str, default=None,
+                    help="comma-separated layer counts for the sweep, "
+                         "e.g. 4,16,32")
+    ap.add_argument("--out", default="benchmarks/results/"
+                                     "table2_throughput.json")
+    a = ap.parse_args()
+    main(a.out, smoke=a.smoke,
+         layers=tuple(int(x) for x in a.layers.split(","))
+         if a.layers else None)

@@ -1,7 +1,11 @@
 #!/usr/bin/env bash
-# Tier-1 verification (see ROADMAP.md): the full pytest suite on CPU.
+# Tier-1 verification (see ROADMAP.md): the full pytest suite on CPU, then
+# the table2 throughput benchmark in --smoke mode (tiny config, interpret
+# kernels) so kernel-path regressions — e.g. the decode tick dispatching
+# more than ONE fused pallas launch — fail CI rather than only pytest.
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-exec python -m pytest -x -q "$@"
+python -m pytest -x -q "$@"
+python benchmarks/table2_throughput.py --smoke

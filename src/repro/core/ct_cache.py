@@ -513,6 +513,18 @@ def init_block_table(dims: CacheDims) -> jax.Array:
     return jnp.full((dims.L, dims.NB), UNMAPPED, jnp.int32)
 
 
+def stacked_slot_plane(dims: CacheDims, plane: jax.Array) -> jax.Array:
+    """Engine metadata [R, L, NS] -> the fused kernel's [L, R, NB, BS]."""
+    r = plane.shape[0]
+    return jnp.swapaxes(plane, 0, 1).reshape(dims.L, r, dims.NB, dims.BS)
+
+
+def stacked_buffers(buf: jax.Array) -> jax.Array:
+    """Engine TBQ buffers [R, L, G, H, D] -> the fused kernel's
+    [L, R, G, H, D]."""
+    return jnp.swapaxes(buf, 0, 1)
+
+
 def gather_view(pool_view: PoolView, table: jax.Array) -> PoolView:
     """Per-request paged view through a [L, NB] block table.
 

@@ -1,36 +1,53 @@
-"""CT paged decode-attention Pallas TPU kernel (paper Sec. 5 'Continuous
+"""CT paged decode-attention Pallas TPU kernels (paper Sec. 5 'Continuous
 Thinking', adapted per DESIGN.md Sec. 3).
 
-One (request, kv-head, block)-grid flash-decoding pass over the quantized
-paged cache:
+The FUSED entry point (``ct_paged_attention_fused``) serves a whole
+continuous-batching decode tick in ONE launch: the grid is
+``(L, R, H, NB + 1)`` — a leading layer axis over the pool planes (which
+already carry ``[L, NP, BS, H, ...]``), then request slots, kv heads, and
+the per-sequence block walk.  The first ``NB`` steps of the last grid axis
+stream quantized pool blocks through the block-table indirection; the final
+step attends the full-precision TBQ buffer ``B_buf`` for the same
+``(l, r, h)``, so the ``(m, l)`` flash-merge between the quantized pool and
+the buffer happens in VMEM scratch — the kernel returns FINAL outputs, no
+stats plumbing back to XLA.  This amortizes launch overhead over ``L`` and
+removes the per-layer XLA merge einsum, the two linear-in-``L`` costs of
+the per-layer launch scheme.
+
+Shared kernel mechanics:
 
 * the quantized cache (nibble codes + E4M3 group scales) is the ONLY HBM
-  traffic — dequantization (code decode + scale multiply) is fused in VMEM
-  before the MXU dot, which is the entire memory-roofline win of TBQ;
+  traffic for committed tokens — dequantization (code decode + scale
+  multiply) is fused in VMEM before the MXU dot, which is the entire
+  memory-roofline win of TBQ;
 * the paper's eviction/segment masks enter as the per-slot ``slot_state``
   plane: soft-evicted slots are masked out of the softmax, never compacted;
 * PagedAttention's block-table indirection is kept via scalar prefetch
-  (``block_table[r, b] -> physical block``): the CODE/SCALE planes are the
-  engine's SHARED physical pool ([NP, BS, ...]) indexed through the table,
-  while ``slot_state``/``slot_bits`` are per-request logical metadata
-  ([R, NB, BS]) indexed directly — requests only ever touch physical
-  blocks their table maps;
+  (``block_table[r, l, b] -> physical block``): the CODE/SCALE planes are
+  the engine's SHARED physical pool indexed through the table, while
+  ``slot_state``/``slot_bits`` are per-request logical metadata indexed
+  directly — requests only ever touch physical blocks their table maps;
+* every entry point accepts RAW block tables: unmapped entries are ``-1``
+  sentinels and are clamped internally (their slots are FREE in the
+  metadata, so the state mask zeroes their contribution) — callers never
+  pre-clamp;
 * flash accumulation state (m, l, acc) lives in VMEM scratch across the
-  sequential block grid dimension; (m, l) are returned so the wrapper can
-  merge the attention over the full-precision TBQ buffer ``B_buf``.
+  sequential block grid dimension.
 
-The batched entry point serves a whole continuous-batching tick (one launch
-per layer for every request slot); the single-request wrapper remains for
-tests and the single-sequence controller.  The query-group axis ``GQ`` is
-``Hq // H`` for decode and ``chunk * Hq // H`` for the chunked prefill path
-(every chunk token attends the same frozen pool, so chunk queries fold into
-the q-group axis).
+The per-layer batched entry point (``ct_paged_attention_batched``) remains
+for the chunked-prefill frozen-pool partition (its ``(m, l)`` stats merge
+against the intra-chunk flash partition) and for tests; the single-request
+wrapper remains for the single-sequence controller.  The query-group axis
+``GQ`` is ``Hq // H`` for decode and ``chunk * Hq // H`` for chunked
+prefill (every chunk token attends the same frozen pool, so chunk queries
+fold into the q-group axis).
 
 Tiling: a KV block is (block_size=16, head_dim=128) per head — exactly one
 TPU (16,128) tile; codes are uint8 lanes, scales one bf16 (16,8) tile.
 
-Validated on CPU against ``ref.ct_paged_attention_ref`` in interpret mode
-(``tests/test_kernels.py`` sweeps shapes/dtypes/bit-widths).
+Validated on CPU against ``ref.ct_paged_attention_fused_ref`` /
+``ref.ct_paged_attention_ref`` in interpret mode (``tests/test_kernels.py``
+sweeps layer counts, shapes, dtypes, and bit-widths).
 """
 from __future__ import annotations
 
@@ -116,6 +133,143 @@ def _kernel(block_table, q_ref, kc_ref, vc_ref, ks_ref, vs_ref, state_ref,
         o_ref[0, 0] = acc_ref[...] / jnp.maximum(l_ref[0, 0], 1e-30)
 
 
+def _fused_kernel(bt_ref, blen_ref, q_ref, kc_ref, vc_ref, ks_ref, vs_ref,
+                  state_ref, bits_ref, bk_ref, bv_ref, o_ref, m_ref, l_ref,
+                  acc_ref, *, group: int, blocks_per_seq: int):
+    """One (layer, request, head) flash pass: NB quantized pool blocks, then
+    the fp TBQ buffer as the final grid step, final output from scratch."""
+    rr = pl.program_id(1)
+    b = pl.program_id(3)
+
+    @pl.when(b == 0)
+    def _init():
+        acc_ref[...] = jnp.zeros(acc_ref.shape, acc_ref.dtype)
+        m_ref[...] = jnp.full(m_ref.shape, NEG_INF, m_ref.dtype)
+        l_ref[...] = jnp.zeros(l_ref.shape, l_ref.dtype)
+
+    q = q_ref[0, 0, 0].astype(jnp.float32)                 # [GQ, D]
+    scale = 1.0 / (q.shape[-1] ** 0.5)
+
+    def accumulate(s, valid, v):
+        """Online-softmax update of (m, l, acc) with one partition."""
+        s = jnp.where(valid, s, NEG_INF)
+        m_prev, l_prev = m_ref[...], l_ref[...]
+        m_new = jnp.maximum(m_prev, jnp.max(s, axis=-1, keepdims=True))
+        p = jnp.exp(s - m_new)
+        p = jnp.where(valid, p, 0.0)
+        corr = jnp.exp(m_prev - m_new)
+        l_ref[...] = l_prev * corr + jnp.sum(p, axis=-1, keepdims=True)
+        acc_ref[...] = acc_ref[...] * corr + jax.lax.dot_general(
+            p, v, (((1,), (0,)), ((), ())),
+            preferred_element_type=jnp.float32)
+        m_ref[...] = m_new
+
+    @pl.when(b < blocks_per_seq)
+    def _pool_block():
+        kc = kc_ref[0, 0, :, 0]                            # [BS, D] u8
+        vc = vc_ref[0, 0, :, 0]
+        ks = ks_ref[0, 0, :, 0]                            # [BS, D//g]
+        vs = vs_ref[0, 0, :, 0]
+        state = state_ref[0, 0, 0]                         # [BS]
+        bits = bits_ref[0, 0, 0]
+        k = _decode_codes(kc, bits, ks, group)             # [BS, D]
+        v = _decode_codes(vc, bits, vs, group)
+        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        accumulate(s, (state == VALID)[None, :], v)
+
+    @pl.when(b == blocks_per_seq)
+    def _buffer_and_final():
+        bk = bk_ref[0, 0, :, 0].astype(jnp.float32)        # [G, D]
+        bv = bv_ref[0, 0, :, 0].astype(jnp.float32)
+        s = jax.lax.dot_general(q, bk, (((1,), (1,)), ((), ())),
+                                preferred_element_type=jnp.float32) * scale
+        pos = jax.lax.broadcasted_iota(jnp.int32, (1, bk.shape[0]), 1)
+        accumulate(s, pos < blen_ref[rr], bv)
+        o_ref[0, 0, 0] = acc_ref[...] / jnp.maximum(l_ref[...], 1e-30)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "interpret"))
+def ct_paged_attention_fused(qh: jax.Array, k_codes: jax.Array,
+                             v_codes: jax.Array, k_scales: jax.Array,
+                             v_scales: jax.Array, slot_state: jax.Array,
+                             slot_bits: jax.Array, block_table: jax.Array,
+                             buf_k: jax.Array, buf_v: jax.Array,
+                             buf_len: jax.Array, *, group: int = 16,
+                             interpret: bool = False) -> jax.Array:
+    """A whole decode tick's attention in ONE launch: every layer, every
+    request slot, quantized pool ∪ fp TBQ buffer, flash-merged in VMEM.
+
+    Args:
+      qh:         [L, R, H, GQ, D]   queries per layer/slot/kv-head.
+      k_codes:    [L, NP, BS, H, D]  uint8 shared physical pool planes.
+      v_codes:    [L, NP, BS, H, D]
+      k_scales:   [L, NP, BS, H, D//group]  (bf16, E4M3-valued)
+      v_scales:   [L, NP, BS, H, D//group]
+      slot_state: [L, R, NB, BS]     uint8 per-request logical (1 == valid).
+      slot_bits:  [L, R, NB, BS]     uint8 in {2,4,8}.
+      block_table:[R, L, NB]         int32 RAW logical -> physical block
+                  (-1 == unmapped; clamped here — unmapped slots are FREE).
+      buf_k:      [L, R, G, H, D]    full-precision TBQ buffer keys.
+      buf_v:      [L, R, G, H, D]
+      buf_len:    [R]                int32 valid buffer tokens per slot.
+
+    Returns:
+      out [L, R, H, GQ, D] f32 — FINAL attention outputs (pool and buffer
+      partitions merged in-kernel; no (m, l) stats plumbing).
+    """
+    L, r, h, gq, d = qh.shape
+    bs = k_codes.shape[2]
+    nb = block_table.shape[-1]
+    g = buf_k.shape[2]
+    table = jnp.maximum(block_table, 0).astype(jnp.int32)
+    blen = buf_len.astype(jnp.int32)
+
+    grid = (L, r, h, nb + 1)
+    kern = functools.partial(_fused_kernel, group=group, blocks_per_seq=nb)
+
+    def pool_idx(ll, rr, hh, b, bt, bl):
+        return (ll, bt[rr, ll, jnp.minimum(b, nb - 1)], 0, hh, 0)
+
+    def meta_idx(ll, rr, hh, b, bt, bl):
+        return (ll, rr, jnp.minimum(b, nb - 1), 0)
+
+    out = pl.pallas_call(
+        kern,
+        grid_spec=pltpu.PrefetchScalarGridSpec(
+            num_scalar_prefetch=2,
+            grid=grid,
+            in_specs=[
+                pl.BlockSpec((1, 1, 1, gq, d),
+                             lambda ll, rr, hh, b, bt, bl:
+                                 (ll, rr, hh, 0, 0)),
+                pl.BlockSpec((1, 1, bs, 1, d), pool_idx),
+                pl.BlockSpec((1, 1, bs, 1, d), pool_idx),
+                pl.BlockSpec((1, 1, bs, 1, d // group), pool_idx),
+                pl.BlockSpec((1, 1, bs, 1, d // group), pool_idx),
+                pl.BlockSpec((1, 1, 1, bs), meta_idx),
+                pl.BlockSpec((1, 1, 1, bs), meta_idx),
+                pl.BlockSpec((1, 1, g, 1, d),
+                             lambda ll, rr, hh, b, bt, bl:
+                                 (ll, rr, 0, hh, 0)),
+                pl.BlockSpec((1, 1, g, 1, d),
+                             lambda ll, rr, hh, b, bt, bl:
+                                 (ll, rr, 0, hh, 0)),
+            ],
+            out_specs=pl.BlockSpec((1, 1, 1, gq, d),
+                                   lambda ll, rr, hh, b, bt, bl:
+                                       (ll, rr, hh, 0, 0)),
+            scratch_shapes=[pltpu.VMEM((gq, 1), jnp.float32),
+                            pltpu.VMEM((gq, 1), jnp.float32),
+                            pltpu.VMEM((gq, d), jnp.float32)],
+        ),
+        out_shape=jax.ShapeDtypeStruct((L, r, h, gq, d), jnp.float32),
+        interpret=interpret,
+    )(table, blen, qh, k_codes, v_codes, k_scales, v_scales, slot_state,
+      slot_bits, buf_k, buf_v)
+    return out
+
+
 @functools.partial(jax.jit, static_argnames=("group", "interpret"))
 def ct_paged_attention_batched(qh: jax.Array, k_codes: jax.Array,
                                v_codes: jax.Array, k_scales: jax.Array,
@@ -134,8 +288,8 @@ def ct_paged_attention_batched(qh: jax.Array, k_codes: jax.Array,
       v_scales:   [NP, BS, H, D//group]
       slot_state: [R, NB, BS]    uint8 per-request logical (1 == valid).
       slot_bits:  [R, NB, BS]    uint8 in {2,4,8}.
-      block_table:[R, NB]        int32 logical -> physical block (>= 0;
-                  clamp unmapped entries to 0 — their slots must be FREE).
+      block_table:[R, NB]        int32 RAW logical -> physical block
+                  (-1 == unmapped; clamped here — unmapped slots are FREE).
 
     Returns:
       out [R, H, GQ, D] f32, m [R, H, GQ, 1], l [R, H, GQ, 1] flash stats
@@ -145,6 +299,7 @@ def ct_paged_attention_batched(qh: jax.Array, k_codes: jax.Array,
     npool, bs, hp, _ = k_codes.shape
     assert hp == h, (hp, h)
     nb = block_table.shape[-1]
+    block_table = jnp.maximum(block_table, 0).astype(jnp.int32)
 
     grid = (r, h, nb)
     kern = functools.partial(_kernel, group=group, blocks_per_seq=nb)
@@ -200,7 +355,8 @@ def ct_paged_attention(q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
       slot_state/slot_bits: [NP, BS] PHYSICAL-layout metadata (legacy
                   single-request convention: gathered through the table
                   here so the batched kernel sees the logical view).
-      block_table:[NB]           int32 sequence block -> physical block.
+      block_table:[NB]           int32 RAW sequence block -> physical block
+                  (-1 == unmapped; clamped here).
 
     Returns:
       out [Hq, D] f32, m [H, Gq, 1], l [H, Gq, 1].
@@ -209,8 +365,12 @@ def ct_paged_attention(q: jax.Array, k_codes: jax.Array, v_codes: jax.Array,
     h = k_codes.shape[2]
     gq = hq // h
     qh = q.reshape(1, h, gq, d)
-    state = jnp.take(slot_state, block_table, axis=0)[None]    # [1, NB, BS]
-    bits = jnp.take(slot_bits, block_table, axis=0)[None]
+    safe = jnp.maximum(block_table, 0)
+    state = jnp.take(slot_state, safe, axis=0)                 # [NB, BS]
+    # unmapped entries gather physical block 0 — mask its state out so -1
+    # means "no tokens here" regardless of what block 0 holds
+    state = jnp.where((block_table >= 0)[:, None], state, 0)[None]
+    bits = jnp.take(slot_bits, safe, axis=0)[None]
     out, m, l = ct_paged_attention_batched(
         qh, k_codes, v_codes, k_scales, v_scales, state, bits,
         block_table[None], group=group, interpret=interpret)

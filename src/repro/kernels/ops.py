@@ -16,7 +16,8 @@ import jax.numpy as jnp
 from repro.core import ct_cache as CC
 from repro.kernels import ref as R
 from repro.kernels.ct_paged_attention import (ct_paged_attention,
-                                              ct_paged_attention_batched)
+                                              ct_paged_attention_batched,
+                                              ct_paged_attention_fused)
 from repro.kernels.flash_prefill import flash_prefill
 from repro.kernels.group_quant import group_quant
 
@@ -52,9 +53,9 @@ def paged_decode_attention_batched(qh, k_codes, v_codes, k_scales, v_scales,
     per layer for every request slot of a continuous-batching tick.
 
     qh [R, H, GQ, D]; planes [NP, BS, H, ...]; slot_state/slot_bits
-    [R, NB, BS] logical; block_table [R, NB] (unmapped entries must be
-    clamped to a valid physical id by the caller — their slots are FREE so
-    the state mask zeroes their contribution).
+    [R, NB, BS] logical; block_table [R, NB] RAW (-1 == unmapped; clamped
+    by the entry points — their slots are FREE so the state mask zeroes
+    their contribution).
     Returns (out [R, H, GQ, D], m [R, H, GQ, 1], l [R, H, GQ, 1]).
     """
     use, interp = _use_pallas(force)
@@ -65,6 +66,70 @@ def paged_decode_attention_batched(qh, k_codes, v_codes, k_scales, v_scales,
     return R.ct_paged_attention_batched_ref(
         qh, k_codes, v_codes, k_scales, v_scales, slot_state, slot_bits,
         block_table, group=group)
+
+
+def paged_decode_attention_fused(qh, k_codes, v_codes, k_scales, v_scales,
+                                 slot_state, slot_bits, block_table,
+                                 buf_k, buf_v, buf_len, *, group: int = 16,
+                                 force: Optional[str] = None):
+    """A whole decode tick's attention in ONE kernel launch: every layer and
+    request slot, quantized pool ∪ fp TBQ buffer merged in VMEM.
+
+    qh [L, R, H, GQ, D]; planes [L, NP, BS, H, ...]; slot_state/slot_bits
+    [L, R, NB, BS]; block_table [R, L, NB] RAW (-1 accepted); buf_k/buf_v
+    [L, R, G, H, D]; buf_len [R].  Returns FINAL out [L, R, H, GQ, D].
+    """
+    use, interp = _use_pallas(force)
+    if use:
+        return ct_paged_attention_fused(
+            qh, k_codes, v_codes, k_scales, v_scales, slot_state, slot_bits,
+            block_table, buf_k, buf_v, buf_len, group=group,
+            interpret=interp)
+    return R.ct_paged_attention_fused_ref(
+        qh, k_codes, v_codes, k_scales, v_scales, slot_state, slot_bits,
+        block_table, buf_k, buf_v, buf_len, group=group)
+
+
+def _subjaxprs(params):
+    """Yield every sub-jaxpr stored in an eqn's params."""
+    from jax import core as jcore
+    for v in params.values():
+        vals = v if isinstance(v, (tuple, list)) else (v,)
+        for x in vals:
+            if isinstance(x, jcore.ClosedJaxpr):
+                yield x.jaxpr
+            elif isinstance(x, jcore.Jaxpr):
+                yield x
+
+
+def count_pallas_launches(jaxpr) -> int:
+    """Static per-call ``pallas_call`` LAUNCH count of a (closed) jaxpr.
+
+    Unlike a flat equation count, this multiplies launches inside a
+    ``lax.scan`` body by the scan trip count — a kernel inside a layer scan
+    really launches L times per step.  ``cond`` branches contribute their
+    maximum (worst case); ``while`` bodies are counted once (one trip lower
+    bound).  Use with ``jax.make_jaxpr(fn)(*args)`` to audit how many
+    kernel launches one engine tick dispatches.
+    """
+    from jax import core as jcore
+    if isinstance(jaxpr, jcore.ClosedJaxpr):
+        jaxpr = jaxpr.jaxpr
+    n = 0
+    for eqn in jaxpr.eqns:
+        name = eqn.primitive.name
+        if name == "pallas_call":
+            n += 1
+        elif name == "scan":
+            n += eqn.params["length"] * count_pallas_launches(
+                eqn.params["jaxpr"])
+        elif name == "cond":
+            n += max(count_pallas_launches(b)
+                     for b in eqn.params["branches"])
+        else:
+            n += sum(count_pallas_launches(j)
+                     for j in _subjaxprs(eqn.params))
+    return n
 
 
 def buffer_attention(q, buf_k, buf_v, buf_len):

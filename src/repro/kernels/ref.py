@@ -25,10 +25,12 @@ def ct_paged_attention_batched_ref(qh, k_codes, v_codes, k_scales, v_scales,
     :func:`repro.kernels.ct_paged_attention.ct_paged_attention_batched`.
 
     qh [R, H, GQ, D]; code/scale planes [NP, BS, H, ...] (shared pool);
-    slot_state/slot_bits [R, NB, BS] logical; block_table [R, NB].
+    slot_state/slot_bits [R, NB, BS] logical; block_table [R, NB] RAW
+    (-1 == unmapped; clamped here — unmapped slots are FREE).
     """
     r, h, gq, d = qh.shape
     _, bs = k_codes.shape[0], k_codes.shape[1]
+    block_table = jnp.maximum(block_table, 0)
 
     def one(qh_r, state_r, bits_r, table_r):
         take = lambda a: jnp.take(a, table_r, axis=0)
@@ -66,12 +68,67 @@ def ct_paged_attention_ref(q, k_codes, v_codes, k_scales, v_scales,
     h = k_codes.shape[2]
     gq = hq // h
     qh = q.reshape(1, h, gq, d)
-    state = jnp.take(slot_state, block_table, axis=0)[None]
-    bits = jnp.take(slot_bits, block_table, axis=0)[None]
+    safe = jnp.maximum(block_table, 0)
+    state = jnp.take(slot_state, safe, axis=0)
+    # unmapped entries gather physical block 0 — mask its state out so -1
+    # means "no tokens here" regardless of what block 0 holds
+    state = jnp.where((block_table >= 0)[:, None], state, 0)[None]
+    bits = jnp.take(slot_bits, safe, axis=0)[None]
     out, m, l = ct_paged_attention_batched_ref(
         qh, k_codes, v_codes, k_scales, v_scales, state, bits,
         block_table[None], group=group)
     return out[0].reshape(hq, d), m[0], l[0]
+
+
+def buffer_attention_batched_ref(qh, buf_k, buf_v, buf_len
+                                 ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Flash stats over the full-precision TBQ buffer, every request slot.
+
+    qh [R, H, GQ, D]; buf_k/buf_v [R, G, H, D]; buf_len [R].
+    Returns (out [R, H, GQ, D], m [R, H, GQ, 1], l [R, H, GQ, 1]).
+    """
+    d = qh.shape[-1]
+    g = buf_k.shape[1]
+
+    def one(qh_r, bk, bv, n):
+        valid = jnp.arange(g) < n
+        s = jnp.einsum("hgd,nhd->hgn", qh_r.astype(jnp.float32),
+                       bk.astype(jnp.float32)) / jnp.sqrt(float(d))
+        s = jnp.where(valid[None, None, :], s, NEG_INF)
+        m = jnp.max(s, axis=-1, keepdims=True)
+        p = jnp.exp(s - m)
+        p = jnp.where(valid[None, None, :], p, 0.0)
+        l = jnp.sum(p, axis=-1, keepdims=True)
+        out = jnp.einsum("hgn,nhd->hgd", p / jnp.maximum(l, 1e-30),
+                         bv.astype(jnp.float32))
+        return out, m, l
+
+    return jax.vmap(one)(qh, buf_k, buf_v, buf_len)
+
+
+def ct_paged_attention_fused_ref(qh, k_codes, v_codes, k_scales, v_scales,
+                                 slot_state, slot_bits, block_table,
+                                 buf_k, buf_v, buf_len, *, group: int = 16
+                                 ) -> jax.Array:
+    """Oracle for
+    :func:`repro.kernels.ct_paged_attention.ct_paged_attention_fused`:
+    per-layer batched pool attention flash-merged with the fp TBQ buffer.
+
+    qh [L, R, H, GQ, D]; planes [L, NP, BS, H, ...]; slot_state/slot_bits
+    [L, R, NB, BS]; block_table [R, L, NB] RAW (-1 accepted);
+    buf_k/buf_v [L, R, G, H, D]; buf_len [R].  Returns [L, R, H, GQ, D].
+    """
+    def one_layer(qh_l, kc, vc, ks, vs, state_l, bits_l, table_l, bk_l,
+                  bv_l):
+        out_p, m_p, l_p = ct_paged_attention_batched_ref(
+            qh_l, kc, vc, ks, vs, state_l, bits_l, table_l, group=group)
+        out_b, m_b, l_b = buffer_attention_batched_ref(qh_l, bk_l, bv_l,
+                                                       buf_len)
+        return jax.vmap(merge_flash_ref)(out_p, m_p, l_p, out_b, m_b, l_b)
+
+    return jax.vmap(one_layer, in_axes=(0, 0, 0, 0, 0, 0, 0, 1, 0, 0))(
+        qh, k_codes, v_codes, k_scales, v_scales, slot_state, slot_bits,
+        block_table, buf_k, buf_v)
 
 
 def merge_flash_ref(out_a, m_a, l_a, out_b, m_b, l_b):

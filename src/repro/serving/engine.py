@@ -6,29 +6,59 @@ layout, with per-request per-layer block tables mapping logical CT blocks
 to physical blocks.  Blocks freed by TBE eviction (or request retirement)
 return to the global free list and are reused by other requests.
 
-Per decode tick (one jitted call for every request slot):
+SINGLE-LAUNCH DECODE TICK.  The tick's attention for EVERY layer and every
+request slot is one fused kernel launch (``ct_paged_attention_fused``,
+grid ``(L, R, H, NB+1)``), with the fp TBQ-buffer partition folded into
+the kernel's final grid step — no per-layer launches, no XLA stats merge.
+To make all-layer queries available to a single launch, the tick is a
+two-pass dataflow (both backends — the dataflow is backend-independent):
+
   1. embed each slot's current token;
-  2. scan layers: project qkv (RoPE'd), write KV into the TBQ buffer plane,
-     attend over (CT pool ∪ buffer) and measure attention sparsity for the
-     calibrated layers.  Two attention backends:
-       * ``backend="kernel"``   — ONE batched ``ct_paged_attention`` launch
-         per layer reads only the quantized pool through the block tables
-         (compiled on TPU, interpret mode on CPU) and is flash-merged with
-         the fp TBQ-buffer attention via the kernel's (m, l) stats;
-       * ``backend="reference"``— the dense path: gather the request's
-         view, dequantize the entire pool to fp, joint softmax (the seed
-         behaviour, kept as the parity oracle);
-  3. ``engine_advance``: group commit (TBQ quantize + CT slot reuse +
+  2. TRUNK scan over layers: project qkv (RoPE'd) from the running hidden
+     state, write KV into the TBQ buffer plane, apply the MLP/MoE residual;
+     the per-layer queries are stacked as ``[L, R, Hq, hd]``;
+  3. ATTENTION, once, over the stacked queries (CT pool ∪ buffer):
+       * ``backend="kernel"``   — ONE fused ``ct_paged_attention_fused``
+         launch for all layers/slots (compiled on TPU, interpret on CPU);
+       * ``backend="reference"``— the dense path: gather each request's
+         view, dequantize the pool to fp, joint softmax per layer (the
+         parity oracle — same dataflow, XLA ops);
+  4. RESIDUAL scan: apply each layer's attention output projection;
+  5. ``engine_advance``: group commit (TBQ quantize + CT slot reuse +
      physical block mapping) + budget eviction every g tokens, thought
      refresh + TBE every tau — pool gather/scatter happens ONLY then;
-  4. sample the next token.
+  6. sample the next token.
 
-Prompts no longer trickle one token per tick: admission runs a CHUNKED
-BATCHED PREFILL (chunks of g tokens, ``kernels/flash_prefill`` semantics
-for the intra-chunk causal part, the paged kernel for the frozen-pool
-part), committing each full chunk as one TBQ group — mathematically the
-same cache evolution as the token-by-token loop (chunks align with group
-commits; tau % g == 0 keeps refreshes on chunk boundaries).
+The two-pass form is ATTENTION-LATE: within a tick, no layer's attention
+output feeds any other layer's projections — all attention residuals join
+the stream only after the trunk.  This is a materially different function
+from the sequential transformer block (and stronger than GPT-J-style
+parallel blocks, which still propagate attention outputs across layers);
+it is the price of hoisting the layer axis into one launch, since q_l of
+the sequential form depends on attention l-1.  Decode-written KV
+therefore comes from trunk hidden states while prefill-written KV comes
+from the sequential forward (prefill and ``serve_step`` keep the
+sequential arrangement).  Both backends share the dataflow, so the parity
+oracle validates the KERNEL against dense math — not the tick against
+the sequential model.  Attention sparsity for calibrated layers is
+measured by the dense path only on ticks where some slot refreshes.
+
+Prompts do not trickle one token per tick: admission runs a CHUNKED
+BATCHED PREFILL.  Prompts >= ``prefill_chunk`` (128-multiple) tokens go
+through LARGE chunks whose causal intra-chunk partition runs the COMPILED
+``flash_prefill`` kernel and whose frozen-pool partition runs the batched
+paged kernel (chunk queries fold into the q-group axis), committing C/g
+TBQ groups per chunk in order; the tail (< 128 tokens) uses chunks of g
+(the intra-chunk part of a g-sized chunk is below the kernel's 128-tile
+and runs the reference oracle).  g-sized chunks reproduce the
+token-by-token cache evolution exactly (chunks align with group commits;
+tau % g == 0 keeps refreshes on commit boundaries).  Large chunks relax
+it in two standard chunked-prefill ways: intra-chunk tokens are attended
+at FULL precision (the token-by-token loop would have quantized —
+possibly evicted — all but the latest group), and the chunk's single
+end-of-chunk sparsity value feeds every refresh that falls inside the
+chunk.  Both backends share the large-chunk dataflow, so backend parity
+is unaffected; the committed KV itself is quantized identically.
 """
 from __future__ import annotations
 
@@ -104,7 +134,8 @@ class ThinKVEngine:
     def __init__(self, cfg: ServeConfig, params=None,
                  lstar: Optional[Sequence[int]] = None,
                  backend: str = "auto", pool_blocks: Optional[int] = None,
-                 record_logits: bool = False):
+                 record_logits: bool = False,
+                 prefill_chunk: Optional[int] = None):
         assert cfg.model.family in (ArchFamily.DENSE, ArchFamily.MOE,
                                     ArchFamily.VLM), \
             "engine demo covers decoder-only backbones (the paper's scope)"
@@ -138,14 +169,30 @@ class ThinKVEngine:
             (cfg.max_seqs, self.dims.L, self.dims.NB)).copy()
         self.caches = jax.vmap(lambda _: CC.init_cache(self.dims))(
             jnp.arange(cfg.max_seqs))
-        self._tick = jax.jit(self._make_tick())
+        if prefill_chunk is None:
+            # default: 128-token large chunks when they can align with
+            # group commits; a g that does not divide 128 disables the
+            # large-chunk path (g-sized chunks only) rather than failing
+            prefill_chunk = 128 if 128 % self.dims.G == 0 else 0
+        assert prefill_chunk == 0 or (prefill_chunk % 128 == 0 and
+                                      prefill_chunk % self.dims.G == 0), \
+            "large prefill chunks must be 128-multiples aligned with commits"
+        self.prefill_chunk = prefill_chunk
+        # unjitted tick kept for jaxpr inspection (launch-count auditing)
+        self._tick_fn = self._make_tick()
+        self._tick = jax.jit(self._tick_fn)
         self._prefill_chunk = jax.jit(self._make_prefill_chunk())
+        self._prefill_big_fn = self._make_prefill_big() if prefill_chunk \
+            else None
+        self._prefill_big = jax.jit(self._prefill_big_fn) if prefill_chunk \
+            else None
         self._reset_slot = jax.jit(self._make_reset())
         self.record_logits = record_logits
         self.trace: List[Dict] = []          # per-call logits (for parity)
         self.metrics: Dict[str, float] = {"ticks": 0, "tokens": 0,
                                           "prefill_tokens": 0,
-                                          "prefill_chunks": 0}
+                                          "prefill_chunks": 0,
+                                          "prefill_big_chunks": 0}
 
     # ------------------------------------------------------------------
     # attention helpers shared by tick + prefill
@@ -169,40 +216,14 @@ class ThinKVEngine:
         valid = state_l == CC.VALID
         return _joint_attend(q, kd, vd, valid, buf_k, buf_v, buf_mask)
 
-    def _kernel_layer_batched(self, q, kc_l, vc_l, ks_l, vs_l, state_l,
-                              bits_l, table_l, bk_l, bv_l, n_buf):
-        """Kernel path for ALL slots, one layer: one batched paged launch
-        merged with the fp buffer attention via flash stats.
-
-        q [R, Hq, D]; planes [NP, BS, ...]; state/bits [R, NS];
-        table [R, NB]; buffers [R, G, H, D]; n_buf [R].
-        """
-        dims = self.dims
-        r, hq, hd = q.shape
-        h = dims.H
-        gq = hq // h
-        qh = q.reshape(r, h, gq, hd).astype(jnp.float32)
-        shp = (r, dims.NB, dims.BS)
-        o_p, m_p, l_p = K.paged_decode_attention_batched(
-            qh, kc_l, vc_l, ks_l, vs_l, state_l.reshape(shp),
-            bits_l.reshape(shp), jnp.maximum(table_l, 0),
-            force=self._force)
-
-        def merge_one(o_p_r, m_p_r, l_p_r, q_r, bk_r, bv_r, nb_r):
-            o_b, m_b, l_b = K.buffer_attention(q_r.astype(jnp.float32),
-                                               bk_r, bv_r, nb_r)
-            return KR.merge_flash_ref(o_p_r.reshape(hq, hd), m_p_r, l_p_r,
-                                      o_b, m_b, l_b)
-
-        out = jax.vmap(merge_one)(o_p, m_p, l_p, q, bk_l, bv_l, n_buf)
-        return out.astype(q.dtype)
-
     # ------------------------------------------------------------------
     def _make_tick(self):
         cfg, tk, dims = self.mcfg, self.tk, self.dims
-        lstar = jnp.asarray(self.lstar)
+        lstar = self.lstar                   # static tuple of layer ids
+        lstar_arr = jnp.asarray(self.lstar)
         backend = self.backend
         R = self.cfg.max_seqs
+        gq = cfg.num_heads // dims.H
 
         def tick(params, pool, tables, caches, tokens, active, rng):
             h = jax.vmap(lambda t: E.embed(params["embed"], t[None],
@@ -213,9 +234,10 @@ class ThinKVEngine:
             refresh_due = active & \
                 ((caches.num_tokens + 1) % tk.refresh_interval == 0)
 
-            def body(carry, inp):
+            # ---- pass 1: qkv projections + buffer write + MLP trunk ----
+            def trunk(carry, inp):
                 h, buf_k, buf_v = carry
-                lidx, lp, kc_l, vc_l, ks_l, vs_l = inp
+                lidx, lp = inp
                 x1 = rmsnorm(lp["norm1"], h, cfg.norm_eps)
                 q, k, v = jax.vmap(
                     lambda xx, pp: A.qkv_decode(lp["attn"], xx, cfg, pp))(
@@ -227,57 +249,88 @@ class ThinKVEngine:
                     return b_r.at[lidx].set(row)
                 buf_k = jax.vmap(upd)(buf_k, k, buf_len)
                 buf_v = jax.vmap(upd)(buf_v, v, buf_len)
-                bk_l = buf_k[:, lidx]                            # [R,G,H,hd]
-                bv_l = buf_v[:, lidx]
-                state_l = caches.slot_state[:, lidx]             # [R, NS]
-                bits_l = caches.slot_bits[:, lidx]
-                table_l = tables[:, lidx]                        # [R, NB]
-                n_buf = buf_len + 1
-                g = dims.G
-                buf_mask = jnp.arange(g)[None] < n_buf[:, None]  # [R, G]
-
-                is_calib = jnp.any(lidx == lstar)
-
-                def dense_all():
-                    def one(q_r, st_r, bt_r, tb_r, bk_r, bv_r, bm_r):
-                        o, p, valid = self._dense_layer(
-                            q_r[None], kc_l, vc_l, ks_l, vs_l, st_r, bt_r,
-                            tb_r, bk_r, bv_r, bm_r[None])
-                        return o[0], _probs_sparsity(p[0], valid[0])
-                    return jax.vmap(one)(q, state_l, bits_l, table_l,
-                                         bk_l, bv_l, buf_mask)
-
-                if backend == "kernel":
-                    o = self._kernel_layer_batched(
-                        q, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
-                        table_l, bk_l, bv_l, n_buf)
-                    # sparsity is only CONSUMED at tau refresh boundaries —
-                    # run the dense probs pass for calibrated layers only on
-                    # ticks where some slot is about to refresh, keeping the
-                    # kernel path free of per-token dense-dequant traffic
-                    spars = jax.lax.cond(
-                        is_calib & jnp.any(refresh_due),
-                        lambda: dense_all()[1],
-                        lambda: jnp.zeros((R,), jnp.float32))
-                else:
-                    o, spars = dense_all()
-
-                h = h + jax.vmap(lambda oo: A.out_proj(lp["attn"], oo))(o)
                 x2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
                 if cfg.moe is not None:
                     m, _ = moe_apply(lp["moe"], x2[:, None], cfg)
                     m = m[:, 0]
                 else:
                     m = mlp(lp["mlp"], x2, cfg.act, cfg.mlp_gated)
-                return (h + m, buf_k, buf_v), spars
+                return (h + m, buf_k, buf_v), q
 
-            (h, buf_k, buf_v), spars_all = jax.lax.scan(
-                body, (h, caches.buf_k, caches.buf_v),
-                (jnp.arange(cfg.num_layers), params["layers"],
-                 pool.view.k_codes, pool.view.v_codes,
-                 pool.view.k_scales, pool.view.v_scales))
+            (h, buf_k, buf_v), qs = jax.lax.scan(
+                trunk, (h, caches.buf_k, caches.buf_v),
+                (jnp.arange(cfg.num_layers), params["layers"]))
             caches = caches.replace(buf_k=buf_k, buf_v=buf_v)
-            sparsity = jnp.mean(spars_all[lstar], axis=0)        # [R]
+            n_buf = buf_len + 1                                  # [R]
+
+            def dense_one_layer(kc_l, vc_l, ks_l, vs_l, q_l, st_l, bt_l,
+                                tb_l, bk_l, bv_l):
+                """Dense-dequant attention + probs, one layer's planes,
+                every slot — shared by the reference attention scan and
+                the kernel backend's sparsity probe."""
+                def one(q_r, st_r, bt_r, tb_r, bk_r, bv_r, nb_r):
+                    bm = (jnp.arange(dims.G) < nb_r)[None]       # [1, G]
+                    o, p, valid = self._dense_layer(
+                        q_r[None], kc_l, vc_l, ks_l, vs_l, st_r, bt_r,
+                        tb_r, bk_r, bv_r, bm)
+                    return o[0], _probs_sparsity(p[0], valid[0])
+                return jax.vmap(one)(q_l, st_l, bt_l, tb_l, bk_l, bv_l,
+                                     n_buf)
+
+            def dense_layer_all_slots(l):
+                """:func:`dense_one_layer` at STATIC layer index l."""
+                return dense_one_layer(
+                    pool.view.k_codes[l], pool.view.v_codes[l],
+                    pool.view.k_scales[l], pool.view.v_scales[l],
+                    qs[l], caches.slot_state[:, l], caches.slot_bits[:, l],
+                    tables[:, l], buf_k[:, l], buf_v[:, l])
+
+            # ---- pass 2: attention, ONCE, over the stacked queries ----
+            if backend == "kernel":
+                qh = qs.reshape(cfg.num_layers, R, dims.H, gq,
+                                cfg.head_dim).astype(jnp.float32)
+                o_all = K.paged_decode_attention_fused(
+                    qh, pool.view.k_codes, pool.view.v_codes,
+                    pool.view.k_scales, pool.view.v_scales,
+                    CC.stacked_slot_plane(dims, caches.slot_state),
+                    CC.stacked_slot_plane(dims, caches.slot_bits),
+                    tables, CC.stacked_buffers(buf_k),
+                    CC.stacked_buffers(buf_v), n_buf, force=self._force)
+                o_all = o_all.reshape(cfg.num_layers, R, cfg.num_heads,
+                                      cfg.head_dim).astype(qs.dtype)
+                # sparsity is only CONSUMED at tau refresh boundaries — run
+                # the dense probs pass for the calibrated layers only on
+                # ticks where some slot is about to refresh, keeping the
+                # kernel path free of per-token dense-dequant traffic
+                spars_calib = jax.lax.cond(
+                    jnp.any(refresh_due),
+                    lambda: jnp.stack([dense_layer_all_slots(l)[1]
+                                       for l in lstar]),
+                    lambda: jnp.zeros((len(lstar), R), jnp.float32))
+                sparsity = jnp.mean(spars_calib, axis=0)         # [R]
+            else:
+                def attend(_, inp):
+                    (q_l, kc_l, vc_l, ks_l, vs_l, st_l, bt_l, tb_l, bk_l,
+                     bv_l) = inp
+                    return 0, dense_one_layer(kc_l, vc_l, ks_l, vs_l, q_l,
+                                              st_l, bt_l, tb_l, bk_l, bv_l)
+
+                _, (o_all, spars_all) = jax.lax.scan(
+                    attend, 0,
+                    (qs, pool.view.k_codes, pool.view.v_codes,
+                     pool.view.k_scales, pool.view.v_scales,
+                     jnp.swapaxes(caches.slot_state, 0, 1),
+                     jnp.swapaxes(caches.slot_bits, 0, 1),
+                     jnp.swapaxes(tables, 0, 1),
+                     CC.stacked_buffers(buf_k), CC.stacked_buffers(buf_v)))
+                sparsity = jnp.mean(spars_all[lstar_arr], axis=0)  # [R]
+
+            # ---- pass 3: attention output residuals ----
+            def residual(hc, inp):
+                lp, o_l = inp
+                return hc + A.out_proj(lp["attn"], o_l), None
+
+            h, _ = jax.lax.scan(residual, h, (params["layers"], o_all))
 
             # cache maintenance against the shared pool: sequential over
             # slots (disjoint physical blocks; allocation is serialized)
@@ -398,7 +451,14 @@ class ThinKVEngine:
                       table_l, k_chunk, v_chunk, tok_valid):
         """Kernel path for one prefill chunk: every chunk query attends the
         FROZEN pool (queries fold into the kernel's q-group axis) merged
-        with the causal intra-chunk flash part."""
+        with the causal intra-chunk flash part.
+
+        ``tok_valid=None`` means the chunk is FULL (the large-chunk path):
+        the intra-chunk partition then runs the compiled ``flash_prefill``
+        kernel (the chunk length is a 128-multiple).  With a mask (the
+        g-sized tail path, chunk <= 16 tokens — below the kernel's 128
+        tile) it runs the reference oracle.
+        """
         dims = self.dims
         c, hq, hd = q.shape
         h = dims.H
@@ -409,23 +469,134 @@ class ThinKVEngine:
         shp = (1, dims.NB, dims.BS)
         o_p, m_p, l_p = K.paged_decode_attention_batched(
             qh, kc_l, vc_l, ks_l, vs_l, state_l.reshape(shp),
-            bits_l.reshape(shp), jnp.maximum(table_l, 0)[None],
-            force=self._force)
+            bits_l.reshape(shp), table_l[None], force=self._force)
         # back to per-query layout [C, Hq, ...]
         unfold = lambda a, d: a[0].reshape(h, c, gq, d).transpose(1, 0, 2, 3) \
             .reshape(c, hq, d)
         o_p = unfold(o_p, hd)
         m_p = unfold(m_p, 1)
         l_p = unfold(l_p, 1)
-        # causal intra-chunk partition (flash_prefill semantics + stats).
-        # chunk == g <= 16 tokens, so this stays on the reference oracle
-        # (kv_valid masking); large 128-multiple chunks through the
-        # compiled flash_prefill kernel are a ROADMAP open item
         o_c, m_c, l_c = K.prefill_attention_stats(
             q.astype(jnp.float32), k_chunk.astype(jnp.float32),
-            v_chunk.astype(jnp.float32), causal=True, kv_valid=tok_valid)
+            v_chunk.astype(jnp.float32), causal=True, kv_valid=tok_valid,
+            force=self._force if tok_valid is None else None)
         return KR.merge_flash_ref(o_p, m_p, l_p, o_c, m_c,
                                   l_c).astype(q.dtype)
+
+    # ------------------------------------------------------------------
+    def _make_prefill_big(self):
+        """Large-chunk prefill: ``prefill_chunk`` (128-multiple) tokens of
+        ONE slot in a single forward — the causal intra-chunk partition
+        through the COMPILED ``flash_prefill`` kernel, the frozen-pool
+        partition through the batched paged kernel — then C/g TBQ group
+        commits in order (each enforcing budget/refresh).  See the module
+        docstring for the two ways this relaxes the token-by-token cache
+        evolution (fp intra-chunk visibility; one sparsity per chunk)."""
+        cfg, tk, dims = self.mcfg, self.tk, self.dims
+        lstar_arr = jnp.asarray(self.lstar)
+        backend = self.backend
+        C = self.prefill_chunk
+
+        def big_step(params, pool, table, cache, tokens_c):
+            start = cache.num_tokens
+            positions = start + jnp.arange(C, dtype=jnp.int32)
+            # sparsity is consumed only if a tau boundary falls in-chunk
+            has_refresh = jnp.any(
+                (start + jnp.arange(1, C + 1)) % tk.refresh_interval == 0)
+            h = E.embed(params["embed"], tokens_c, cfg)          # [C, Dm]
+
+            def body(carry, inp):
+                h = carry
+                lidx, lp, kc_l, vc_l, ks_l, vs_l = inp
+                x1 = rmsnorm(lp["norm1"], h, cfg.norm_eps)
+                q, k, v = A._project_qkv(lp["attn"], x1, cfg)    # [C,*,hd]
+                if cfg.position_embedding.value == "rope":
+                    cos, sin = rope_freqs(positions, cfg.head_dim,
+                                          cfg.rope_theta)
+                    q = apply_rope(q, cos, sin)
+                    k = apply_rope(k, cos, sin)
+                state_l = cache.slot_state[lidx]                 # [NS]
+                bits_l = cache.slot_bits[lidx]
+                table_l = table[lidx]                            # [NB]
+                is_calib = jnp.any(lidx == lstar_arr)
+
+                def dense():
+                    bm = jnp.arange(C)[None, :] <= jnp.arange(C)[:, None]
+                    o, p, valid = self._dense_layer(
+                        q, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
+                        table_l, k, v, bm)
+                    return o, _probs_sparsity(p[C - 1], valid[C - 1])
+
+                if backend == "kernel":
+                    o = self._chunk_kernel(q, kc_l, vc_l, ks_l, vs_l,
+                                           state_l, bits_l, table_l, k, v,
+                                           None)
+                    spars = jax.lax.cond(is_calib & has_refresh,
+                                         lambda: dense()[1],
+                                         lambda: jnp.float32(0))
+                else:
+                    o, spars = dense()
+
+                h = h + A.out_proj(lp["attn"], o)
+                x2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
+                if cfg.moe is not None:
+                    m, _ = moe_apply(lp["moe"], x2[None], cfg)
+                    m = m[0]
+                else:
+                    m = mlp(lp["mlp"], x2, cfg.act, cfg.mlp_gated)
+                return h + m, (spars, k, v)
+
+            h, (spars_all, ks_all, vs_all) = jax.lax.scan(
+                body, h,
+                (jnp.arange(cfg.num_layers), params["layers"],
+                 pool.view.k_codes, pool.view.v_codes,
+                 pool.view.k_scales, pool.view.v_scales))
+            sparsity = jnp.mean(spars_all[lstar_arr])
+
+            # commit the chunk as C/g TBQ groups, in order — the pool is
+            # frozen during the forward, then each commit runs the same
+            # quantize/alloc/budget/refresh sequence as a g-sized arrival
+            ngroups = C // dims.G
+            kg = jnp.swapaxes(
+                ks_all.reshape(cfg.num_layers, ngroups, dims.G, dims.H,
+                               cfg.head_dim), 0, 1)
+            vg = jnp.swapaxes(
+                vs_all.reshape(cfg.num_layers, ngroups, dims.G, dims.H,
+                               cfg.head_dim), 0, 1)
+
+            def commit(carry, inp):
+                pool, table, cache = carry
+                bk_g, bv_g = inp
+                cache = cache.replace(
+                    buf_k=bk_g.astype(cache.buf_k.dtype),
+                    buf_v=bv_g.astype(cache.buf_v.dtype),
+                    buf_len=jnp.int32(0))
+                pool, table, cache = CC.engine_advance(
+                    tk, dims, pool, table, cache, sparsity, jnp.bool_(True),
+                    n_new=dims.G)
+                return (pool, table, cache), None
+
+            (pool, table, cache), _ = jax.lax.scan(
+                commit, (pool, table, cache), (kg, vg))
+
+            h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
+            logits = softcap(E.unembed(params["embed"], h[C - 1], cfg),
+                             cfg.logit_softcap)
+            return pool, table, cache, logits
+
+        return big_step
+
+    def tick_launch_count(self) -> int:
+        """Per-tick ``pallas_call`` LAUNCH count, audited on the decode
+        tick's jaxpr (scan bodies multiplied by trip count — a kernel
+        inside the layer scan would count L times).  The fused kernel
+        backend is exactly 1 at any layer count; reference is 0."""
+        R = self.cfg.max_seqs
+        jaxpr = jax.make_jaxpr(self._tick_fn)(
+            self.params, self.pool, self.tables, self.caches,
+            jnp.zeros(R, jnp.int32), jnp.ones(R, bool),
+            jax.random.PRNGKey(0))
+        return K.count_pallas_launches(jaxpr)
 
     def _make_reset(self):
         dims = self.dims
@@ -478,14 +649,29 @@ class ThinKVEngine:
         self.caches = self._reset_slot(self.caches, jnp.int32(i))
 
     def _prefill(self, i: int, prompt: np.ndarray) -> np.ndarray:
-        """Chunked batched prefill of one slot; returns last-token logits."""
+        """Chunked batched prefill of one slot; returns last-token logits.
+
+        Prompts are consumed as large 128-multiple chunks first (compiled
+        ``flash_prefill`` for the intra-chunk causal part, multiple group
+        commits per chunk), then the tail in chunks of g.  Large chunks
+        require an empty TBQ buffer, which holds here: prefill starts from
+        a fresh slot and every chunk size is a multiple of g."""
         dims = self.dims
         C = dims.G
+        BC = self.prefill_chunk
         cache_i = jax.tree.map(lambda x: x[i], self.caches)
         table_i = self.tables[i]
         logits = None
-        for s0 in range(0, len(prompt), C):
-            chunk = prompt[s0:s0 + C]
+        s0 = 0
+        while BC and len(prompt) - s0 >= BC:
+            chunk = np.asarray(prompt[s0:s0 + BC], np.int32)
+            self.pool, table_i, cache_i, logits = self._prefill_big(
+                self.params, self.pool, table_i, cache_i,
+                jnp.asarray(chunk))
+            self.metrics["prefill_big_chunks"] += 1
+            s0 += BC
+        for s in range(s0, len(prompt), C):
+            chunk = prompt[s:s + C]
             n_valid = len(chunk)
             padded = np.zeros(C, np.int32)
             padded[:n_valid] = chunk

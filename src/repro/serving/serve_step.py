@@ -214,23 +214,24 @@ def _pool_attention(q, k_codes, v_codes, k_scales, v_scales, slot_state,
 def _pool_attention_kernel(q, k_codes, v_codes, k_scales, v_scales,
                            slot_state, slot_bits, buf_k, buf_v, buf_len,
                            force):
-    """Kernel-dispatch variant of :func:`_pool_attention`: the pool is read
-    ONLY through ``ops.paged_decode_attention`` (fused dequant, identity
-    table — serve_step batches are per-request pools by construction) and
-    flash-merged with the fp buffer via the kernel's (m, l) stats."""
+    """Kernel-dispatch variant of :func:`_pool_attention`: one
+    ``ops.paged_decode_attention_fused`` launch (L=1, R=1) reads the pool
+    through an identity table (serve_step batches are per-request pools by
+    construction) AND folds the fp-buffer attention into the kernel's final
+    grid step — the (pool, buffer) flash merge happens in VMEM, no (m, l)
+    stats plumbing back to XLA."""
     from repro.kernels import ops as K
-    from repro.kernels import ref as KR
-    nb, bs = k_codes.shape[0], k_codes.shape[1]
+    nb, bs, h = k_codes.shape[0], k_codes.shape[1], k_codes.shape[2]
     hq, hd = q.shape
-    table = jnp.arange(nb, dtype=jnp.int32)
-    out_p, m_p, l_p = K.paged_decode_attention(
-        q.astype(jnp.float32), k_codes, v_codes, k_scales, v_scales,
-        slot_state.reshape(nb, bs), slot_bits.reshape(nb, bs), table,
-        force=force)
-    out_b, m_b, l_b = K.buffer_attention(q.astype(jnp.float32), buf_k,
-                                         buf_v, buf_len)
-    return KR.merge_flash_ref(out_p, m_p, l_p, out_b, m_b,
-                              l_b).astype(q.dtype)
+    gq = hq // h
+    qh = q.reshape(1, 1, h, gq, hd).astype(jnp.float32)
+    table = jnp.arange(nb, dtype=jnp.int32)[None, None]       # [R=1, L=1]
+    out = K.paged_decode_attention_fused(
+        qh, k_codes[None], v_codes[None], k_scales[None], v_scales[None],
+        slot_state.reshape(1, 1, nb, bs), slot_bits.reshape(1, 1, nb, bs),
+        table, buf_k[None, None], buf_v[None, None],
+        buf_len.reshape(1).astype(jnp.int32), force=force)
+    return out.reshape(hq, hd).astype(q.dtype)
 
 
 def make_decode_step_thinkv(cfg: ModelConfig, tk: ThinKVConfig, *,

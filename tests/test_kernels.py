@@ -203,6 +203,118 @@ def test_ct_paged_attention_batched_vs_ref(rng):
                                    rtol=3e-5, atol=3e-5)
 
 
+def _fused_args(rng, layers, kv_heads=2, head_dim=64, precision=(2, 4, 8),
+                requests=2):
+    """Build fused-kernel inputs from a REAL CT cache evolution (evicted +
+    free slot mixes from budget pressure) with ``layers`` stacked layers,
+    plus random fp TBQ buffers and raw block tables with -1 sentinels."""
+    _, dims, cache, view, _ = _cache_args(rng, kv_heads, head_dim,
+                                          layers=layers, precision=precision)
+    assert bool(np.any(np.asarray(cache.slot_state) == 2)), \
+        "sweep must exercise evicted slots"
+    assert bool(np.any(np.asarray(cache.slot_state) == 0)), \
+        "sweep must exercise free slots"
+    L, NB, BS, G = dims.L, dims.NB, dims.BS, dims.G
+    state = np.asarray(cache.slot_state).reshape(L, NB, BS)
+    bits = np.asarray(cache.slot_bits).reshape(L, NB, BS)
+    state_r = np.broadcast_to(state[:, None], (L, requests, NB, BS)).copy()
+    bits_r = np.broadcast_to(bits[:, None], (L, requests, NB, BS)).copy()
+    # identity tables; the last request leaves fully-FREE blocks unmapped
+    # (-1 sentinel) to exercise the raw-table entry-point clamp
+    tables = np.broadcast_to(np.arange(NB, dtype=np.int32)[None, None],
+                             (requests, L, NB)).copy()
+    block_free = ~(state == 1).any(axis=2) & ~(state == 2).any(axis=2)
+    for l in range(L):
+        tables[-1, l][block_free[l]] = -1
+    buf_k = rng.standard_normal((L, requests, G, dims.H, dims.D))
+    buf_v = rng.standard_normal((L, requests, G, dims.H, dims.D))
+    buf_len = np.linspace(0, G, requests).astype(np.int32)
+    return dims, dict(
+        k_codes=view.k_codes, v_codes=view.v_codes,
+        k_scales=view.k_scales, v_scales=view.v_scales,
+        slot_state=jnp.asarray(state_r), slot_bits=jnp.asarray(bits_r),
+        block_table=jnp.asarray(tables),
+        buf_k=jnp.asarray(buf_k, jnp.bfloat16),
+        buf_v=jnp.asarray(buf_v, jnp.bfloat16),
+        buf_len=jnp.asarray(buf_len))
+
+
+@pytest.mark.parametrize("layers,precision", [(1, (2, 4, 4)), (2, (2, 4, 8)),
+                                              (4, (8, 8, 8))])
+@pytest.mark.parametrize("hq_mult", (1, 2, 4))
+def test_ct_paged_attention_fused_vs_ref(rng, layers, precision, hq_mult):
+    """Fused-layer sweep: the single-launch (L, R, H, NB+1)-grid kernel
+    (pool + folded TBQ-buffer merge) matches the layered reference across
+    layer counts, GQA ratios, bit-widths, and evicted/free slot mixes —
+    within the 1e-3 acceptance bound (observed ~1e-5)."""
+    from repro.kernels.ct_paged_attention import ct_paged_attention_fused
+    kv_heads, head_dim = 2, 64
+    dims, args = _fused_args(rng, layers, kv_heads, head_dim, precision)
+    R_ = args["block_table"].shape[0]
+    qh = jnp.asarray(rng.standard_normal(
+        (layers, R_, kv_heads, hq_mult, head_dim)), jnp.float32)
+    o_k = ct_paged_attention_fused(qh, **args, group=16, interpret=True)
+    o_r = R.ct_paged_attention_fused_ref(qh, **args, group=16)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=1e-4, atol=1e-4)
+
+
+def test_ct_paged_attention_fused_is_one_launch(rng):
+    """The fused entry point stages exactly ONE pallas_call regardless of
+    layer count (the launch-amortization contract)."""
+    from repro.kernels.ct_paged_attention import ct_paged_attention_fused
+    _, args = _fused_args(rng, layers=4)
+    qh = jnp.asarray(rng.standard_normal((4, 2, 2, 2, 64)), jnp.float32)
+    jaxpr = jax.make_jaxpr(
+        lambda q, a: ct_paged_attention_fused(q, **a, group=16,
+                                              interpret=True))(qh, args)
+    assert ops.count_pallas_launches(jaxpr) == 1
+
+
+def test_batched_entry_accepts_raw_tables(rng):
+    """Entry points clamp -1 sentinels internally: a raw table with
+    unmapped (all-FREE) blocks matches the pre-clamped call."""
+    kv_heads, head_dim = 2, 64
+    _, dims, cache, view, args = _cache_args(rng, kv_heads, head_dim)
+    kc, vc, ks, vs, state, bits, table = args
+    state_np = np.asarray(state)
+    free_blocks = ~(state_np != 0).any(axis=1)
+    assert free_blocks.any(), "need at least one fully-free block"
+    raw = np.asarray(table).copy()
+    raw[free_blocks] = -1
+    q = jnp.asarray(rng.standard_normal((8, head_dim)), jnp.float32)
+    o_raw, _, l_raw = ct_paged_attention(q, kc, vc, ks, vs, state, bits,
+                                         jnp.asarray(raw), group=16,
+                                         interpret=True)
+    o_ref, _, l_ref = R.ct_paged_attention_ref(q, kc, vc, ks, vs, state,
+                                               bits, table, group=16)
+    np.testing.assert_allclose(np.asarray(o_raw), np.asarray(o_ref),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(l_raw), np.asarray(l_ref),
+                               rtol=3e-5, atol=3e-5)
+
+
+@pytest.mark.parametrize("chunk", (128, 256))
+def test_large_chunk_prefill_kernel_vs_chunked_ref(rng, chunk):
+    """Large-chunk prefill parity: a 128-multiple chunk through the
+    compiled ``flash_prefill`` kernel (stats variant) matches the chunked
+    reference oracle — the intra-chunk partition of the engine's
+    large-chunk prefill mode."""
+    hq, h, d = 4, 2, 64
+    q = jnp.asarray(rng.standard_normal((chunk, hq, d)), jnp.float32)
+    k = jnp.asarray(rng.standard_normal((chunk, h, d)), jnp.float32)
+    v = jnp.asarray(rng.standard_normal((chunk, h, d)), jnp.float32)
+    o_k, m_k, l_k = ops.prefill_attention_stats(q, k, v, causal=True,
+                                                force="pallas")
+    o_r, m_r, l_r = R.flash_prefill_stats_ref(q, k, v, causal=True)
+    np.testing.assert_allclose(np.asarray(o_k), np.asarray(o_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(m_k), np.asarray(m_r),
+                               rtol=3e-5, atol=3e-5)
+    np.testing.assert_allclose(np.asarray(l_k), np.asarray(l_r),
+                               rtol=3e-5, atol=3e-5)
+
+
 def test_full_thinkv_attention_kernel_path(rng):
     """Kernel + B_buf merge == reference decode attention."""
     cfg, dims, cache, view, _ = _cache_args(rng, 2, 64, steps=90)
