@@ -20,11 +20,18 @@ Three parts:
 4. **Layer sweep** (``--layers``): per-tick decode throughput + launch
    counts at L in {4, 16, 32} — the launch-amortization win of folding
    the layer axis into the kernel grid grows linearly with L.
+5. **Oversubscription sweep**: the engine with the shared block pool at
+   100% / 50% / 25% of the dense worst case (``max_seqs * NB``) —
+   throughput, preemption/resume counts, and mean queue wait under
+   watermark admission + pause/spill/resume.  Every request must
+   complete with zero dropped tokens at every pool size.
 
 Results are also APPENDED to ``BENCH_table2.json`` at the repo root (one
 record per run, tagged with the git SHA) so the perf trajectory is
-tracked across PRs.  ``--smoke`` runs a tiny interpret-mode configuration
-as a CI kernel-path regression gate.
+tracked across PRs; every engine entry records its ``pool_blocks`` and
+preemption counts so oversubscribed runs are distinguishable from
+full-pool runs when comparing across PRs.  ``--smoke`` runs a tiny
+interpret-mode configuration as a CI kernel-path regression gate.
 """
 from __future__ import annotations
 
@@ -203,6 +210,8 @@ def engine_throughput(arch="r1-llama-8b", requests=3, slots=2,
                                - base["prefill_chunks"]),
             "requests": len(done),
             "pallas_launches_per_tick": launches,
+            "pool_blocks": eng.num_pool_blocks,
+            "preemptions": eng.metrics["preemptions"],
         }
     # prefill tokens/s measured separately: prompt-only requests on a
     # freshly warmed reference engine
@@ -270,6 +279,73 @@ def layer_sweep(layers=(4, 16, 32), arch="r1-llama-8b", ticks=6, slots=1,
     return rows
 
 
+def oversubscription_sweep(fracs=(1.0, 0.5, 0.25), arch="r1-llama-8b",
+                           requests=6, slots=4, prompt_len=12, max_new=32,
+                           seed=0):
+    """Engine throughput vs pool size: the shared block pool at ``fracs``
+    of the dense worst case (``slots * NB``), with mixed priorities.
+
+    At every pool size ALL requests must complete with their full token
+    count — under pressure the engine pauses victims (spill to host) and
+    resumes them later, it never drops data.  Reports throughput,
+    preemption/resume counts, and mean queue wait per pool size so the
+    cross-PR log can track the cost of oversubscription."""
+    from repro.config import ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.core import ct_cache as CC
+    from repro.serving.engine import ThinKVEngine
+
+    mcfg = get_smoke_config(arch)
+    tk = _smoke_tk()
+    scfg = ServeConfig(model=mcfg, thinkv=tk, max_seqs=slots,
+                       temperature=0.0)
+    dims = CC.make_dims(tk, mcfg.num_layers, mcfg.num_kv_heads,
+                        mcfg.head_dim)
+    worst = slots * dims.NB
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, mcfg.vocab_size, prompt_len)
+               for _ in range(requests)]
+    priorities = [i % 2 for i in range(requests)]
+
+    rows = []
+    params = None
+    for frac in fracs:
+        pool_blocks = max(int(worst * frac), 1)
+        eng = ThinKVEngine(scfg, params=params, backend="reference",
+                           pool_blocks=pool_blocks)
+        params = eng.params
+        eng.submit([p.copy() for p in prompts], max_new_tokens=max_new,
+                   priorities=priorities)
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        full = sum(len(r.output) == max_new for r in done)
+        if len(done) != requests or full != requests:
+            raise SystemExit(
+                f"oversubscription regression at pool_frac={frac}: "
+                f"{len(done)}/{requests} finished, {full} with full "
+                f"outputs (dropped tokens)")
+        row = {
+            "pool_frac": frac,
+            "pool_blocks": pool_blocks,
+            "worst_case_blocks": worst,
+            "requests": requests,
+            "completed": len(done),
+            "tokens": eng.metrics["tokens"],
+            "decode_tok_per_s": eng.metrics["tokens"] / max(wall, 1e-9),
+            "preemptions": eng.metrics["preemptions"],
+            "resumes": eng.metrics["resumes"],
+            "mean_queue_wait_ticks": (eng.metrics["queue_wait_ticks"]
+                                      / max(eng.metrics["admissions"], 1)),
+        }
+        rows.append(row)
+        print(f"  pool {100 * frac:5.0f}% ({pool_blocks:4d} blocks): "
+              f"{row['decode_tok_per_s']:7.1f} tok/s | "
+              f"{row['preemptions']:3d} preemptions | queue wait "
+              f"{row['mean_queue_wait_ticks']:.1f} ticks")
+    return rows
+
+
 def _git_sha() -> str:
     try:
         return subprocess.check_output(
@@ -332,6 +408,12 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
     if layers is None:
         layers = (2, 4) if smoke else (4, 16, 32)
     out["layer_sweep"] = layer_sweep(layers=layers)
+    print("  oversubscription sweep (watermark admission + preemption):")
+    if smoke:
+        out["oversubscription"] = oversubscription_sweep(
+            requests=3, slots=4, prompt_len=8, max_new=16)
+    else:
+        out["oversubscription"] = oversubscription_sweep()
     if os.path.dirname(out_path):
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
@@ -341,8 +423,14 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
         "timestamp": time.strftime("%Y-%m-%dT%H:%M:%S"),
         "backend_mode": kmode,
         "smoke": bool(smoke),
+        # pool_blocks + preemptions also live in each engine backend row so
+        # cross-PR comparisons can tell oversubscribed runs apart
+        "pool_blocks": out["engine"]["reference"]["pool_blocks"],
+        "preemptions": out["engine"]["reference"]["preemptions"]
+        + out["engine"]["kernel"]["preemptions"],
         "engine": out["engine"],
         "layer_sweep": out["layer_sweep"],
+        "oversubscription": out["oversubscription"],
     })
     print(f"  perf trajectory appended to {BENCH_LOG}")
     return out

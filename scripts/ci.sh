@@ -2,10 +2,16 @@
 # Tier-1 verification (see ROADMAP.md): the full pytest suite on CPU, then
 # the table2 throughput benchmark in --smoke mode (tiny config, interpret
 # kernels) so kernel-path regressions — e.g. the decode tick dispatching
-# more than ONE fused pallas launch — fail CI rather than only pytest.
+# more than ONE fused pallas launch — fail CI rather than only pytest,
+# then the oversubscription gate: the engine with the shared block pool at
+# 25% of the dense worst case must complete EVERY request (preemptions are
+# expected and fine; dropped tokens or a deadlock fail the gate).
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python benchmarks/table2_throughput.py --smoke
+python -m repro.launch.serve --requests 6 --slots 4 --prompt-len 12 \
+    --max-new 48 --temperature 0 --pool-frac 0.25 --priorities 0,1 \
+    --expect-all --expect-preemptions

@@ -552,12 +552,18 @@ def scatter_view(pool_view: PoolView, table: jax.Array, view: PoolView
 
 def sync_block_tables(dims: CacheDims, pool: GlobalPool, table: jax.Array,
                       cache: CTCache, view: PoolView
-                      ) -> Tuple[GlobalPool, jax.Array, CTCache]:
+                      ) -> Tuple[GlobalPool, jax.Array, CTCache, jax.Array]:
     """Reconcile a request's logical blocks with the physical pool after a
     CT update: release freed blocks, map newly claimed ones (lowest free
     physical id first), scatter the view back, and revert any logical
     claims the pool could not back (allocation failure under
     oversubscription — surfaced as still-FREE slots, never corruption).
+
+    The fourth return is the ``[L, NB]`` allocation-failure mask.  The
+    serving engine guarantees it stays all-False by preempting requests
+    BEFORE a commit that the free list cannot back (see
+    ``ThinKVEngine._ensure_decode_headroom``); it is surfaced so the
+    engine can assert the guarantee rather than silently dropping data.
     """
     np_blocks = pool.free.shape[1]
     new_bt = cache.block_type
@@ -593,7 +599,7 @@ def sync_block_tables(dims: CacheDims, pool: GlobalPool, table: jax.Array,
         block_type=jnp.where(alloc_failed, jnp.int8(-1), cache.block_type))
 
     pool_view = scatter_view(pool.view, table, view)
-    return GlobalPool(view=pool_view, free=free), table, cache
+    return GlobalPool(view=pool_view, free=free), table, cache, alloc_failed
 
 
 def release_blocks(dims: CacheDims, pool: GlobalPool, table: jax.Array
@@ -606,10 +612,96 @@ def release_blocks(dims: CacheDims, pool: GlobalPool, table: jax.Array
     return GlobalPool(view=pool.view, free=free)
 
 
+# ---------------------------------------------------------------------------
+# Preemption: spill a request's physical blocks to the host, restore later
+# ---------------------------------------------------------------------------
+
+def claim_blocks(dims: CacheDims, pool: GlobalPool, mapped: jax.Array
+                 ) -> Tuple[GlobalPool, jax.Array, jax.Array]:
+    """Map every True entry of ``mapped`` [L, NB] to a fresh physical block
+    (lowest free physical id first, per layer).
+
+    Returns ``(pool, table, ok)`` — ``ok`` is False when some layer's free
+    list could not back the full mapping (the caller must not use the
+    partial table; the engine's admission gate checks free counts first so
+    this only fires on a gate bug)."""
+    np_blocks = pool.free.shape[1]
+
+    def one_layer(free_row, need):
+        order = jnp.where(free_row, jnp.arange(np_blocks, dtype=jnp.int32),
+                          jnp.int32(np_blocks + 1))
+        free_sorted = jnp.argsort(order).astype(jnp.int32)
+        n_free = jnp.sum(free_row.astype(jnp.int32))
+        rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+        cand = free_sorted[jnp.clip(rank, 0, np_blocks - 1)]
+        got = need & (rank < n_free)
+        table_row = jnp.where(got, cand, UNMAPPED)
+        free_row = free_row.at[jnp.where(got, cand, np_blocks)].set(
+            False, mode="drop")
+        return free_row, table_row, ~jnp.any(need & ~got)
+
+    free, table, ok = jax.vmap(one_layer)(pool.free, mapped)
+    return GlobalPool(view=pool.view, free=free), table, jnp.all(ok)
+
+
+def extract_request(dims: CacheDims, pool: GlobalPool, table: jax.Array
+                    ) -> Tuple[PoolView, jax.Array]:
+    """Snapshot a request's physical blocks for a host-side spill.
+
+    Returns the per-request paged view (``[L, NB, BS, ...]``, gathered
+    through the table) and the ``[L, NB]`` mapped mask.  Unmapped logical
+    blocks gather garbage (block 0) — harmless, because restore only
+    claims and scatters the mapped entries and every slot of an unmapped
+    block is FREE in the spilled metadata."""
+    return gather_view(pool.view, table), table >= 0
+
+
+def restore_request(dims: CacheDims, pool: GlobalPool, mapped: jax.Array,
+                    view: PoolView
+                    ) -> Tuple[GlobalPool, jax.Array, jax.Array]:
+    """Re-admit a spilled request: claim fresh physical blocks for its
+    mapped logical blocks and scatter the spilled planes back through the
+    new table.  The physical ids generally differ from the pre-spill ones,
+    but every read goes through the block table in LOGICAL order, so the
+    resumed attention math is bit-exact."""
+    pool, table, ok = claim_blocks(dims, pool, mapped)
+    pool = GlobalPool(view=scatter_view(pool.view, table, view),
+                      free=pool.free)
+    return pool, table, ok
+
+
+def check_pool_invariants(pool: GlobalPool, tables) -> dict:
+    """Host-side audit of the pool accounting invariants.
+
+    For every layer: (a) no physical block is referenced by two live block
+    tables, (b) no mapped block is marked free, and (c) ``claimed + free ==
+    pool_blocks``.  ``tables`` is ``[R, L, NB]`` (or a single ``[L, NB]``).
+    Raises AssertionError on violation; returns per-layer counts."""
+    import numpy as np
+    free = np.asarray(pool.free)
+    tb = np.asarray(tables)
+    if tb.ndim == 2:
+        tb = tb[None]
+    L, NP = free.shape
+    claimed = []
+    for l in range(L):
+        mapped = tb[:, l][tb[:, l] >= 0]
+        assert len(mapped) == len(set(mapped.tolist())), \
+            f"layer {l}: physical block referenced by two live block tables"
+        assert not free[l][mapped].any(), \
+            f"layer {l}: mapped physical block marked free"
+        n_free = int(free[l].sum())
+        assert len(mapped) + n_free == NP, \
+            f"layer {l}: claimed({len(mapped)}) + free({n_free}) != {NP}"
+        claimed.append(len(mapped))
+    return {"claimed": claimed, "free": free.sum(axis=1).tolist(),
+            "pool_blocks": NP}
+
+
 def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
                    table: jax.Array, cache: CTCache, sparsity: jax.Array,
-                   active: jax.Array, n_new: jax.Array | int = 1
-                   ) -> Tuple[GlobalPool, jax.Array, CTCache]:
+                   active: jax.Array, n_new: jax.Array | int = 1,
+                   with_alloc_fail: bool = False):
     """Engine-side ``advance_after_write`` against the shared global pool.
 
     ``n_new`` tokens were written into the buffer this call (1 per decode
@@ -617,31 +709,39 @@ def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
     The pool is only touched when a commit or refresh is actually due
     (every g / tau tokens) — the gather/scatter through the block table is
     cold-path maintenance, never per-token traffic.
+
+    With ``with_alloc_fail=True`` a fourth scalar bool is returned: True
+    iff this call's commit hit an allocation failure (claims reverted,
+    group data dropped).  The serving engine threads it out of the jitted
+    tick and asserts it never fires — its preemption headroom checks make
+    failure impossible by pausing victims before an unbackable commit.
     """
 
     def advance(args):
-        pool, table, cache = args
+        pool, table, cache, _ = args
         cache = cache.replace(buf_len=cache.buf_len + n_new,
                               num_tokens=cache.num_tokens + n_new)
         at_commit = cache.buf_len >= dims.G
         at_refresh = (cache.num_tokens % cfg.refresh_interval) == 0
 
         def maintain(args):
-            pool, table, cache = args
+            pool, table, cache, _ = args
             view = gather_view(pool.view, table)
             cache, view = commit_and_evict_if_full(cfg, dims, cache, view)
             cache = jax.lax.cond(
                 at_refresh,
                 lambda c: refresh(cfg, dims, c, view, sparsity),
                 lambda c: c, cache)
-            pool, table, cache = sync_block_tables(
+            pool, table, cache, failed = sync_block_tables(
                 dims, pool, table, cache, view)
-            return pool, table, cache
+            return pool, table, cache, jnp.any(failed)
 
         return jax.lax.cond(at_commit | at_refresh, maintain, lambda a: a,
-                            (pool, table, cache))
+                            (pool, table, cache, jnp.bool_(False)))
 
-    return jax.lax.cond(active, advance, lambda a: a, (pool, table, cache))
+    out = jax.lax.cond(active, advance, lambda a: a,
+                       (pool, table, cache, jnp.bool_(False)))
+    return out if with_alloc_fail else out[:3]
 
 
 # ---------------------------------------------------------------------------

@@ -3,6 +3,15 @@
 Runs the ThinKV continuous-batching engine on synthetic reasoning prompts
 and reports throughput + compression stats (the CPU-scale analogue of the
 paper's Table 2 measurement loop).
+
+Oversubscription knobs: ``--pool-blocks`` (absolute) or ``--pool-frac``
+(fraction of the dense worst case ``slots * NB``) shrink the shared
+physical block pool below worst-case demand; the engine then serves via
+watermark admission + preemption (pause lowest-priority request, spill
+its blocks to the host, resume later — no recompute, no dropped tokens).
+``--priorities`` assigns request priorities (higher = served first,
+preempted last).  ``--expect-all`` turns the run into a CI gate: exit
+nonzero unless every request completes with its full token count.
 """
 from __future__ import annotations
 
@@ -12,6 +21,7 @@ import numpy as np
 
 from repro.config import ServeConfig, ThinKVConfig
 from repro.configs import get_config, get_smoke_config
+from repro.core import ct_cache as CC
 from repro.serving.engine import ThinKVEngine
 
 
@@ -31,6 +41,24 @@ def main():
                     choices=("auto", "reference", "kernel"),
                     help="decode attention path: dense dequant (reference) "
                          "or the ct_paged_attention kernel")
+    ap.add_argument("--pool-blocks", type=int, default=None,
+                    help="physical blocks in the shared pool (default: the "
+                         "dense worst case, slots * NB)")
+    ap.add_argument("--pool-frac", type=float, default=None,
+                    help="pool size as a fraction of the dense worst case "
+                         "(e.g. 0.25 oversubscribes 4x; overrides "
+                         "--pool-blocks)")
+    ap.add_argument("--priorities", type=str, default=None,
+                    help="comma-separated priority ints cycled over "
+                         "requests (higher = served first, preempted last)")
+    ap.add_argument("--expect-all", action="store_true",
+                    help="CI gate: fail unless every request finishes with "
+                         "its full --max-new tokens (preemptions are fine; "
+                         "drops and deadlocks are not)")
+    ap.add_argument("--expect-preemptions", action="store_true",
+                    help="CI gate: fail unless at least one preemption + "
+                         "resume happened (guards the spill/resume "
+                         "machinery against vacuous oversubscription runs)")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -40,11 +68,21 @@ def main():
                       max_segments=256, kmeans_iters=4)
     cfg = ServeConfig(model=mcfg, thinkv=tk, max_seqs=args.slots,
                       temperature=args.temperature)
-    eng = ThinKVEngine(cfg, backend=args.backend)
+    dims = CC.make_dims(tk, mcfg.num_layers, mcfg.num_kv_heads,
+                        mcfg.head_dim)
+    worst_case = args.slots * dims.NB
+    pool_blocks = args.pool_blocks
+    if args.pool_frac is not None:
+        pool_blocks = max(int(worst_case * args.pool_frac), 1)
+    eng = ThinKVEngine(cfg, backend=args.backend, pool_blocks=pool_blocks)
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, mcfg.vocab_size, args.prompt_len)
                for _ in range(args.requests)]
-    eng.submit(prompts, max_new_tokens=args.max_new)
+    priorities = None
+    if args.priorities:
+        cycle = [int(x) for x in args.priorities.split(",")]
+        priorities = [cycle[i % len(cycle)] for i in range(args.requests)]
+    eng.submit(prompts, max_new_tokens=args.max_new, priorities=priorities)
     done = eng.run()
     toks = eng.metrics["tokens"]
     wall = eng.metrics["wall_s"]
@@ -53,6 +91,30 @@ def main():
     print(f"served {len(done)} requests | {toks} tokens in {wall:.1f}s "
           f"({toks / wall:.1f} tok/s interp-CPU) | "
           f"mean footprint {fr * 100:.2f}% of FullKV | avg {bits:.2f} bits")
+    print(f"pool {eng.num_pool_blocks}/{worst_case} blocks "
+          f"({100.0 * eng.num_pool_blocks / worst_case:.0f}% of worst case)"
+          f" | {eng.metrics['preemptions']} preemptions, "
+          f"{eng.metrics['resumes']} resumes | mean queue wait "
+          f"{eng.metrics['queue_wait_ticks'] / max(eng.metrics['admissions'], 1):.1f}"
+          f" ticks")
+    if args.expect_all:
+        short = [r for r in done if len(r.output) < args.max_new]
+        if len(done) != args.requests or short:
+            raise SystemExit(
+                f"oversubscription gate FAILED: {len(done)}/{args.requests} "
+                f"requests finished, {len(short)} with dropped tokens")
+        print(f"oversubscription gate OK: {args.requests}/{args.requests} "
+              f"requests completed with zero dropped tokens")
+    if args.expect_preemptions:
+        if eng.metrics["preemptions"] < 1 or \
+                eng.metrics["resumes"] != eng.metrics["preemptions"]:
+            raise SystemExit(
+                f"preemption gate FAILED: {eng.metrics['preemptions']} "
+                f"preemptions / {eng.metrics['resumes']} resumes — the "
+                f"oversubscribed run never exercised spill/resume (or a "
+                f"victim was never restored)")
+        print(f"preemption gate OK: {eng.metrics['preemptions']} "
+              f"preemption(s), every victim resumed")
 
 
 if __name__ == "__main__":

@@ -59,9 +59,46 @@ possibly evicted — all but the latest group), and the chunk's single
 end-of-chunk sparsity value feeds every refresh that falls inside the
 chunk.  Both backends share the large-chunk dataflow, so backend parity
 is unaffected; the committed KV itself is quantized identically.
+
+OVERSUBSCRIBED POOL + PREEMPTION (request lifecycle).  ThinKV's premise
+is that <5% of the dense KV suffices, so the engine runs its shared
+block pool OVERSUBSCRIBED: ``pool_blocks`` may be far below the dense
+worst case ``max_seqs * NB``.  Three mechanisms make that safe:
+
+  * WATERMARK ADMISSION — ``_admission_gate`` is a per-request check:
+    admit while every layer's free-block count covers the request's
+    budget-derived block estimate (valid tokens/layer never exceed
+    ``token_budget + g``, so ~``ceil((budget+g)/BS)`` blocks — NOT the
+    dense worst case of NB) plus one commit's claim per running request
+    (the low watermark).  A preempted request's estimate is exact: its
+    spilled mapping.
+  * PREEMPT-BEFORE-COMMIT — a group commit claims at most ``ceil(g/BS)``
+    fresh blocks per layer, so before any tick/prefill chunk whose
+    commits the free list cannot back, the engine PAUSES victims
+    (lowest priority, then most blocks held): the victim's pool blocks,
+    block tables, and TBQ buffer/metadata are spilled to a host-side
+    ``PreemptedState`` (numpy), its blocks released, and the request
+    re-queued as PREEMPTED.  Since the check runs ahead of need and
+    frees only add, in-flight commits can never hit an allocation
+    failure — the tick still threads the allocation-failure flag out of
+    jit and the engine asserts it stays False (no silent data loss).
+  * RESUME — admission restores a preempted request bit-exactly: fresh
+    physical blocks are claimed for its spilled mapping and the planes
+    scattered back.  Physical ids differ, but all reads go through the
+    block table in logical order, so the resumed request's logits match
+    an un-preempted run exactly (asserted on both backends) — no
+    recompute, no dropped tokens.
+
+Request states: WAITING -> RUNNING -> FINISHED, with RUNNING ->
+PREEMPTED -> RUNNING cycles under pool pressure (see
+``serving.scheduler``).  ``run`` raises only when nothing is preemptible
+AND the queue cannot progress: no running requests, the whole pool free,
+and the watermark still refuses every queued request — a pool too small
+for even one request, not a transient capacity state.
 """
 from __future__ import annotations
 
+import dataclasses
 import time
 from typing import Dict, List, Optional, Sequence
 
@@ -119,6 +156,24 @@ def _probs_sparsity(p_t, valid_t):
     pooled = pooled / jnp.maximum(jnp.sum(pooled, -1, keepdims=True), 1e-30)
     return jnp.mean(row_sparsity(
         pooled, jnp.broadcast_to(valid_t[None, :], pooled.shape)))
+
+
+@dataclasses.dataclass
+class PreemptedState:
+    """Host-side (numpy) spill of a paused request's device state.
+
+    Holds everything needed for a bit-exact resume: the request's pool
+    planes gathered through its block table (``view``, per-request paged
+    layout), which logical blocks were mapped (``mapped`` [L, NB]), the
+    full per-request cache pytree (slot/segment metadata + the fp TBQ
+    buffer), and the host loop's bookkeeping (generated-token count and
+    the token to feed at the next tick)."""
+
+    view: tuple                # PoolView planes as numpy [L, NB, BS, ...]
+    mapped: "np.ndarray"       # [L, NB] bool
+    cache: object              # CTCache with numpy leaves
+    tokens_out: int
+    next_token: int
 
 
 class ThinKVEngine:
@@ -189,10 +244,24 @@ class ThinKVEngine:
         self._reset_slot = jax.jit(self._make_reset())
         self.record_logits = record_logits
         self.trace: List[Dict] = []          # per-call logits (for parity)
+        # per-request logits sequences keyed by arrival stamp (parity tests
+        # compare these across engines regardless of preemption schedule)
+        self.request_logits: Dict[int, List[np.ndarray]] = {}
         self.metrics: Dict[str, float] = {"ticks": 0, "tokens": 0,
                                           "prefill_tokens": 0,
                                           "prefill_chunks": 0,
-                                          "prefill_big_chunks": 0}
+                                          "prefill_big_chunks": 0,
+                                          "preemptions": 0, "resumes": 0,
+                                          "admissions": 0,
+                                          "queue_wait_ticks": 0}
+        # --- oversubscription / preemption bookkeeping (host side) ---
+        self._spilled: Dict[int, PreemptedState] = {}   # arrival -> spill
+        self._queued_at: Dict[int, int] = {}            # arrival -> tick
+        self._slot_ntok = np.zeros(cfg.max_seqs, np.int64)  # num_tokens mirror
+        self._feed = np.zeros(cfg.max_seqs, np.int32)   # next-token inputs
+        # worst-case fresh physical blocks one group commit can claim per
+        # layer: G slots span at most ceil(G/BS) fully-free blocks
+        self._cc = -(-self.dims.G // self.dims.BS)
 
     # ------------------------------------------------------------------
     # attention helpers shared by tick + prefill
@@ -333,14 +402,17 @@ class ThinKVEngine:
             h, _ = jax.lax.scan(residual, h, (params["layers"], o_all))
 
             # cache maintenance against the shared pool: sequential over
-            # slots (disjoint physical blocks; allocation is serialized)
+            # slots (disjoint physical blocks; allocation is serialized).
+            # alloc_fail is threaded out so the host can assert the
+            # preemption headroom guarantee held (it must stay all-False)
             def adv(pool, xs):
                 cache_r, table_r, spars_r, active_r = xs
-                pool, table_r, cache_r = CC.engine_advance(
-                    tk, dims, pool, table_r, cache_r, spars_r, active_r)
-                return pool, (table_r, cache_r)
+                pool, table_r, cache_r, fail_r = CC.engine_advance(
+                    tk, dims, pool, table_r, cache_r, spars_r, active_r,
+                    with_alloc_fail=True)
+                return pool, (table_r, cache_r, fail_r)
 
-            pool, (tables_out, caches) = jax.lax.scan(
+            pool, (tables_out, caches, alloc_fail) = jax.lax.scan(
                 adv, pool, (caches, tables, sparsity, active))
 
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
@@ -353,7 +425,7 @@ class ThinKVEngine:
             else:
                 nxt = jnp.argmax(logits, axis=-1)
             return (nxt.astype(jnp.int32), pool, tables_out, caches,
-                    sparsity, logits)
+                    sparsity, logits, alloc_fail)
 
         return tick
 
@@ -435,15 +507,15 @@ class ThinKVEngine:
             cache = cache.replace(buf_k=buf_k, buf_v=buf_v)
             sparsity = jnp.mean(spars_all[lstar])
 
-            pool, table, cache = CC.engine_advance(
+            pool, table, cache, fail = CC.engine_advance(
                 tk, dims, pool, table, cache, sparsity,
-                jnp.bool_(True), n_new=n_valid)
+                jnp.bool_(True), n_new=n_valid, with_alloc_fail=True)
 
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
             last = jnp.clip(n_valid - 1, 0, C - 1)
             logits = softcap(E.unembed(params["embed"], h[last], cfg),
                              cfg.logit_softcap)
-            return pool, table, cache, logits
+            return pool, table, cache, logits, fail
 
         return chunk_step
 
@@ -571,18 +643,18 @@ class ThinKVEngine:
                     buf_k=bk_g.astype(cache.buf_k.dtype),
                     buf_v=bv_g.astype(cache.buf_v.dtype),
                     buf_len=jnp.int32(0))
-                pool, table, cache = CC.engine_advance(
+                pool, table, cache, fail = CC.engine_advance(
                     tk, dims, pool, table, cache, sparsity, jnp.bool_(True),
-                    n_new=dims.G)
-                return (pool, table, cache), None
+                    n_new=dims.G, with_alloc_fail=True)
+                return (pool, table, cache), fail
 
-            (pool, table, cache), _ = jax.lax.scan(
+            (pool, table, cache), fails = jax.lax.scan(
                 commit, (pool, table, cache), (kg, vg))
 
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
             logits = softcap(E.unembed(params["embed"], h[C - 1], cfg),
                              cfg.logit_softcap)
-            return pool, table, cache, logits
+            return pool, table, cache, logits, jnp.any(fails)
 
         return big_step
 
@@ -612,41 +684,181 @@ class ThinKVEngine:
     # ------------------------------------------------------------------
 
     def submit(self, prompts: Sequence[np.ndarray], max_new_tokens: int,
-               eos_token: Optional[int] = None):
+               eos_token: Optional[int] = None,
+               priorities: Optional[Sequence[int]] = None):
         for i, p in enumerate(prompts):
-            self.scheduler.submit(Request(
+            req = Request(
                 uid=i, prompt=np.asarray(p, np.int32),
-                max_new_tokens=max_new_tokens, eos_token=eos_token))
+                max_new_tokens=max_new_tokens, eos_token=eos_token,
+                priority=0 if priorities is None else int(priorities[i]))
+            self.scheduler.submit(req)
+            self._queued_at[req.arrival] = self.metrics["ticks"]
+
+    # ------------------------------------------------------------------
+    # oversubscribed-pool admission + preemption (host side)
+    # ------------------------------------------------------------------
+
+    def _free_per_layer(self) -> np.ndarray:
+        return np.asarray(jnp.sum(self.pool.free, axis=1)).astype(np.int64)
+
+    def _blocks_held(self, i: int) -> np.ndarray:
+        """Per-layer mapped physical blocks of slot ``i`` ([L])."""
+        return (np.asarray(self.tables[i]) >= 0).sum(axis=1)
+
+    def _commit_due(self, i: int) -> bool:
+        """Does slot ``i``'s NEXT written token trigger a group commit?"""
+        return (self._slot_ntok[i] + 1) % self.dims.G == 0
+
+    def _watermark_blocks(self, req: Request) -> np.ndarray:
+        """Per-layer block estimate for admitting ``req`` ([L]).
+
+        A PREEMPTED request's demand is exact — its spilled mapping — plus
+        one commit's claim of headroom.  A fresh request is estimated from
+        the eviction budget: budget eviction runs at every commit, so valid
+        tokens/layer never exceed ``token_budget + g``; ``ceil((budget+g) /
+        BS)`` blocks plus one commit's claim covers the steady state
+        (capped by NB, and by the request's own total length when shorter).
+        This is deliberately NOT the dense worst case — over-optimism is
+        repaired by preemption, never by data loss."""
+        dims = self.dims
+        st = self._spilled.get(req.arrival)
+        if st is not None:
+            return st.mapped.sum(axis=1).astype(np.int64) + self._cc
+        total = len(req.prompt) + int(req.max_new_tokens)
+        cap = min(total, self.tk.token_budget + dims.G)
+        est = min(dims.NB, -(-cap // dims.BS) + self._cc)
+        return np.full(dims.L, est, np.int64)
 
     def _admission_gate(self):
-        """Admission-control closure for ONE admit() sweep.
+        """Watermark admission closure for ONE admit() sweep (per-request).
 
-        A request can claim up to NB physical blocks per layer.  Admit only
-        while the pool can worst-case back every occupied slot's REMAINING
-        demand (NB - already-mapped) plus NB for each request admitted
-        earlier in this same sweep — a single stale free-count would
-        over-admit an oversubscribed pool (blocks are claimed lazily at
-        commits, not at admission)."""
-        dims = self.dims
-        free = np.asarray(jnp.sum(self.pool.free, axis=1))       # [L]
-        tables = np.asarray(self.tables)                         # [R, L, NB]
-        occupied = np.array([not s.free for s in self.scheduler.slots])
-        mapped = (tables >= 0).sum(axis=2)                       # [R, L]
-        demand = ((dims.NB - mapped) * occupied[:, None]).sum(0)  # [L]
-        state = {"reserved": 0}
+        Admit while every layer's free-block count stays at or above the
+        request's watermark estimate, after reserving one commit's claim
+        per already-running slot (the LOW WATERMARK — admission must never
+        starve in-flight requests straight into preemption).  Each
+        admission reserves its own estimate for the rest of the sweep, so
+        a single stale free-count cannot over-admit."""
+        free = self._free_per_layer()
+        running = sum(not s.free for s in self.scheduler.slots)
+        state = {"free": free - running * self._cc}
 
-        def gate() -> bool:
-            head = free - demand - state["reserved"] * dims.NB
-            ok = bool(np.min(head) >= dims.NB)
-            if ok:
-                state["reserved"] += 1
-            return ok
+        def gate(req: Request) -> bool:
+            need = self._watermark_blocks(req)
+            if np.all(state["free"] >= need):
+                state["free"] = state["free"] - need
+                return True
+            return False
         return gate
+
+    def _victim_exclude(self) -> tuple:
+        """Slots that must never be chosen as preemption victims: ones
+        whose request has not started (admitted this sweep, prefill not
+        yet run — they hold no blocks, so spilling them frees nothing and
+        would capture an EMPTY cache that resume could never replay)."""
+        return tuple(s.idx for s in self.scheduler.active_slots()
+                     if self._slot_ntok[s.idx] == 0)
+
+    def _preempt(self, slot) -> None:
+        """Pause a RUNNING request: spill its pool blocks + block table +
+        cache metadata/TBQ buffer to a host-side :class:`PreemptedState`,
+        release the blocks to the global free list, and re-queue the
+        request as PREEMPTED."""
+        i = slot.idx
+        req = slot.request
+        assert self._slot_ntok[i] > 0, \
+            "preempting a slot that never started (nothing to spill)"
+        view, mapped = CC.extract_request(self.dims, self.pool,
+                                          self.tables[i])
+        self._spilled[req.arrival] = PreemptedState(
+            view=tuple(np.asarray(p) for p in view),
+            mapped=np.asarray(mapped),
+            cache=jax.tree.map(lambda x: np.asarray(x[i]), self.caches),
+            tokens_out=slot.tokens_out,
+            next_token=int(self._feed[i]))
+        self._release_slot(i)
+        self.scheduler.preempt(slot)
+        self._queued_at[req.arrival] = self.metrics["ticks"]
+        self.metrics["preemptions"] += 1
+
+    def _resume(self, slot, st: PreemptedState) -> bool:
+        """Re-admit a preempted request bit-exactly: claim fresh physical
+        blocks for its spilled mapping, scatter the planes back, restore
+        the cache pytree and host bookkeeping.
+
+        Returns False (leaving pool and slot state untouched, the partial
+        claim released) when the free list cannot back the full mapping —
+        possible when an earlier admission in the SAME sweep overclaimed
+        past its watermark estimate (thought-type block fragmentation can
+        exceed the dense-packing estimate); the caller re-spills and
+        re-queues, and the next sweep's gate sees true free counts."""
+        i = slot.idx
+        pool, table_i, ok = CC.restore_request(
+            self.dims, self.pool, jnp.asarray(st.mapped),
+            CC.PoolView(*(jnp.asarray(p) for p in st.view)))
+        if not bool(ok):
+            self.pool = CC.release_blocks(self.dims, pool, table_i)
+            return False
+        self.pool = pool
+        self.tables = self.tables.at[i].set(table_i)
+        cache_i = jax.tree.map(jnp.asarray, st.cache)
+        self.caches = jax.tree.map(
+            lambda all_, one: all_.at[i].set(one), self.caches, cache_i)
+        slot.tokens_out = st.tokens_out
+        self._slot_ntok[i] = int(st.cache.num_tokens)
+        self._feed[i] = st.next_token
+        self.metrics["resumes"] += 1
+        return True
+
+    def _ensure_decode_headroom(self) -> None:
+        """Preempt AHEAD of need so the coming tick cannot hit an
+        allocation failure: each slot whose next token triggers a group
+        commit can claim at most ``ceil(g/BS)`` fresh blocks per layer, and
+        frees only add, so covering the committing slots from the free
+        list is sufficient.  Victims: lowest priority, then most blocks
+        held.  Preempting the last committing slot zeroes the demand, so
+        this always terminates without raising."""
+        sch = self.scheduler
+        committing = {s.idx for s in sch.active_slots()
+                      if self._commit_due(s.idx)}
+        if not committing:
+            return
+        need = len(committing) * self._cc
+        free = self._free_per_layer()
+        while need > 0 and int(free.min()) < need:
+            victim = sch.select_victim(
+                lambda i: int(self._blocks_held(i).max()),
+                exclude=self._victim_exclude())
+            assert victim is not None    # a committing slot always remains
+            free = free + self._blocks_held(victim.idx)
+            if victim.idx in committing:
+                committing.discard(victim.idx)
+                need -= self._cc
+            self._preempt(victim)
+
+    def _ensure_prefill_headroom(self, idx: int, n_blocks: int) -> None:
+        """Free headroom for one prefill-chunk commit of slot ``idx``,
+        preempting OTHER running slots if needed.  Raises only when nothing
+        is preemptible and the pool still cannot back the commit (a pool
+        too small for a single request)."""
+        free = self._free_per_layer()
+        while int(free.min()) < n_blocks:
+            victim = self.scheduler.select_victim(
+                lambda i: int(self._blocks_held(i).max()),
+                exclude=(idx,) + self._victim_exclude())
+            if victim is None:
+                raise RuntimeError(
+                    f"pool exhausted: {self.num_pool_blocks} physical "
+                    f"blocks cannot back one prefill commit "
+                    f"({n_blocks} blocks/layer) for the only "
+                    f"block-holding request — nothing is preemptible")
+            free = free + self._blocks_held(victim.idx)
+            self._preempt(victim)
 
     def _release_slot(self, i: int):
         self.pool = CC.release_blocks(self.dims, self.pool, self.tables[i])
         self.tables = self.tables.at[i].set(CC.init_block_table(self.dims))
         self.caches = self._reset_slot(self.caches, jnp.int32(i))
+        self._slot_ntok[i] = 0
 
     def _prefill(self, i: int, prompt: np.ndarray) -> np.ndarray:
         """Chunked batched prefill of one slot; returns last-token logits.
@@ -655,59 +867,104 @@ class ThinKVEngine:
         ``flash_prefill`` for the intra-chunk causal part, multiple group
         commits per chunk), then the tail in chunks of g.  Large chunks
         require an empty TBQ buffer, which holds here: prefill starts from
-        a fresh slot and every chunk size is a multiple of g."""
+        a fresh slot and every chunk size is a multiple of g.
+
+        Pool pressure: each g-sized chunk commits at most once (claiming
+        <= ceil(g/BS) fresh blocks/layer), checked — and covered by
+        preempting other slots — before every call.  A LARGE chunk commits
+        C/g groups inside ONE jitted call, so the host only observes frees
+        between calls; when the free list cannot cover the chunk's
+        worst-case claim the prompt falls back to g-sized chunks instead
+        (same math, per-commit granularity)."""
         dims = self.dims
         C = dims.G
         BC = self.prefill_chunk
         cache_i = jax.tree.map(lambda x: x[i], self.caches)
         table_i = self.tables[i]
         logits = None
+        fails = []
         s0 = 0
+        big_claims = (BC // C) * self._cc if BC else 0
         while BC and len(prompt) - s0 >= BC:
+            # worst-case free blocks one big chunk can need per layer: its
+            # C/g commits claim <= ceil(g/BS) each with no frees in
+            # between, but the logical table caps net growth at NB -
+            # mapped — any claim beyond that is preceded by at least as
+            # many in-chunk frees, which replenish the free list first
+            mapped = (np.asarray(table_i) >= 0).sum(axis=1)       # [L]
+            need = np.minimum(big_claims, dims.NB - mapped)
+            if (self._free_per_layer() < need).any():
+                break            # tight pool: g-sized chunks from here on
             chunk = np.asarray(prompt[s0:s0 + BC], np.int32)
-            self.pool, table_i, cache_i, logits = self._prefill_big(
+            self.pool, table_i, cache_i, logits, fail = self._prefill_big(
                 self.params, self.pool, table_i, cache_i,
                 jnp.asarray(chunk))
+            fails.append(fail)
             self.metrics["prefill_big_chunks"] += 1
             s0 += BC
         for s in range(s0, len(prompt), C):
+            # NOTE the slot's own partial state is committed to self.pool /
+            # self.tables only at the end of _prefill, but headroom-driven
+            # preemption of OTHER slots mutates them mid-loop — re-read the
+            # pool before each chunk call, never cache it across chunks
+            self.tables = self.tables.at[i].set(table_i)
+            self._ensure_prefill_headroom(i, self._cc)
             chunk = prompt[s:s + C]
             n_valid = len(chunk)
             padded = np.zeros(C, np.int32)
             padded[:n_valid] = chunk
-            self.pool, table_i, cache_i, logits = self._prefill_chunk(
+            self.pool, table_i, cache_i, logits, fail = self._prefill_chunk(
                 self.params, self.pool, table_i, cache_i,
                 jnp.asarray(padded), jnp.int32(n_valid))
+            fails.append(fail)
             self.metrics["prefill_chunks"] += 1
         self.metrics["prefill_tokens"] += len(prompt)
+        self._slot_ntok[i] = len(prompt)
         self.tables = self.tables.at[i].set(table_i)
         self.caches = jax.tree.map(
             lambda all_, one: all_.at[i].set(one), self.caches, cache_i)
+        if any(bool(f) for f in fails):
+            raise AssertionError(
+                "prefill commit allocation failed despite headroom checks "
+                "(pool accounting bug — data would have been dropped)")
         if self.record_logits:
             self.trace.append({"kind": "prefill", "slot": i,
                                "logits": np.asarray(logits)})
         return np.asarray(logits)
 
-    def _finish_token(self, slot, tok: int, feed: np.ndarray) -> bool:
+    def _finish_token(self, slot, tok: int) -> bool:
         """Book-keeping for one generated token; returns done."""
         req = slot.request
         req.output.append(tok)
         slot.tokens_out += 1
-        feed[slot.idx] = tok
+        self._feed[slot.idx] = tok
         done = slot.tokens_out >= req.max_new_tokens or \
             (req.eos_token is not None and tok == req.eos_token)
         if done:
             req.stats = self.slot_stats(slot.idx)
+            req.stats["preemptions"] = req.preemptions
             self.scheduler.retire(slot)
             self._release_slot(slot.idx)
         return done
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
-        """Continuous-batching loop until all submitted requests finish."""
+        """Continuous-batching loop until all submitted requests finish.
+
+        Admission, preemption, and resume all happen between device calls:
+        ``_ensure_decode_headroom`` runs before every tick so an in-flight
+        commit can never fail, and ``admit_and_prefill`` resumes spilled
+        requests / prefills fresh ones whenever slots and watermark
+        headroom allow.  Raises RuntimeError only on a true livelock —
+        nothing running (whole pool free), nothing preemptible, and the
+        watermark still refusing every queued request."""
         sch = self.scheduler
         rng = jax.random.PRNGKey(self.cfg.seed)
-        feed = np.zeros(self.cfg.max_seqs, np.int32)
         t0 = time.perf_counter()
+
+        def record_request_logits(req, logits):
+            if self.record_logits:
+                self.request_logits.setdefault(req.arrival, []).append(
+                    np.asarray(logits))
 
         def admit_and_prefill():
             nonlocal rng
@@ -720,47 +977,82 @@ class ThinKVEngine:
                 if not newly:
                     break
                 for slot in newly:
-                    logits = self._prefill(slot.idx, slot.request.prompt)
+                    req = slot.request
+                    if req is None:
+                        continue    # vacated mid-sweep (defensive; started
+                                    # slots only — pending ones can't be
+                                    # victims, see _victim_exclude)
+                    self.metrics["admissions"] += 1
+                    self.metrics["queue_wait_ticks"] += \
+                        self.metrics["ticks"] - self._queued_at.pop(
+                            req.arrival, self.metrics["ticks"])
+                    st = self._spilled.pop(req.arrival, None)
+                    if st is not None:
+                        if not self._resume(slot, st):
+                            # an earlier admission this sweep overclaimed
+                            # past its estimate: re-spill, re-queue, and
+                            # let the next sweep's gate see true counts
+                            self._spilled[req.arrival] = st
+                            self.scheduler.preempt(slot)
+                            self._queued_at[req.arrival] = \
+                                self.metrics["ticks"]
+                        continue
+                    logits = self._prefill(slot.idx, req.prompt)
+                    record_request_logits(req, logits)
                     if self.cfg.temperature > 0:
                         rng, sub = jax.random.split(rng)
                         tok = int(jax.random.categorical(
                             sub, jnp.asarray(logits) / self.cfg.temperature))
                     else:
                         tok = int(np.argmax(logits))
-                    self._finish_token(slot, tok, feed)
+                    self._finish_token(slot, tok)
 
         admit_and_prefill()
         for _ in range(max_ticks):
             if not sch.busy():
                 break
-            active = np.array([not s.free for s in sch.slots])
-            if not active.any():
+            if not any(not s.free for s in sch.slots):
                 admit_and_prefill()
                 if sch.queue and not any(not s.free for s in sch.slots):
-                    # nothing active, nothing admitted, requests waiting:
-                    # with no in-flight request the pool state can never
-                    # change, so admission can never succeed — fail loudly
-                    # instead of spinning max_ticks and dropping requests
+                    # nothing running means the WHOLE pool is free, and the
+                    # watermark still refuses every queued request; with no
+                    # in-flight request the pool can never change, so
+                    # admission can never succeed and nothing is
+                    # preemptible — fail loudly instead of spinning
+                    # max_ticks and dropping requests
                     raise RuntimeError(
                         f"admission livelock: {len(sch.queue)} queued "
-                        f"request(s) but the global pool "
-                        f"({self.num_pool_blocks} blocks) cannot back a "
-                        f"full per-request allocation of {self.dims.NB} "
-                        f"blocks/layer")
+                        f"request(s), nothing running or preemptible, and "
+                        f"the global pool ({self.num_pool_blocks} blocks) "
+                        f"is below the smallest request's watermark "
+                        f"estimate — the pool cannot serve even one "
+                        f"request")
                 continue
+            self._ensure_decode_headroom()
+            active = np.array([not s.free for s in sch.slots])
+            if not active.any():
+                continue         # headroom preempted everything this round
             rng, sub = jax.random.split(rng)
-            nxt, self.pool, self.tables, self.caches, _, logits = \
+            (nxt, self.pool, self.tables, self.caches, _, logits,
+             alloc_fail) = \
                 self._tick(self.params, self.pool, self.tables, self.caches,
-                           jnp.asarray(feed), jnp.asarray(active), sub)
+                           jnp.asarray(self._feed), jnp.asarray(active), sub)
             nxt = np.asarray(nxt)
+            if bool(np.any(np.asarray(alloc_fail))):
+                raise AssertionError(
+                    "decode commit allocation failed despite preemption "
+                    "headroom (pool accounting bug — data would have been "
+                    "dropped)")
             self.metrics["ticks"] += 1
             self.metrics["tokens"] += int(active.sum())
+            self._slot_ntok[active] += 1
             if self.record_logits:
                 self.trace.append({"kind": "decode",
                                    "active": active.copy(),
                                    "logits": np.asarray(logits)})
             for slot in sch.active_slots():
-                self._finish_token(slot, int(nxt[slot.idx]), feed)
+                record_request_logits(slot.request, logits[slot.idx])
+                self._finish_token(slot, int(nxt[slot.idx]))
             admit_and_prefill()
         self.metrics["wall_s"] = time.perf_counter() - t0
         return sch.finished

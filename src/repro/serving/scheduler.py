@@ -1,24 +1,62 @@
-"""Continuous-batching request scheduler (the vLLM-scheduler role).
+"""Preemption-aware continuous-batching request scheduler.
 
-Fixed request slots (static shapes for jit); a FIFO queue admits requests
-into free slots; finished requests (EOS or max tokens) retire and their
-slot's CT pool is reset for the next admission.
+The scheduler owns the REQUEST LIFECYCLE of the serving engine's
+oversubscribed global block pool:
+
+    WAITING ──admit──▶ RUNNING ──retire──▶ FINISHED
+       ▲                  │
+       └──── preempt ◀────┘      (PREEMPTED requests rejoin the queue)
+
+* Fixed request slots (static shapes for jit); a request occupies one
+  slot while RUNNING and none otherwise.
+* The queue holds WAITING and PREEMPTED requests together, ordered by
+  ``(priority desc, arrival asc)`` — higher ``priority`` ints are served
+  first and preempted last; within a priority class, arrival order wins.
+  A preempted request keeps its ORIGINAL arrival stamp, so it resumes
+  ahead of later-submitted work of the same priority (no starvation from
+  repeated preemption).
+* ``admit`` takes a PER-REQUEST capacity gate (the engine passes its
+  watermark admission check).  A gate refusal skips that request only:
+  a smaller or cheaper-to-resume request queued behind it can still be
+  admitted this sweep (size-aware admission — no head-of-line blocking
+  on capacity).
+* ``select_victim`` implements the preemption policy: lowest priority
+  first, most physical blocks held as the tiebreak (frees the most pool
+  for the blocked commit), youngest arrival last.
+
+The scheduler never touches device state: spilling/restoring a preempted
+request's blocks is the engine's job (``ThinKVEngine._preempt`` /
+``_resume``); the scheduler only moves requests between queue and slots.
 """
 from __future__ import annotations
 
 import dataclasses
-from collections import deque
-from typing import Callable, Deque, Dict, List, Optional
+import enum
+from typing import Callable, Dict, List, Optional
 
 import numpy as np
 
 
-@dataclasses.dataclass
+class RequestState(enum.Enum):
+    WAITING = "waiting"        # queued, never ran
+    RUNNING = "running"        # occupies a slot
+    PREEMPTED = "preempted"    # paused; blocks spilled to host, re-queued
+    FINISHED = "finished"      # retired (EOS or max tokens)
+
+
+# eq=False: identity equality only — the generated __eq__ would compare
+# the ndarray prompt (ambiguous-truth ValueError inside queue.remove
+# whenever two queued requests share a uid)
+@dataclasses.dataclass(eq=False)
 class Request:
     uid: int
     prompt: np.ndarray                   # int32 tokens
     max_new_tokens: int = 256
     eos_token: Optional[int] = None
+    priority: int = 0                    # higher = served first, evicted last
+    arrival: int = -1                    # FIFO stamp; set by Scheduler.submit
+    state: RequestState = RequestState.WAITING
+    preemptions: int = 0                 # times this request was paused
     # filled by the engine
     output: List[int] = dataclasses.field(default_factory=list)
     done: bool = False
@@ -36,32 +74,78 @@ class Slot:
         return self.request is None
 
 
+def _queue_key(req: Request):
+    return (-req.priority, req.arrival)
+
+
 class Scheduler:
     def __init__(self, num_slots: int):
         self.slots = [Slot(i) for i in range(num_slots)]
-        self.queue: Deque[Request] = deque()
+        self.queue: List[Request] = []   # WAITING + PREEMPTED, sorted
         self.finished: List[Request] = []
+        self._arrivals = 0
 
     def submit(self, req: Request) -> None:
+        if req.arrival < 0:
+            req.arrival = self._arrivals
+            self._arrivals += 1
         self.queue.append(req)
+        self.queue.sort(key=_queue_key)
 
-    def admit(self, can_admit: Optional[Callable[[], bool]] = None
+    def admit(self, can_admit: Optional[Callable[[Request], bool]] = None
               ) -> List[Slot]:
         """Move queued requests into free slots; returns newly filled.
 
-        ``can_admit`` is an optional capacity gate (the engine passes its
-        global-block-pool check: a request is only admitted when the shared
-        pool can worst-case back a full per-request block allocation).
+        Requests are considered in ``(priority desc, arrival asc)`` order.
+        ``can_admit`` is an optional PER-REQUEST capacity gate (the engine
+        passes its watermark check, sized to the request's budget-derived
+        block estimate — or its spilled mapping, for a PREEMPTED request).
+        A refusal skips only that request, so smaller requests queued
+        behind a too-big head are still admitted this sweep.
         """
         newly = []
-        for slot in self.slots:
-            if slot.free and self.queue:
-                if can_admit is not None and not can_admit():
-                    break
-                slot.request = self.queue.popleft()
-                slot.tokens_out = 0
-                newly.append(slot)
+        free_slots = (s for s in self.slots if s.free)
+        slot = next(free_slots, None)
+        for req in list(self.queue):
+            if slot is None:
+                break
+            if can_admit is not None and not can_admit(req):
+                continue
+            self.queue.remove(req)
+            req.state = RequestState.RUNNING
+            slot.request = req
+            slot.tokens_out = 0
+            newly.append(slot)
+            slot = next(free_slots, None)
         return newly
+
+    def preempt(self, slot: Slot) -> Request:
+        """Pause a RUNNING request and re-queue it as PREEMPTED.
+
+        The engine must have spilled the request's device state first; the
+        original arrival stamp puts it ahead of later same-priority work.
+        """
+        req = slot.request
+        req.state = RequestState.PREEMPTED
+        req.preemptions += 1
+        slot.request = None
+        slot.tokens_out = 0
+        self.queue.append(req)
+        self.queue.sort(key=_queue_key)
+        return req
+
+    def select_victim(self, blocks_held: Callable[[int], int],
+                      exclude: tuple = ()) -> Optional[Slot]:
+        """Preemption victim among occupied slots (None if none eligible):
+        lowest priority first, then most physical blocks held (frees the
+        most), then youngest arrival."""
+        cands = [s for s in self.slots
+                 if not s.free and s.idx not in exclude]
+        if not cands:
+            return None
+        return min(cands, key=lambda s: (s.request.priority,
+                                         -blocks_held(s.idx),
+                                         -s.request.arrival))
 
     def active_slots(self) -> List[Slot]:
         return [s for s in self.slots if not s.free]
@@ -69,6 +153,7 @@ class Scheduler:
     def retire(self, slot: Slot) -> Request:
         req = slot.request
         req.done = True
+        req.state = RequestState.FINISHED
         self.finished.append(req)
         slot.request = None
         slot.tokens_out = 0

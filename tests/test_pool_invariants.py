@@ -1,0 +1,150 @@
+"""Property test: global-pool accounting invariants under random
+admit/step(commit/evict)/retire/preempt/resume sequences.
+
+Across ANY interleaving — including allocation failures under an
+oversubscribed pool (claims reverted) and spill/resume cycles — every
+layer must satisfy:
+
+* ``claimed + free == pool_blocks`` (no leaked or double-counted block);
+* no physical block is referenced by two live block tables;
+* no mapped block is marked free.
+
+Additionally a resumed request's pool planes must equal its spilled
+planes on every mapped block (restore is bit-exact)."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _prop import given, settings, strategies as st
+from repro.config import ThinKVConfig
+from repro.core import ct_cache as CC
+
+TK = ThinKVConfig(refresh_interval=8, group_size=4, block_size=4,
+                  token_budget=16, retention_schedule=(8, 4),
+                  min_retention=2, max_segments=16, kmeans_iters=2)
+DIMS = CC.make_dims(TK, num_layers=2, kv_heads=2, head_dim=16)
+N_REQ = 3
+# oversubscribed: room for ~1.5 requests' worst case across 3 requests
+POOL_BLOCKS = DIMS.NB + DIMS.NB // 2
+
+
+@functools.partial(jax.jit, donate_argnums=())
+def _step(pool, table, cache, k, v, spars):
+    i = cache.buf_len
+    cache = cache.replace(
+        buf_k=jax.lax.dynamic_update_index_in_dim(
+            cache.buf_k, k.astype(jnp.bfloat16)[:, None], i, 1),
+        buf_v=jax.lax.dynamic_update_index_in_dim(
+            cache.buf_v, v.astype(jnp.bfloat16)[:, None], i, 1))
+    return CC.engine_advance(TK, DIMS, pool, table, cache, spars,
+                             jnp.bool_(True), with_alloc_fail=True)
+
+
+class _Harness:
+    """Host-side mirror of the engine's admit/preempt/resume bookkeeping
+    at the ct_cache level (no model, no scheduler)."""
+
+    def __init__(self, seed):
+        self.rng = np.random.default_rng(seed)
+        self.pool = CC.init_global_pool(DIMS, POOL_BLOCKS)
+        self.live = {}        # req -> (table, cache)
+        self.spilled = {}     # req -> (view, mapped)
+
+    def live_tables(self):
+        if not self.live:
+            return np.full((1, DIMS.L, DIMS.NB), -1, np.int32)
+        return np.stack([np.asarray(t) for t, _ in self.live.values()])
+
+    def check(self):
+        CC.check_pool_invariants(self.pool, self.live_tables())
+
+    def start(self, r):
+        if r in self.live or r in self.spilled:
+            return
+        self.live[r] = (CC.init_block_table(DIMS), CC.init_cache(DIMS))
+
+    def step(self, r):
+        if r not in self.live:
+            return
+        table, cache = self.live[r]
+        k = jnp.asarray(self.rng.standard_normal((DIMS.L, DIMS.H, DIMS.D)),
+                        jnp.float32)
+        v = jnp.asarray(self.rng.standard_normal((DIMS.L, DIMS.H, DIMS.D)),
+                        jnp.float32)
+        spars = jnp.float32(self.rng.choice([0.3, 0.65, 0.92]))
+        pool, table, cache, _fail = _step(self.pool, table, cache, k, v,
+                                          spars)
+        # _fail True is LEGAL here (oversubscribed, no engine headroom
+        # logic at this level): claims revert, invariants must still hold
+        self.pool, self.live[r] = pool, (table, cache)
+
+    def retire(self, r):
+        if r not in self.live:
+            return
+        table, _ = self.live.pop(r)
+        self.pool = CC.release_blocks(DIMS, self.pool, table)
+
+    def preempt(self, r):
+        if r not in self.live:
+            return
+        table, cache = self.live.pop(r)
+        view, mapped = CC.extract_request(DIMS, self.pool, table)
+        self.spilled[r] = (jax.tree.map(np.asarray, tuple(view)),
+                           np.asarray(mapped), cache)
+        self.pool = CC.release_blocks(DIMS, self.pool, table)
+
+    def resume(self, r):
+        if r not in self.spilled:
+            return
+        view_np, mapped, cache = self.spilled[r]
+        free = np.asarray(self.pool.free).sum(axis=1)
+        if (free < mapped.sum(axis=1)).any():
+            return               # engine's gate would refuse; stay spilled
+        del self.spilled[r]
+        view = CC.PoolView(*(jnp.asarray(p) for p in view_np))
+        pool, table, ok = CC.restore_request(DIMS, self.pool,
+                                             jnp.asarray(mapped), view)
+        assert bool(ok), "claim failed despite free-count pre-check"
+        self.pool, self.live[r] = pool, (table, cache)
+        # restore is bit-exact: re-gathering through the NEW table must
+        # reproduce the spilled planes on every mapped block
+        back, _ = CC.extract_request(DIMS, self.pool, table)
+        for spilled_p, back_p in zip(view_np, tuple(back)):
+            sel = mapped
+            np.testing.assert_array_equal(
+                np.asarray(back_p)[sel], spilled_p[sel])
+
+
+@settings(max_examples=6, deadline=None)
+@given(st.integers(0, 2 ** 31 - 1),
+       st.lists(st.integers(0, 4 * N_REQ - 1), min_size=12, max_size=28))
+def test_pool_accounting_invariants_hold(seed, ops):
+    h = _Harness(seed)
+    for r in range(N_REQ):
+        h.start(r)
+    h.check()
+    for op in ops:
+        kind, r = divmod(op, N_REQ)
+        if kind == 0:
+            for _ in range(DIMS.G):   # a full group: guarantees a commit
+                h.step(r)
+        elif kind == 1:
+            h.preempt(r)
+        elif kind == 2:
+            h.resume(r)
+        else:
+            h.retire(r)
+            h.start(r)                # fresh request reuses the id
+        h.check()
+    # drain: retire the live set first (frees their blocks), then resume +
+    # retire the spilled remainder — afterwards the whole pool is free
+    for r in range(N_REQ):
+        h.retire(r)
+    for r in range(N_REQ):
+        h.resume(r)
+        h.retire(r)
+    h.check()
+    assert not h.spilled
+    assert np.asarray(h.pool.free).all(), "drained pool not fully free"

@@ -1,0 +1,95 @@
+"""Scheduler unit tests: priority+arrival ordering, size-aware admission,
+preemption lifecycle, and victim selection."""
+import numpy as np
+
+from repro.serving.scheduler import (Request, RequestState, Scheduler)
+
+
+def _req(uid, n=4, priority=0, **kw):
+    return Request(uid=uid, prompt=np.arange(n, dtype=np.int32),
+                   priority=priority, **kw)
+
+
+def test_queue_orders_by_priority_then_arrival():
+    sch = Scheduler(num_slots=4)
+    sch.submit(_req(0, priority=0))
+    sch.submit(_req(1, priority=5))
+    sch.submit(_req(2, priority=1))
+    sch.submit(_req(3, priority=5))
+    newly = sch.admit()
+    order = [s.request.uid for s in newly]
+    # higher priority first; among equal priorities, arrival order
+    assert order == [1, 3, 2, 0]
+    assert all(s.request.state is RequestState.RUNNING for s in newly)
+    # arrival stamps are assigned in submission order
+    assert [s.request.arrival for s in newly] == [1, 3, 2, 0]
+
+
+def test_admission_gate_is_size_aware():
+    """A gate refusal skips only that request: a smaller request queued
+    behind a too-big head is still admitted in the same sweep."""
+    sch = Scheduler(num_slots=1)
+    sch.submit(_req(0, n=100))               # too big for the gate
+    sch.submit(_req(1, n=4))                 # fits
+    newly = sch.admit(lambda req: len(req.prompt) <= 10)
+    assert [s.request.uid for s in newly] == [1]
+    assert [r.uid for r in sch.queue] == [0]  # big one still WAITING
+    assert sch.queue[0].state is RequestState.WAITING
+
+
+def test_preempted_request_resumes_before_later_arrivals():
+    """A preempted request keeps its original arrival stamp, so it beats
+    later-submitted work of the same priority on re-admission."""
+    sch = Scheduler(num_slots=1)
+    sch.submit(_req(0))
+    (slot,) = sch.admit()
+    sch.submit(_req(1))                      # arrives while 0 runs
+    preempted = sch.preempt(slot)
+    assert preempted.state is RequestState.PREEMPTED
+    assert preempted.preemptions == 1
+    assert slot.free
+    # queue now holds [0 (preempted), 1]; 0 resumes first
+    newly = sch.admit()
+    assert [s.request.uid for s in newly] == [0]
+    assert newly[0].request.state is RequestState.RUNNING
+
+
+def test_victim_selection_lowest_priority_then_most_blocks():
+    sch = Scheduler(num_slots=3)
+    sch.submit(_req(0, priority=1))
+    sch.submit(_req(1, priority=0))
+    sch.submit(_req(2, priority=0))
+    sch.admit()
+    blocks = {0: 2, 1: 3, 2: 9}
+    # both priority-0 slots lose to the priority-1 slot; most blocks wins
+    victim = sch.select_victim(lambda i: blocks[i])
+    assert victim.request.uid == 2
+    # exclusion is honoured (e.g. the slot currently prefilling)
+    victim = sch.select_victim(lambda i: blocks[i], exclude=(victim.idx,))
+    assert victim.request.uid == 1
+
+
+def test_admit_with_duplicate_uids_and_gate_skip():
+    """Regression: requests from separate submit batches share uids; a
+    gate refusal of the first must not crash queue.remove on the second
+    (dataclass __eq__ would compare the ndarray prompts — Request uses
+    identity equality)."""
+    sch = Scheduler(num_slots=1)
+    sch.submit(_req(0, n=6))                 # batch 1, uid 0 (too big)
+    sch.submit(_req(0, n=6))                 # batch 2, uid 0 again
+    big = sch.queue[0]
+    newly = sch.admit(lambda req: req is not big)
+    assert len(newly) == 1 and newly[0].request is not big
+    assert sch.queue == [big]
+
+
+def test_lifecycle_states_and_retire():
+    sch = Scheduler(num_slots=1)
+    req = _req(0)
+    assert req.state is RequestState.WAITING
+    sch.submit(req)
+    (slot,) = sch.admit()
+    assert req.state is RequestState.RUNNING
+    sch.retire(slot)
+    assert req.state is RequestState.FINISHED and req.done
+    assert not sch.busy()
