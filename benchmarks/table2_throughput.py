@@ -25,6 +25,11 @@ Three parts:
    throughput, preemption/resume counts, and mean queue wait under
    watermark admission + pause/spill/resume.  Every request must
    complete with zero dropped tokens at every pool size.
+6. **Prefix-hit-rate sweep**: copy-on-write prefix caching at 0% / 50% /
+   100% shared prompt prefix across requests — prefill tokens skipped,
+   prefix hit rate, COW faults, and throughput.  Identical prompts
+   (100%) must skip every covered chunk for every request after the
+   first; outputs are gated bit-identical to the cache-off run.
 
 Results are also APPENDED to ``BENCH_table2.json`` at the repo root (one
 record per run, tagged with the git SHA) so the perf trajectory is
@@ -346,6 +351,85 @@ def oversubscription_sweep(fracs=(1.0, 0.5, 0.25), arch="r1-llama-8b",
     return rows
 
 
+def prefix_sweep(shared_fracs=(0.0, 0.5, 1.0), arch="r1-llama-8b",
+                 requests=6, slots=2, prompt_len=24, max_new=16, seed=0):
+    """Engine throughput vs shared-prompt fraction under copy-on-write
+    prefix caching: ``shared_fracs`` of every prompt's tokens are common
+    across requests (1.0 = identical prompts — the shared-system-prompt
+    fleet shape).  Reports prefill tokens skipped, hit rate, COW faults,
+    and decode+prefill throughput per fraction; every run's outputs are
+    gated IDENTICAL to the cache-off run (sharing must never change the
+    math)."""
+    from repro.config import ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import ThinKVEngine
+
+    mcfg = get_smoke_config(arch)
+    tk = _smoke_tk()
+    scfg = ServeConfig(model=mcfg, thinkv=tk, max_seqs=slots,
+                       temperature=0.0)
+    rng = np.random.default_rng(seed)
+
+    rows = []
+    params = None
+    for frac in shared_fracs:
+        shared_len = int(round(prompt_len * frac))
+        # commit-aligned shared prefix so partial hits can attach
+        shared_len -= shared_len % tk.group_size
+        shared = rng.integers(0, mcfg.vocab_size, shared_len)
+        prompts = [np.concatenate([
+            shared, rng.integers(0, mcfg.vocab_size,
+                                 prompt_len - shared_len)])
+            for _ in range(requests)]
+
+        outs = {}
+        for cached in (False, True):
+            eng = ThinKVEngine(scfg, params=params, backend="reference",
+                               prefix_cache=cached)
+            params = eng.params
+            eng.submit([p.copy() for p in prompts], max_new_tokens=max_new)
+            t0 = time.perf_counter()
+            done = eng.run()
+            wall = time.perf_counter() - t0
+            outs[cached] = {r.uid: r.output for r in done}
+            if cached:
+                eng.audit_pool()
+                pc = eng.prefix_cache.stats()
+                row = {
+                    "shared_frac": frac,
+                    "shared_prefix_tokens": int(shared_len),
+                    "requests": requests,
+                    "completed": len(done),
+                    "prefix_hits": eng.metrics["prefix_hits"],
+                    "hit_rate": eng.metrics["prefix_hits"] / requests,
+                    "prefill_tokens": eng.metrics["prefill_tokens"],
+                    "prefill_tokens_skipped":
+                        eng.metrics["prefix_tokens_skipped"],
+                    "cow_faults": eng.metrics["cow_faults"],
+                    "cache_entries": pc["entries"],
+                    "cache_evictions": pc["evictions"],
+                    "tok_per_s": (eng.metrics["tokens"]
+                                  + eng.metrics["prefill_tokens"])
+                        / max(wall, 1e-9),
+                }
+        if outs[True] != outs[False]:
+            raise SystemExit(
+                f"prefix-cache regression at shared_frac={frac}: cached "
+                f"outputs differ from the cache-off run (sharing changed "
+                f"the math)")
+        if frac >= 1.0 and row["prefix_hits"] < requests - 1:
+            raise SystemExit(
+                f"prefix-cache regression: identical prompts scored "
+                f"{row['prefix_hits']} hits (expected {requests - 1})")
+        rows.append(row)
+        print(f"  shared {100 * frac:5.0f}% ({shared_len:3d} tok): "
+              f"hit rate {row['hit_rate']:4.2f} | "
+              f"{row['prefill_tokens_skipped']:4d} prefill tok skipped | "
+              f"{row['cow_faults']:3d} COW faults | "
+              f"{row['tok_per_s']:7.1f} tok/s")
+    return rows
+
+
 def _git_sha() -> str:
     try:
         return subprocess.check_output(
@@ -414,6 +498,12 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
             requests=3, slots=4, prompt_len=8, max_new=16)
     else:
         out["oversubscription"] = oversubscription_sweep()
+    print("  prefix-hit-rate sweep (copy-on-write prefix caching):")
+    if smoke:
+        out["prefix"] = prefix_sweep(requests=3, slots=2, prompt_len=16,
+                                     max_new=8)
+    else:
+        out["prefix"] = prefix_sweep()
     if os.path.dirname(out_path):
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
@@ -431,6 +521,7 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
         "engine": out["engine"],
         "layer_sweep": out["layer_sweep"],
         "oversubscription": out["oversubscription"],
+        "prefix": out["prefix"],
     })
     print(f"  perf trajectory appended to {BENCH_LOG}")
     return out

@@ -3,15 +3,31 @@
 # the table2 throughput benchmark in --smoke mode (tiny config, interpret
 # kernels) so kernel-path regressions — e.g. the decode tick dispatching
 # more than ONE fused pallas launch — fail CI rather than only pytest,
-# then the oversubscription gate: the engine with the shared block pool at
-# 25% of the dense worst case must complete EVERY request (preemptions are
-# expected and fine; dropped tokens or a deadlock fail the gate).
+# then the examples smoke gate (every example must run clean on tiny
+# configs so API drift fails CI instead of rotting), then two serving
+# gates: (1) the engine with the shared block pool at 25% of the dense
+# worst case must complete EVERY request (preemptions are expected and
+# fine; dropped tokens or a deadlock fail the gate), and (2) the same
+# oversubscribed pool with --prefix-cache and fully shared prompts must
+# complete all requests with a NONZERO prefix hit count and a clean
+# refcount audit (claimed + free == pool_blocks, every reference
+# accounted — zero invariant violations).
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 python -m pytest -x -q "$@"
 python benchmarks/table2_throughput.py --smoke
+echo "=== examples smoke gate ==="
+python examples/quickstart.py
+python examples/calibrate_thoughts.py
+python examples/serve_reasoning.py --requests 3 --slots 2 --max-new 16
+echo "=== oversubscription gate ==="
 python -m repro.launch.serve --requests 6 --slots 4 --prompt-len 12 \
     --max-new 48 --temperature 0 --pool-frac 0.25 --priorities 0,1 \
     --expect-all --expect-preemptions
+echo "=== shared-prefix oversubscription gate ==="
+python -m repro.launch.serve --requests 6 --slots 4 --prompt-len 16 \
+    --max-new 32 --temperature 0 --pool-frac 0.25 \
+    --prefix-cache --shared-prefix-frac 1.0 \
+    --expect-all --expect-prefix-hits

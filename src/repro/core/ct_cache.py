@@ -26,12 +26,16 @@ Data model (this PR's paged refactor):
   stay flat ``[L, NS]`` (NS = num_blocks * block_size) because the
   allocation/annealing logic addresses logical slots linearly.
 * :class:`GlobalPool` is the serving engine's SHARED physical pool: one
-  PoolView of ``NP`` physical blocks plus a free bitmap, with per-request
-  per-layer block tables (``-1`` = unmapped) translating logical blocks to
-  physical blocks.  Requests claim physical blocks at group commits and
-  return them when TBE frees a block (or the request retires), so slots
-  freed by one request are reused by others — vLLM-style paging on top of
-  CT's in-place slot reuse.
+  PoolView of ``NP`` physical blocks plus a per-layer block REFCOUNT
+  (free ⇔ refcount 0), with per-request per-layer block tables (``-1`` =
+  unmapped) translating logical blocks to physical blocks.  Requests
+  claim physical blocks at group commits and decref them when TBE frees
+  a block (or the request retires), so slots freed by one request are
+  reused by others — vLLM-style paging on top of CT's in-place slot
+  reuse.  A block mapped by MORE than one holder (prefix-cache sharing)
+  has refcount > 1 and is copy-on-write: any content mutation claims a
+  fresh block, copies the planes, and decrefs the shared source
+  (:func:`sync_block_tables` with a dirty mask / :func:`cow_blocks`).
 
 All state is fixed-shape and jit/vmap friendly.  Functions here operate on a
 SINGLE request with all attention layers stacked on the leading axis; the
@@ -493,19 +497,30 @@ def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 class GlobalPool(NamedTuple):
     """Physical block pool shared by every request slot.
 
-    ``view`` planes are ``[L, NP, BS, ...]``; ``free`` is a per-layer
-    physical-block free bitmap.  Per-request per-layer block tables
-    (``[L, NB]`` int32, UNMAPPED = -1) live with the engine.
+    ``view`` planes are ``[L, NP, BS, ...]``; ``refcount`` is a per-layer
+    per-physical-block REFERENCE COUNT (free ⇔ refcount 0).  Per-request
+    per-layer block tables (``[L, NB]`` int32, UNMAPPED = -1) live with
+    the engine; each mapped table entry holds one reference, and the
+    engine's prefix cache holds one reference per registered entry that
+    maps the block.  A block with refcount > 1 is SHARED: its planes are
+    immutable, and any writer must copy-on-write first (claim a fresh
+    block, copy the planes, swap its table entry, decref the source —
+    see :func:`sync_block_tables` / :func:`cow_blocks`).
     """
 
     view: PoolView
-    free: jax.Array         # [L, NP] bool
+    refcount: jax.Array     # [L, NP] int32; 0 == free
+
+    @property
+    def free(self) -> jax.Array:
+        """Per-layer free bitmap [L, NP] (derived: refcount == 0)."""
+        return self.refcount == 0
 
 
 def init_global_pool(dims: CacheDims, num_blocks: int) -> GlobalPool:
     return GlobalPool(
         view=init_pool_view(dims, num_blocks),
-        free=jnp.ones((dims.L, num_blocks), bool),
+        refcount=jnp.zeros((dims.L, num_blocks), jnp.int32),
     )
 
 
@@ -550,66 +565,193 @@ def scatter_view(pool_view: PoolView, table: jax.Array, view: PoolView
     return PoolView(*(s(p, v) for p, v in zip(pool_view, view)))
 
 
+def changed_slots(view_old: PoolView, view_new: PoolView) -> jax.Array:
+    """Per-slot content-change mask ``[L, NS]`` between two per-request
+    views (the COW dirty detector: a slot is dirty iff ANY of its four
+    planes differ — content-based, so a write of identical bytes is not a
+    mutation and needs no copy)."""
+    def per(a, b):
+        L, nb, bs = a.shape[:3]
+        return jnp.any((a != b).reshape(L, nb * bs, -1), axis=-1)
+    out = per(view_old[0], view_new[0])
+    for a, b in zip(view_old[1:], view_new[1:]):
+        out = out | per(a, b)
+    return out
+
+
+def _rank_alloc(np_blocks: int, rc_row: jax.Array, need: jax.Array):
+    """Allocate free physical ids (refcount 0, ascending) to the True
+    entries of ``need``; returns (cand, got) — rank i of ``need`` gets the
+    i-th free id, ``got`` marks satisfied entries."""
+    free_row = rc_row == 0
+    order = jnp.where(free_row, jnp.arange(np_blocks, dtype=jnp.int32),
+                      jnp.int32(np_blocks + 1))
+    free_sorted = jnp.argsort(order).astype(jnp.int32)
+    n_free = jnp.sum(free_row.astype(jnp.int32))
+    rank = jnp.cumsum(need.astype(jnp.int32)) - 1
+    cand = free_sorted[jnp.clip(rank, 0, np_blocks - 1)]
+    got = need & (rank < n_free)
+    return cand, got
+
+
 def sync_block_tables(dims: CacheDims, pool: GlobalPool, table: jax.Array,
-                      cache: CTCache, view: PoolView
-                      ) -> Tuple[GlobalPool, jax.Array, CTCache, jax.Array]:
+                      cache: CTCache, view: PoolView,
+                      dirty_slots: jax.Array | None = None):
     """Reconcile a request's logical blocks with the physical pool after a
-    CT update: release freed blocks, map newly claimed ones (lowest free
-    physical id first), scatter the view back, and revert any logical
-    claims the pool could not back (allocation failure under
-    oversubscription — surfaced as still-FREE slots, never corruption).
+    CT update: decref released blocks (free at refcount 0), COW-fault any
+    SHARED block whose content this update changed, map newly claimed
+    logical blocks to free physical ids (lowest first), scatter the view
+    back, and revert any logical claims the pool could not back
+    (allocation failure under oversubscription — surfaced as still-FREE
+    slots, never corruption).
 
-    The fourth return is the ``[L, NB]`` allocation-failure mask.  The
-    serving engine guarantees it stays all-False by preempting requests
-    BEFORE a commit that the free list cannot back (see
-    ``ThinKVEngine._ensure_decode_headroom``); it is surfaced so the
-    engine can assert the guarantee rather than silently dropping data.
+    ``dirty_slots`` is the ``[L, NS]`` content-change mask from
+    :func:`changed_slots` (None: no writes happened, COW cannot trigger).
+    A dirty block whose physical refcount is > 1 is COW-faulted: the
+    shared source is decref'd, a fresh block claimed, and the scatter
+    writes the request's full (old + newly written) block content into
+    the copy — the shared source's planes are NEVER written.  If the COW
+    claim cannot be backed, the old mapping is re-attached (incref), the
+    scatter masked for that block, and the dirty slots reverted to FREE:
+    the shared content stays pristine even on failure.
+
+    Returns ``(pool, table, cache, alloc_failed, cow)``; ``alloc_failed``
+    and ``cow`` are ``[L, NB]`` masks.  The serving engine guarantees
+    ``alloc_failed`` stays all-False by preempting requests BEFORE a
+    commit that the free list cannot back (see
+    ``ThinKVEngine._ensure_decode_headroom``, whose demand bound counts a
+    committing slot's shared blocks as potential COW claims); it is
+    surfaced so the engine can assert the guarantee rather than silently
+    dropping data.
     """
-    np_blocks = pool.free.shape[1]
+    np_blocks = pool.refcount.shape[1]
     new_bt = cache.block_type
+    if dirty_slots is None:
+        dirty_blocks = jnp.zeros(table.shape, bool)
+        dirty_slots = jnp.zeros((table.shape[0], dims.NS), bool)
+    else:
+        dirty_blocks = jnp.any(
+            dirty_slots.reshape(table.shape[0], dims.NB, dims.BS), axis=-1)
 
-    def one_layer(free_row, table_row, new_row):
+    def one_layer(rc_row, table_row, new_row, dirty_row):
+        # 1) logical frees (TBE emptied the block / request released it):
+        #    decref — the block returns to the free list only at zero
         freed = (new_row == -1) & (table_row >= 0)
-        free_row = free_row.at[jnp.where(freed, table_row, np_blocks)].set(
-            True, mode="drop")
+        rc_row = rc_row.at[jnp.where(freed, table_row, np_blocks)].add(
+            -1, mode="drop")
         table_row = jnp.where(freed, UNMAPPED, table_row)
 
+        # 2) COW faults: mapped + content changed + shared (refcount > 1)
+        phys = jnp.where(table_row >= 0, table_row, 0)
+        cow = (table_row >= 0) & dirty_row & (rc_row[phys] > 1)
+        old_phys = jnp.where(cow, table_row, UNMAPPED)
+        rc_row = rc_row.at[jnp.where(cow, table_row, np_blocks)].add(
+            -1, mode="drop")
+        table_row = jnp.where(cow, UNMAPPED, table_row)
+
+        # 3) claim free physical ids for fresh logical claims + COW copies
         need = (new_row >= 0) & (table_row < 0)
-        # ascending free physical ids; rank i of `need` gets the i-th one
-        order = jnp.where(free_row, jnp.arange(np_blocks, dtype=jnp.int32),
-                          jnp.int32(np_blocks + 1))
-        free_sorted = jnp.argsort(order).astype(jnp.int32)
-        n_free = jnp.sum(free_row.astype(jnp.int32))
-        rank = jnp.cumsum(need.astype(jnp.int32)) - 1
-        cand = free_sorted[jnp.clip(rank, 0, np_blocks - 1)]
-        got = need & (rank < n_free)
+        cand, got = _rank_alloc(np_blocks, rc_row, need)
         table_row = jnp.where(got, cand, table_row)
-        free_row = free_row.at[jnp.where(got, cand, np_blocks)].set(
-            False, mode="drop")
+        rc_row = rc_row.at[jnp.where(got, cand, np_blocks)].add(
+            1, mode="drop")
+
+        # 4) a COW claim that failed re-attaches the (still-live) source
+        failed_cow = cow & ~got
+        table_row = jnp.where(failed_cow, old_phys, table_row)
+        rc_row = rc_row.at[jnp.where(failed_cow, old_phys, np_blocks)].add(
+            1, mode="drop")
         alloc_failed = need & ~got
-        return free_row, table_row, alloc_failed
+        return rc_row, table_row, alloc_failed, failed_cow, cow & got
 
-    free, table, alloc_failed = jax.vmap(one_layer)(
-        pool.free, table, new_bt)
+    refcount, table, alloc_failed, failed_cow, cow = jax.vmap(one_layer)(
+        pool.refcount, table, new_bt, dirty_blocks)
 
-    # revert claims that could not be backed
-    failed_slots = jnp.repeat(alloc_failed, dims.BS, axis=1)    # [L, NS]
+    # revert claims that could not be backed.  A failed FRESH claim holds
+    # only this update's writes — every slot of the block reverts to FREE
+    # and the logical block is un-claimed.  A failed COW keeps the shared
+    # mapping and its pre-existing valid slots; only the DIRTY slots (the
+    # writes that never landed) revert.
+    fresh_failed = alloc_failed & ~failed_cow
+    failed_slots = jnp.repeat(fresh_failed, dims.BS, axis=1) | \
+        (jnp.repeat(failed_cow, dims.BS, axis=1) & dirty_slots)   # [L, NS]
     cache = cache.replace(
         slot_state=jnp.where(failed_slots, FREE, cache.slot_state),
-        block_type=jnp.where(alloc_failed, jnp.int8(-1), cache.block_type))
+        block_type=jnp.where(fresh_failed, jnp.int8(-1), cache.block_type))
 
-    pool_view = scatter_view(pool.view, table, view)
-    return GlobalPool(view=pool_view, free=free), table, cache, alloc_failed
+    # scatter through the post-COW table; a failed COW's block is masked
+    # so the shared source's planes are never written with changed content
+    scatter_table = jnp.where(failed_cow, UNMAPPED, table)
+    pool_view = scatter_view(pool.view, scatter_table, view)
+    return (GlobalPool(view=pool_view, refcount=refcount), table, cache,
+            alloc_failed, cow)
 
 
 def release_blocks(dims: CacheDims, pool: GlobalPool, table: jax.Array
                    ) -> GlobalPool:
-    """Return every mapped block of a retired request to the free pool."""
-    np_blocks = pool.free.shape[1]
+    """Drop one reference on every mapped block of ``table`` (a retiring
+    or spilling request, or a prefix-cache entry being evicted); a block
+    returns to the free list when its refcount reaches zero."""
+    np_blocks = pool.refcount.shape[1]
     idx = jnp.where(table >= 0, table, np_blocks)
-    free = jax.vmap(lambda f, t: f.at[t].set(True, mode="drop"))(
-        pool.free, idx)
-    return GlobalPool(view=pool.view, free=free)
+    refcount = jax.vmap(lambda r, t: r.at[t].add(-1, mode="drop"))(
+        pool.refcount, idx)
+    return GlobalPool(view=pool.view, refcount=refcount)
+
+
+def incref_blocks(dims: CacheDims, pool: GlobalPool, table: jax.Array
+                  ) -> GlobalPool:
+    """Add one reference to every mapped block of ``table`` — a new holder
+    (a prefix-cache hit mapping shared blocks into its block table, or a
+    prefix-cache registration) pins the blocks' content: any later writer
+    must COW-fault instead of mutating them in place."""
+    np_blocks = pool.refcount.shape[1]
+    idx = jnp.where(table >= 0, table, np_blocks)
+    refcount = jax.vmap(lambda r, t: r.at[t].add(1, mode="drop"))(
+        pool.refcount, idx)
+    return GlobalPool(view=pool.view, refcount=refcount)
+
+
+def cow_blocks(dims: CacheDims, pool: GlobalPool, table: jax.Array,
+               mask: jax.Array) -> Tuple[GlobalPool, jax.Array, jax.Array]:
+    """Explicit copy-on-write fault for the masked mapped SHARED logical
+    blocks: claim a fresh physical block each, copy the planes, swap the
+    table entries, decref the shared sources.  Masked blocks this table
+    owns exclusively (refcount 1) are skipped — the sole owner may write
+    in place, and COWing them would put the just-decref'd source on the
+    free list where another masked block's copy could claim it within
+    this very call (aliasing two logical blocks onto one physical id if
+    the original's own claim then failed).  The refcount > 1 guard makes
+    a selected source's post-decref count >= 1, so sources can never be
+    reallocated mid-call.  Returns ``(pool, table, ok)`` — on a failed
+    claim the old mapping is re-attached (the source stays live and
+    unwritten) and ``ok`` is False."""
+    np_blocks = pool.refcount.shape[1]
+    view = gather_view(pool.view, table)
+
+    def one_layer(rc_row, table_row, m_row):
+        phys = jnp.where(table_row >= 0, table_row, 0)
+        sel = m_row & (table_row >= 0) & (rc_row[phys] > 1)
+        old_phys = jnp.where(sel, table_row, UNMAPPED)
+        rc_row = rc_row.at[jnp.where(sel, table_row, np_blocks)].add(
+            -1, mode="drop")
+        cand, got = _rank_alloc(np_blocks, rc_row, sel)
+        table_row = jnp.where(got, cand, table_row)
+        rc_row = rc_row.at[jnp.where(got, cand, np_blocks)].add(
+            1, mode="drop")
+        failed = sel & ~got
+        table_row = jnp.where(failed, old_phys, table_row)
+        rc_row = rc_row.at[jnp.where(failed, old_phys, np_blocks)].add(
+            1, mode="drop")
+        return rc_row, table_row, got, ~jnp.any(failed)
+
+    refcount, table, moved, ok = jax.vmap(one_layer)(
+        pool.refcount, table, mask)
+    # copy planes only into the fresh copies (sources stay unwritten)
+    copy_table = jnp.where(moved, table, UNMAPPED)
+    pool_view = scatter_view(pool.view, copy_table, view)
+    return (GlobalPool(view=pool_view, refcount=refcount), table,
+            jnp.all(ok))
 
 
 # ---------------------------------------------------------------------------
@@ -625,23 +767,17 @@ def claim_blocks(dims: CacheDims, pool: GlobalPool, mapped: jax.Array
     list could not back the full mapping (the caller must not use the
     partial table; the engine's admission gate checks free counts first so
     this only fires on a gate bug)."""
-    np_blocks = pool.free.shape[1]
+    np_blocks = pool.refcount.shape[1]
 
-    def one_layer(free_row, need):
-        order = jnp.where(free_row, jnp.arange(np_blocks, dtype=jnp.int32),
-                          jnp.int32(np_blocks + 1))
-        free_sorted = jnp.argsort(order).astype(jnp.int32)
-        n_free = jnp.sum(free_row.astype(jnp.int32))
-        rank = jnp.cumsum(need.astype(jnp.int32)) - 1
-        cand = free_sorted[jnp.clip(rank, 0, np_blocks - 1)]
-        got = need & (rank < n_free)
+    def one_layer(rc_row, need):
+        cand, got = _rank_alloc(np_blocks, rc_row, need)
         table_row = jnp.where(got, cand, UNMAPPED)
-        free_row = free_row.at[jnp.where(got, cand, np_blocks)].set(
-            False, mode="drop")
-        return free_row, table_row, ~jnp.any(need & ~got)
+        rc_row = rc_row.at[jnp.where(got, cand, np_blocks)].add(
+            1, mode="drop")
+        return rc_row, table_row, ~jnp.any(need & ~got)
 
-    free, table, ok = jax.vmap(one_layer)(pool.free, mapped)
-    return GlobalPool(view=pool.view, free=free), table, jnp.all(ok)
+    refcount, table, ok = jax.vmap(one_layer)(pool.refcount, mapped)
+    return GlobalPool(view=pool.view, refcount=refcount), table, jnp.all(ok)
 
 
 def extract_request(dims: CacheDims, pool: GlobalPool, table: jax.Array
@@ -666,42 +802,60 @@ def restore_request(dims: CacheDims, pool: GlobalPool, mapped: jax.Array,
     resumed attention math is bit-exact."""
     pool, table, ok = claim_blocks(dims, pool, mapped)
     pool = GlobalPool(view=scatter_view(pool.view, table, view),
-                      free=pool.free)
+                      refcount=pool.refcount)
     return pool, table, ok
 
 
-def check_pool_invariants(pool: GlobalPool, tables) -> dict:
-    """Host-side audit of the pool accounting invariants.
+def check_pool_invariants(pool: GlobalPool, tables, extra_tables=()) -> dict:
+    """Host-side audit of the refcounted pool accounting invariants.
 
-    For every layer: (a) no physical block is referenced by two live block
-    tables, (b) no mapped block is marked free, and (c) ``claimed + free ==
-    pool_blocks``.  ``tables`` is ``[R, L, NB]`` (or a single ``[L, NB]``).
+    ``tables`` is ``[R, L, NB]`` (or a single ``[L, NB]``) of the LIVE
+    block tables; ``extra_tables`` is an iterable of further ``[L, NB]``
+    reference holders (prefix-cache entries — one per registration — and
+    preempted requests' retained shared mappings).  For every layer:
+
+    * every physical block's refcount EQUALS the number of references the
+      provided holders make to it (no leaked or phantom reference — with
+      sharing, a block may legitimately appear in several tables, and the
+      refcount must say exactly how many);
+    * no refcount is negative (no double-free);
+    * ``claimed(refcount > 0) + free(refcount == 0) == pool_blocks``.
+
     Raises AssertionError on violation; returns per-layer counts."""
     import numpy as np
-    free = np.asarray(pool.free)
+    rc = np.asarray(pool.refcount)
     tb = np.asarray(tables)
     if tb.ndim == 2:
         tb = tb[None]
-    L, NP = free.shape
+    holders = [tb] + [np.asarray(t)[None] if np.asarray(t).ndim == 2
+                      else np.asarray(t) for t in extra_tables]
+    L, NP = rc.shape
+    assert (rc >= 0).all(), \
+        f"negative refcount (double-free): min {rc.min()}"
     claimed = []
     for l in range(L):
-        mapped = tb[:, l][tb[:, l] >= 0]
-        assert len(mapped) == len(set(mapped.tolist())), \
-            f"layer {l}: physical block referenced by two live block tables"
-        assert not free[l][mapped].any(), \
-            f"layer {l}: mapped physical block marked free"
-        n_free = int(free[l].sum())
-        assert len(mapped) + n_free == NP, \
-            f"layer {l}: claimed({len(mapped)}) + free({n_free}) != {NP}"
-        claimed.append(len(mapped))
-    return {"claimed": claimed, "free": free.sum(axis=1).tolist(),
+        refs = np.zeros(NP, np.int64)
+        for h in holders:
+            mapped = h[:, l][h[:, l] >= 0]
+            np.add.at(refs, mapped, 1)
+        bad = np.nonzero(refs != rc[l])[0]
+        assert bad.size == 0, \
+            (f"layer {l}: refcount mismatch at physical blocks "
+             f"{bad.tolist()[:8]}: counted {refs[bad][:8].tolist()} refs, "
+             f"pool says {rc[l][bad][:8].tolist()}")
+        n_claimed = int((rc[l] > 0).sum())
+        n_free = int((rc[l] == 0).sum())
+        assert n_claimed + n_free == NP, \
+            f"layer {l}: claimed({n_claimed}) + free({n_free}) != {NP}"
+        claimed.append(n_claimed)
+    return {"claimed": claimed, "free": (rc == 0).sum(axis=1).tolist(),
             "pool_blocks": NP}
 
 
 def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
                    table: jax.Array, cache: CTCache, sparsity: jax.Array,
                    active: jax.Array, n_new: jax.Array | int = 1,
-                   with_alloc_fail: bool = False):
+                   with_alloc_fail: bool = False, track_cow: bool = True):
     """Engine-side ``advance_after_write`` against the shared global pool.
 
     ``n_new`` tokens were written into the buffer this call (1 per decode
@@ -710,37 +864,55 @@ def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
     (every g / tau tokens) — the gather/scatter through the block table is
     cold-path maintenance, never per-token traffic.
 
-    With ``with_alloc_fail=True`` a fourth scalar bool is returned: True
-    iff this call's commit hit an allocation failure (claims reverted,
-    group data dropped).  The serving engine threads it out of the jitted
-    tick and asserts it never fires — its preemption headroom checks make
-    failure impossible by pausing victims before an unbackable commit.
+    COPY-ON-WRITE: a commit that changes the content of a SHARED physical
+    block (refcount > 1 — prefix-cached or mapped by another holder)
+    never writes it in place; the dirty mask is computed by comparing the
+    gathered pre-commit view against the post-commit view, and
+    :func:`sync_block_tables` claims a fresh block, copies the planes,
+    and decrefs the source.  The compare runs only on commit/refresh
+    calls (every g / tau tokens), in the same cold path as the
+    gather/scatter itself; ``track_cow=False`` (a TRACE-TIME flag)
+    compiles it out entirely — sound whenever no block can be shared
+    (the engine passes it when the prefix cache is disabled: every
+    refcount is then 0 or 1, so the dirty mask could never matter).
+
+    With ``with_alloc_fail=True`` two extra values are returned: a scalar
+    bool, True iff this call's commit hit an allocation failure (claims
+    reverted, group data dropped), and an int32 scalar counting the COW
+    faults this call performed.  The serving engine threads both out of
+    the jitted tick; it asserts the failure flag never fires — its
+    preemption headroom checks make failure impossible by pausing victims
+    before an unbackable commit (counting a committing slot's shared
+    blocks as potential COW claims).
     """
 
     def advance(args):
-        pool, table, cache, _ = args
+        pool, table, cache, _, _ = args
         cache = cache.replace(buf_len=cache.buf_len + n_new,
                               num_tokens=cache.num_tokens + n_new)
         at_commit = cache.buf_len >= dims.G
         at_refresh = (cache.num_tokens % cfg.refresh_interval) == 0
 
         def maintain(args):
-            pool, table, cache, _ = args
-            view = gather_view(pool.view, table)
-            cache, view = commit_and_evict_if_full(cfg, dims, cache, view)
+            pool, table, cache, _, _ = args
+            view0 = gather_view(pool.view, table)
+            cache, view = commit_and_evict_if_full(cfg, dims, cache, view0)
             cache = jax.lax.cond(
                 at_refresh,
                 lambda c: refresh(cfg, dims, c, view, sparsity),
                 lambda c: c, cache)
-            pool, table, cache, failed = sync_block_tables(
-                dims, pool, table, cache, view)
-            return pool, table, cache, jnp.any(failed)
+            dirty = changed_slots(view0, view) if track_cow else None
+            pool, table, cache, failed, cow = sync_block_tables(
+                dims, pool, table, cache, view, dirty_slots=dirty)
+            return (pool, table, cache, jnp.any(failed),
+                    jnp.sum(cow.astype(jnp.int32)))
 
         return jax.lax.cond(at_commit | at_refresh, maintain, lambda a: a,
-                            (pool, table, cache, jnp.bool_(False)))
+                            (pool, table, cache, jnp.bool_(False),
+                             jnp.int32(0)))
 
     out = jax.lax.cond(active, advance, lambda a: a,
-                       (pool, table, cache, jnp.bool_(False)))
+                       (pool, table, cache, jnp.bool_(False), jnp.int32(0)))
     return out if with_alloc_fail else out[:3]
 
 

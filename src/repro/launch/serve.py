@@ -12,6 +12,16 @@ its blocks to the host, resume later — no recompute, no dropped tokens).
 ``--priorities`` assigns request priorities (higher = served first,
 preempted last).  ``--expect-all`` turns the run into a CI gate: exit
 nonzero unless every request completes with its full token count.
+
+Prefix-sharing knobs: ``--prefix-cache`` enables copy-on-write prefix
+caching over the shared pool (requests whose prompt extends an already-
+prefilled prefix map the cached blocks refcounted into their block table
+and skip the covered prefill chunks); ``--shared-prefix-frac`` makes the
+synthetic workload share that fraction of every prompt (1.0 = identical
+prompts — the shared-system-prompt fleet shape).  ``--expect-prefix-hits``
+gates on at least one hit, > 0 prefill tokens skipped, and a clean
+refcount audit (``claimed + free == pool_blocks``, every reference
+accounted).
 """
 from __future__ import annotations
 
@@ -59,6 +69,19 @@ def main():
                     help="CI gate: fail unless at least one preemption + "
                          "resume happened (guards the spill/resume "
                          "machinery against vacuous oversubscription runs)")
+    ap.add_argument("--prefix-cache", action="store_true",
+                    help="enable copy-on-write prefix caching: requests "
+                         "whose prompt extends a cached prefix share its "
+                         "physical blocks (refcounted) and skip the "
+                         "covered prefill chunks")
+    ap.add_argument("--shared-prefix-frac", type=float, default=0.0,
+                    help="fraction of every prompt shared across requests "
+                         "(1.0 = identical prompts; models a shared "
+                         "system-prompt fleet)")
+    ap.add_argument("--expect-prefix-hits", action="store_true",
+                    help="CI gate: fail unless the run scored >= 1 prefix "
+                         "hit with > 0 prefill tokens skipped and a clean "
+                         "pool refcount audit")
     args = ap.parse_args()
 
     mcfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
@@ -74,10 +97,15 @@ def main():
     pool_blocks = args.pool_blocks
     if args.pool_frac is not None:
         pool_blocks = max(int(worst_case * args.pool_frac), 1)
-    eng = ThinKVEngine(cfg, backend=args.backend, pool_blocks=pool_blocks)
+    eng = ThinKVEngine(cfg, backend=args.backend, pool_blocks=pool_blocks,
+                       prefix_cache=args.prefix_cache)
     rng = np.random.default_rng(0)
-    prompts = [rng.integers(0, mcfg.vocab_size, args.prompt_len)
-               for _ in range(args.requests)]
+    shared_len = int(round(args.prompt_len * args.shared_prefix_frac))
+    shared = rng.integers(0, mcfg.vocab_size, shared_len)
+    prompts = [np.concatenate([
+        shared, rng.integers(0, mcfg.vocab_size,
+                             args.prompt_len - shared_len)]).astype(np.int64)
+        for _ in range(args.requests)]
     priorities = None
     if args.priorities:
         cycle = [int(x) for x in args.priorities.split(",")]
@@ -115,6 +143,30 @@ def main():
                 f"victim was never restored)")
         print(f"preemption gate OK: {eng.metrics['preemptions']} "
               f"preemption(s), every victim resumed")
+    if args.prefix_cache:
+        pc = eng.prefix_cache.stats()
+        print(f"prefix cache: {eng.metrics['prefix_hits']} hits | "
+              f"{eng.metrics['prefix_tokens_skipped']} prefill tokens "
+              f"skipped | {eng.metrics['cow_faults']} COW faults | "
+              f"{pc['entries']} entries, {pc['evictions']} evictions")
+        try:
+            eng.audit_pool()
+        except AssertionError as e:
+            raise SystemExit(f"pool refcount audit FAILED: {e}")
+        print("pool refcount audit OK: every reference accounted, "
+              "claimed + free == pool_blocks")
+    if args.expect_prefix_hits:
+        if not args.prefix_cache:
+            raise SystemExit("--expect-prefix-hits requires --prefix-cache")
+        if eng.metrics["prefix_hits"] < 1 or \
+                eng.metrics["prefix_tokens_skipped"] <= 0:
+            raise SystemExit(
+                f"prefix gate FAILED: {eng.metrics['prefix_hits']} hits, "
+                f"{eng.metrics['prefix_tokens_skipped']} tokens skipped — "
+                f"the shared-prefix run never reused a cached prefix")
+        print(f"prefix gate OK: {eng.metrics['prefix_hits']} hit(s), "
+              f"{eng.metrics['prefix_tokens_skipped']} prefill tokens "
+              f"skipped")
 
 
 if __name__ == "__main__":

@@ -95,6 +95,46 @@ PREEMPTED -> RUNNING cycles under pool pressure (see
 AND the queue cannot progress: no running requests, the whole pool free,
 and the watermark still refuses every queued request — a pool too small
 for even one request, not a transient capacity state.
+
+COPY-ON-WRITE PREFIX CACHING (``prefix_cache=True``).  The pool's free
+bitmap is generalized to a per-block REFCOUNT (free ⇔ refcount 0), and a
+host-side ``serving.prefix_cache.PrefixCache`` indexes fully-committed
+prefill states by token chain: the block table, metadata snapshot, and
+boundary logits at every commit-aligned prefill chunk boundary (plus the
+end of the prompt).  The sharing/eviction/preemption interplay:
+
+  * HIT — an admitted request whose prompt extends a cached prefix maps
+    the cached physical blocks into its block table (refcount++),
+    restores the metadata snapshot, and prefills ONLY the tail; an exact
+    full-prompt hit performs zero prefill forwards (the entry's logits
+    feed sampling directly).  The watermark admission estimate shrinks by
+    the hit's block count — shared blocks need no fresh claim.
+  * COW — shared blocks (refcount > 1) are content-immutable.  Any
+    holder's pool mutation — group-commit slot reuse, TBE eviction
+    emptying a block, thought-refresh requantization — COW-faults first:
+    ``sync_block_tables`` diffs the pre/post-commit view, claims a fresh
+    block for each dirty shared block, copies the planes, swaps the
+    block table, and decrefs the source.  Logical frees just decref
+    (free at zero).  The preemption headroom bound counts a committing
+    slot's shared blocks as potential COW claims, so in-flight commits
+    still can never hit allocation failure.
+  * EVICTION — under watermark pressure (admission or headroom), cache
+    entries decay in LRU order BEFORE any request is preempted: dropping
+    a cache reference can free blocks without pausing work.  Blocks a
+    running/preempted request still maps merely decref and stay live.
+  * PREEMPTION — a victim spills only its PRIVATELY-owned planes
+    (refcount 1); shared blocks keep the victim's reference (they free
+    no memory when spilled, and their content is pinned immutable by the
+    remaining holders) and are re-attached verbatim on resume, which
+    claims fresh blocks only for the private mapping.  Resume stays
+    bit-exact: logical read order is unchanged on both paths.  When
+    retained references would PIN the pool (a block co-held by a cache
+    entry and a spill has cache_refs != refcount, so decay refuses it
+    and preemption retained it — each deferring to the other), the
+    last-resort valve ``_demote_spilled_shared`` decrefs the retained
+    references and folds them into the private spill mapping; resume
+    then scatters the already-spilled planes (still bit-exact — the
+    spill snapshots every mapped block) and decay can free the blocks.
 """
 from __future__ import annotations
 
@@ -170,10 +210,15 @@ class PreemptedState:
     the token to feed at the next tick)."""
 
     view: tuple                # PoolView planes as numpy [L, NB, BS, ...]
-    mapped: "np.ndarray"       # [L, NB] bool
+    mapped: "np.ndarray"       # [L, NB] bool — PRIVATE blocks to respill
     cache: object              # CTCache with numpy leaves
     tokens_out: int
     next_token: int
+    # physical ids of SHARED blocks (refcount > 1 at spill time) whose
+    # reference the victim RETAINS while paused: spilling them frees no
+    # memory, their content is pinned immutable by the other holders, and
+    # resume re-attaches them verbatim ([L, NB] int32, -1 elsewhere)
+    shared_table: "np.ndarray" = None
 
 
 class ThinKVEngine:
@@ -190,7 +235,9 @@ class ThinKVEngine:
                  lstar: Optional[Sequence[int]] = None,
                  backend: str = "auto", pool_blocks: Optional[int] = None,
                  record_logits: bool = False,
-                 prefill_chunk: Optional[int] = None):
+                 prefill_chunk: Optional[int] = None,
+                 prefix_cache: bool = False,
+                 prefix_cache_capacity: int = 64):
         assert cfg.model.family in (ArchFamily.DENSE, ArchFamily.MOE,
                                     ArchFamily.VLM), \
             "engine demo covers decoder-only backbones (the paper's scope)"
@@ -233,10 +280,15 @@ class ThinKVEngine:
                                       prefill_chunk % self.dims.G == 0), \
             "large prefill chunks must be 128-multiples aligned with commits"
         self.prefill_chunk = prefill_chunk
-        # unjitted tick kept for jaxpr inspection (launch-count auditing)
+        # trace-time flag: without the prefix cache no block is ever
+        # shared (refcounts stay 0/1), so the COW content diff in
+        # engine_advance is compiled out of the tick/prefill entirely
+        self._track_cow = bool(prefix_cache)
+        # unjitted fns kept for jaxpr inspection (launch-count auditing)
         self._tick_fn = self._make_tick()
         self._tick = jax.jit(self._tick_fn)
-        self._prefill_chunk = jax.jit(self._make_prefill_chunk())
+        self._prefill_chunk_fn = self._make_prefill_chunk()
+        self._prefill_chunk = jax.jit(self._prefill_chunk_fn)
         self._prefill_big_fn = self._make_prefill_big() if prefill_chunk \
             else None
         self._prefill_big = jax.jit(self._prefill_big_fn) if prefill_chunk \
@@ -253,7 +305,14 @@ class ThinKVEngine:
                                           "prefill_big_chunks": 0,
                                           "preemptions": 0, "resumes": 0,
                                           "admissions": 0,
-                                          "queue_wait_ticks": 0}
+                                          "queue_wait_ticks": 0,
+                                          "prefix_hits": 0,
+                                          "prefix_tokens_skipped": 0,
+                                          "cow_faults": 0}
+        from repro.serving.prefix_cache import PrefixCache
+        self.prefix_cache = PrefixCache(
+            self.dims, capacity=prefix_cache_capacity) \
+            if prefix_cache else None
         # --- oversubscription / preemption bookkeeping (host side) ---
         self._spilled: Dict[int, PreemptedState] = {}   # arrival -> spill
         self._queued_at: Dict[int, int] = {}            # arrival -> tick
@@ -407,13 +466,13 @@ class ThinKVEngine:
             # preemption headroom guarantee held (it must stay all-False)
             def adv(pool, xs):
                 cache_r, table_r, spars_r, active_r = xs
-                pool, table_r, cache_r, fail_r = CC.engine_advance(
+                pool, table_r, cache_r, fail_r, cow_r = CC.engine_advance(
                     tk, dims, pool, table_r, cache_r, spars_r, active_r,
-                    with_alloc_fail=True)
-                return pool, (table_r, cache_r, fail_r)
+                    with_alloc_fail=True, track_cow=self._track_cow)
+                return pool, (table_r, cache_r, fail_r, cow_r)
 
-            pool, (tables_out, caches, alloc_fail) = jax.lax.scan(
-                adv, pool, (caches, tables, sparsity, active))
+            pool, (tables_out, caches, alloc_fail, cow_faults) = \
+                jax.lax.scan(adv, pool, (caches, tables, sparsity, active))
 
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
             logits = softcap(E.unembed(params["embed"], h, cfg),
@@ -425,7 +484,7 @@ class ThinKVEngine:
             else:
                 nxt = jnp.argmax(logits, axis=-1)
             return (nxt.astype(jnp.int32), pool, tables_out, caches,
-                    sparsity, logits, alloc_fail)
+                    sparsity, logits, alloc_fail, cow_faults)
 
         return tick
 
@@ -507,15 +566,16 @@ class ThinKVEngine:
             cache = cache.replace(buf_k=buf_k, buf_v=buf_v)
             sparsity = jnp.mean(spars_all[lstar])
 
-            pool, table, cache, fail = CC.engine_advance(
+            pool, table, cache, fail, n_cow = CC.engine_advance(
                 tk, dims, pool, table, cache, sparsity,
-                jnp.bool_(True), n_new=n_valid, with_alloc_fail=True)
+                jnp.bool_(True), n_new=n_valid, with_alloc_fail=True,
+                track_cow=self._track_cow)
 
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
             last = jnp.clip(n_valid - 1, 0, C - 1)
             logits = softcap(E.unembed(params["embed"], h[last], cfg),
                              cfg.logit_softcap)
-            return pool, table, cache, logits, fail
+            return pool, table, cache, logits, fail, n_cow
 
         return chunk_step
 
@@ -643,18 +703,20 @@ class ThinKVEngine:
                     buf_k=bk_g.astype(cache.buf_k.dtype),
                     buf_v=bv_g.astype(cache.buf_v.dtype),
                     buf_len=jnp.int32(0))
-                pool, table, cache, fail = CC.engine_advance(
+                pool, table, cache, fail, n_cow = CC.engine_advance(
                     tk, dims, pool, table, cache, sparsity, jnp.bool_(True),
-                    n_new=dims.G, with_alloc_fail=True)
-                return (pool, table, cache), fail
+                    n_new=dims.G, with_alloc_fail=True,
+                    track_cow=self._track_cow)
+                return (pool, table, cache), (fail, n_cow)
 
-            (pool, table, cache), fails = jax.lax.scan(
+            (pool, table, cache), (fails, n_cows) = jax.lax.scan(
                 commit, (pool, table, cache), (kg, vg))
 
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
             logits = softcap(E.unembed(params["embed"], h[C - 1], cfg),
                              cfg.logit_softcap)
-            return pool, table, cache, logits, jnp.any(fails)
+            return (pool, table, cache, logits, jnp.any(fails),
+                    jnp.sum(n_cows))
 
         return big_step
 
@@ -668,6 +730,18 @@ class ThinKVEngine:
             self.params, self.pool, self.tables, self.caches,
             jnp.zeros(R, jnp.int32), jnp.ones(R, bool),
             jax.random.PRNGKey(0))
+        return K.count_pallas_launches(jaxpr)
+
+    def prefill_launch_count(self) -> int:
+        """Per-g-chunk ``pallas_call`` launch count, audited on the
+        prefill chunk's jaxpr — a request's total prefill launches are
+        ``prefill_chunks * this`` (+ the big-chunk path's own count), so
+        a prefix-cache hit that skips every covered chunk provably
+        dispatched ZERO kernel launches for the covered prefix."""
+        cache0 = jax.tree.map(lambda x: x[0], self.caches)
+        jaxpr = jax.make_jaxpr(self._prefill_chunk_fn)(
+            self.params, self.pool, self.tables[0], cache0,
+            jnp.zeros(self.dims.G, jnp.int32), jnp.int32(self.dims.G))
         return K.count_pallas_launches(jaxpr)
 
     def _make_reset(self):
@@ -701,13 +775,142 @@ class ThinKVEngine:
     def _free_per_layer(self) -> np.ndarray:
         return np.asarray(jnp.sum(self.pool.free, axis=1)).astype(np.int64)
 
+    def _split_table(self, table_np: np.ndarray, rc: np.ndarray = None):
+        """``[L, NB]`` (private, shared) masks of a raw block table
+        against the refcounts (``rc``: a pre-fetched host copy — pass it
+        when a loop consults several tables so one device transfer
+        serves the whole pass).
+
+        A block is PRIVATE iff this table holds its only reference
+        (refcount 1); releasing the table frees exactly its private
+        blocks, and only its shared blocks can demand COW claims.  The
+        single definition keeps preemption spilling, headroom estimates,
+        and victim scoring consistent."""
+        if rc is None:
+            rc = np.asarray(self.pool.refcount)              # [L, NP]
+        mapped = table_np >= 0
+        rc_at = np.take_along_axis(rc, np.clip(table_np, 0, None), axis=1)
+        private = mapped & (rc_at == 1)
+        return private, mapped & ~private
+
+    def _split_held(self, i: int, rc: np.ndarray = None):
+        """Per-layer (private, shared) mapped-block counts of slot ``i``."""
+        private, shared = self._split_table(np.asarray(self.tables[i]), rc)
+        return (private.sum(axis=1).astype(np.int64),
+                shared.sum(axis=1).astype(np.int64))
+
     def _blocks_held(self, i: int) -> np.ndarray:
-        """Per-layer mapped physical blocks of slot ``i`` ([L])."""
-        return (np.asarray(self.tables[i]) >= 0).sum(axis=1)
+        """Per-layer PRIVATE physical blocks of slot ``i`` ([L]) — the
+        blocks preempting it would actually return to the free list."""
+        return self._split_held(i)[0]
 
     def _commit_due(self, i: int) -> bool:
         """Does slot ``i``'s NEXT written token trigger a group commit?"""
         return (self._slot_ntok[i] + 1) % self.dims.G == 0
+
+    def _cow_demand(self, i: int, rc: np.ndarray) -> int:
+        """Worst-case extra fresh blocks slot ``i``'s next commit can
+        claim through COW faults: every shared block it maps could be
+        dirtied at once (each COWs at most once — the copy is private).
+        ``rc`` is the caller's pre-fetched refcount copy; None means the
+        caller established no block can be shared (demand provably 0)."""
+        return int(self._split_held(i, rc)[1].max()) if rc is not None \
+            else 0
+
+    def _sharing_possible(self) -> bool:
+        """Can ANY refcount currently exceed 1?  False while the prefix
+        cache holds no entry, no hit ever mapped shared blocks into a
+        slot, and no spilled request retains shared references — the
+        headroom paths then skip the [L, NP] refcount transfer entirely
+        (every COW demand is provably zero)."""
+        return self.prefix_cache is not None and (
+            bool(self.prefix_cache.entries)
+            or self.metrics["prefix_hits"] > 0
+            or any(st.shared_table is not None
+                   and (st.shared_table >= 0).any()
+                   for st in self._spilled.values()))
+
+    def _decay_prefix_cache(self, needed: "np.ndarray | int",
+                            free: np.ndarray = None) -> bool:
+        """Evict prefix-cache entries until every layer's free count
+        reaches ``needed``, the cache is empty, or no cached block can
+        possibly free.  Runs BEFORE any request preemption: dropping a
+        cache reference can free blocks without pausing work.  Returns
+        True if any entry was evicted.  ``free`` is an optional
+        pre-fetched free count for the first pressure check (the caller
+        usually just computed it).
+
+        Decay only helps for UNREFERENCED cached blocks — ones whose
+        every reference is a cache entry's (overlapping boundary entries
+        included).  When no such block exists (every cached block is
+        also mapped by a running/preempted request), evicting would wipe
+        future hit opportunities without freeing a single block, so the
+        loop stops and lets the caller preempt instead.  Among entries,
+        the victim is the LRU entry that frees at least one block RIGHT
+        NOW (some block at refcount 1); only when frees are chained
+        behind overlapping boundary entries (cache-only blocks all at
+        refcount >= 2) does plain LRU order break the chain.  The
+        most-recently-used entry is never picked while any other entry
+        remains — an admission-gate probe freshens the entry its
+        shrunken watermark estimate relies on, so that entry must be the
+        LAST thing decay takes."""
+        if self.prefix_cache is None:
+            return False
+        if free is None:
+            free = self._free_per_layer()
+        if not (self.prefix_cache.entries and (free < needed).any()):
+            return False
+        # ONE refcount transfer per call; evictions are mirrored on the
+        # host copies (only this loop mutates the pool while it runs)
+        rc = np.asarray(self.pool.refcount).copy()           # [L, NP]
+        cache_refs = np.zeros_like(rc)
+        for t in self.prefix_cache.cached_tables():
+            for l in range(self.dims.L):
+                np.add.at(cache_refs[l], t[l][t[l] >= 0], 1)
+        evicted = False
+        while self.prefix_cache.entries and (free < needed).any():
+            if not ((cache_refs > 0) & (cache_refs == rc)).any():
+                break            # nothing decay could ever free
+            lru = self.prefix_cache.lru_entries()
+            cand = lru[:-1] if len(lru) > 1 else lru   # spare the MRU
+            pick = next(
+                (e for e in cand
+                 if (self._split_table(e.table, rc)[0]).any()), cand[0])
+            for l in range(self.dims.L):
+                ids = pick.table[l][pick.table[l] >= 0]
+                np.subtract.at(rc[l], ids, 1)
+                np.subtract.at(cache_refs[l], ids, 1)
+            self.pool = self.prefix_cache.evict_entry(self.pool, pick)
+            evicted = True
+            free = (rc == 0).sum(axis=1).astype(np.int64)
+        return evicted
+
+    def _demote_spilled_shared(self) -> bool:
+        """LAST-RESORT pressure valve: convert every spilled request's
+        retained shared references into plain private spill state —
+        decref the shared blocks and fold them into ``st.mapped``, so
+        resume claims fresh blocks and scatters the already-spilled
+        planes instead of re-attaching.  Sound because the spill's view
+        snapshots EVERY mapped block's planes and shared content is
+        immutable from spill time (any other holder's write COW-faults
+        away), so the resumed request stays bit-exact.
+
+        This unpins the pool when retained references would otherwise
+        deadlock it: a block co-held by a cache entry and a spill has
+        refcount 2 with ``cache_refs == 1``, so decay refuses it and
+        preemption retained it — each mechanism deferring to the other.
+        After demotion the cache is the blocks' only holder and decay
+        can free them.  Returns True if any reference was released."""
+        changed = False
+        for st in self._spilled.values():
+            if st.shared_table is None or not (st.shared_table >= 0).any():
+                continue
+            self.pool = CC.release_blocks(self.dims, self.pool,
+                                          jnp.asarray(st.shared_table))
+            st.mapped = st.mapped | (st.shared_table >= 0)
+            st.shared_table = None
+            changed = True
+        return changed
 
     def _watermark_blocks(self, req: Request) -> np.ndarray:
         """Per-layer block estimate for admitting ``req`` ([L]).
@@ -719,15 +922,32 @@ class ThinKVEngine:
         BS)`` blocks plus one commit's claim covers the steady state
         (capped by NB, and by the request's own total length when shorter).
         This is deliberately NOT the dense worst case — over-optimism is
-        repaired by preemption, never by data loss."""
+        repaired by preemption, never by data loss.
+
+        A PREFIX-CACHE hit shrinks a fresh request's estimate by the
+        cached-prefix blocks: shared blocks are mapped by incref, not
+        claimed from the free list (later COW faults repair any
+        optimism, like the rest of the estimate).  A preempted request's
+        retained shared blocks likewise cost nothing to re-attach —
+        ``st.mapped`` is already only the private spill."""
         dims = self.dims
         st = self._spilled.get(req.arrival)
         if st is not None:
             return st.mapped.sum(axis=1).astype(np.int64) + self._cc
         total = len(req.prompt) + int(req.max_new_tokens)
         cap = min(total, self.tk.token_budget + dims.G)
-        est = min(dims.NB, -(-cap // dims.BS) + self._cc)
-        return np.full(dims.L, est, np.int64)
+        est = np.full(dims.L,
+                      min(dims.NB, -(-cap // dims.BS) + self._cc), np.int64)
+        if self.prefix_cache is not None:
+            # record=False: a gate probe, not a served hit — but the
+            # lookup still freshens the entry's LRU stamp, and decay
+            # spares the MRU entry, so the decay this same gate may
+            # trigger evicts the entry the shrunken estimate relies on
+            # LAST, not first
+            hit = self.prefix_cache.lookup(req.prompt, record=False)
+            if hit is not None:
+                est = np.maximum(est - hit.blocks_per_layer, self._cc)
+        return est
 
     def _admission_gate(self):
         """Watermark admission closure for ONE admit() sweep (per-request).
@@ -737,17 +957,26 @@ class ThinKVEngine:
         per already-running slot (the LOW WATERMARK — admission must never
         starve in-flight requests straight into preemption).  Each
         admission reserves its own estimate for the rest of the sweep, so
-        a single stale free-count cannot over-admit."""
-        free = self._free_per_layer()
+        a single stale free-count cannot over-admit.  When the gate would
+        refuse, UNREFERENCED prefix-cache entries decay first (LRU) — a
+        cache reference freed is cheaper than a refused admission."""
         running = sum(not s.free for s in self.scheduler.slots)
-        state = {"free": free - running * self._cc}
+        # ONE device sync per sweep; re-read only after a decay actually
+        # changed the pool (size-aware admission probes every queued
+        # request, so a per-probe sync would cost a roundtrip per entry)
+        state = {"reserved": np.full(self.dims.L, running * self._cc,
+                                     np.int64),
+                 "free": self._free_per_layer()}
 
         def gate(req: Request) -> bool:
             need = self._watermark_blocks(req)
-            if np.all(state["free"] >= need):
-                state["free"] = state["free"] - need
-                return True
-            return False
+            while True:
+                if np.all(state["free"] - state["reserved"] >= need):
+                    state["reserved"] = state["reserved"] + need
+                    return True
+                if not self._decay_prefix_cache(need + state["reserved"]):
+                    return False
+                state["free"] = self._free_per_layer()
         return gate
 
     def _victim_exclude(self) -> tuple:
@@ -759,31 +988,40 @@ class ThinKVEngine:
                      if self._slot_ntok[s.idx] == 0)
 
     def _preempt(self, slot) -> None:
-        """Pause a RUNNING request: spill its pool blocks + block table +
-        cache metadata/TBQ buffer to a host-side :class:`PreemptedState`,
-        release the blocks to the global free list, and re-queue the
-        request as PREEMPTED."""
+        """Pause a RUNNING request: spill its PRIVATE pool blocks + block
+        table + cache metadata/TBQ buffer to a host-side
+        :class:`PreemptedState` and decref them to the global free list.
+        SHARED blocks (refcount > 1: prefix-cached or mapped by another
+        holder) are not spilled — releasing them would free no memory and
+        their content is pinned immutable by the remaining holders — the
+        victim RETAINS its reference and re-attaches them on resume."""
         i = slot.idx
         req = slot.request
         assert self._slot_ntok[i] > 0, \
             "preempting a slot that never started (nothing to spill)"
-        view, mapped = CC.extract_request(self.dims, self.pool,
-                                          self.tables[i])
+        table_np = np.asarray(self.tables[i])                # [L, NB]
+        private, shared = self._split_table(table_np)
+        view, _ = CC.extract_request(self.dims, self.pool, self.tables[i])
         self._spilled[req.arrival] = PreemptedState(
             view=tuple(np.asarray(p) for p in view),
-            mapped=np.asarray(mapped),
+            mapped=private,
             cache=jax.tree.map(lambda x: np.asarray(x[i]), self.caches),
             tokens_out=slot.tokens_out,
-            next_token=int(self._feed[i]))
-        self._release_slot(i)
+            next_token=int(self._feed[i]),
+            shared_table=np.where(shared, table_np, -1).astype(np.int32))
+        # decref only the private blocks; the shared references ride
+        # along in the spill (audited via audit_pool)
+        self._release_slot(
+            i, jnp.asarray(np.where(private, table_np, -1).astype(np.int32)))
         self.scheduler.preempt(slot)
         self._queued_at[req.arrival] = self.metrics["ticks"]
         self.metrics["preemptions"] += 1
 
     def _resume(self, slot, st: PreemptedState) -> bool:
         """Re-admit a preempted request bit-exactly: claim fresh physical
-        blocks for its spilled mapping, scatter the planes back, restore
-        the cache pytree and host bookkeeping.
+        blocks for its spilled PRIVATE mapping, scatter the planes back,
+        re-attach the retained shared blocks verbatim, restore the cache
+        pytree and host bookkeeping.
 
         Returns False (leaving pool and slot state untouched, the partial
         claim released) when the free list cannot back the full mapping —
@@ -799,6 +1037,9 @@ class ThinKVEngine:
             self.pool = CC.release_blocks(self.dims, pool, table_i)
             return False
         self.pool = pool
+        if st.shared_table is not None:
+            shared_t = jnp.asarray(st.shared_table)
+            table_i = jnp.where(shared_t >= 0, shared_t, table_i)
         self.tables = self.tables.at[i].set(table_i)
         cache_i = jax.tree.map(jnp.asarray, st.cache)
         self.caches = jax.tree.map(
@@ -812,18 +1053,30 @@ class ThinKVEngine:
     def _ensure_decode_headroom(self) -> None:
         """Preempt AHEAD of need so the coming tick cannot hit an
         allocation failure: each slot whose next token triggers a group
-        commit can claim at most ``ceil(g/BS)`` fresh blocks per layer, and
-        frees only add, so covering the committing slots from the free
-        list is sufficient.  Victims: lowest priority, then most blocks
-        held.  Preempting the last committing slot zeroes the demand, so
-        this always terminates without raising."""
+        commit can claim at most ``ceil(g/BS)`` fresh blocks per layer
+        PLUS one block per shared block it maps (a dirty shared block
+        COW-faults into a fresh claim), and frees only add, so covering
+        the committing slots from the free list is sufficient.  Before
+        any victim is paused, unreferenced prefix-cache entries decay
+        (LRU) — cache references are the cheapest thing to free.
+        Victims: lowest priority, then most private blocks held.
+        Preempting the last committing slot zeroes the demand, so this
+        always terminates without raising."""
         sch = self.scheduler
         committing = {s.idx for s in sch.active_slots()
                       if self._commit_due(s.idx)}
         if not committing:
             return
-        need = len(committing) * self._cc
-        free = self._free_per_layer()
+        # ONE refcount transfer serves every per-slot demand estimate
+        # (and none at all while nothing can be shared)
+        rc = np.asarray(self.pool.refcount) \
+            if self._sharing_possible() else None
+        demand = {i: self._cc + self._cow_demand(i, rc) for i in committing}
+        need = sum(demand.values())
+        free = (rc == 0).sum(axis=1).astype(np.int64) if rc is not None \
+            else self._free_per_layer()
+        if self._decay_prefix_cache(need, free=free):
+            free = self._free_per_layer()
         while need > 0 and int(free.min()) < need:
             victim = sch.select_victim(
                 lambda i: int(self._blocks_held(i).max()),
@@ -832,20 +1085,35 @@ class ThinKVEngine:
             free = free + self._blocks_held(victim.idx)
             if victim.idx in committing:
                 committing.discard(victim.idx)
-                need -= self._cc
+                need -= demand.pop(victim.idx)
             self._preempt(victim)
 
     def _ensure_prefill_headroom(self, idx: int, n_blocks: int) -> None:
-        """Free headroom for one prefill-chunk commit of slot ``idx``,
-        preempting OTHER running slots if needed.  Raises only when nothing
-        is preemptible and the pool still cannot back the commit (a pool
-        too small for a single request)."""
-        free = self._free_per_layer()
+        """Free headroom for one prefill-chunk commit of slot ``idx``
+        (including its potential COW claims), decaying prefix-cache
+        entries first, then preempting OTHER running slots.  Raises only
+        when nothing is preemptible and the pool still cannot back the
+        commit (a pool too small for a single request)."""
+        rc = np.asarray(self.pool.refcount) \
+            if self._sharing_possible() else None
+        n_blocks = n_blocks + self._cow_demand(idx, rc)
+        free = (rc == 0).sum(axis=1).astype(np.int64) if rc is not None \
+            else self._free_per_layer()
+        if self._decay_prefix_cache(n_blocks, free=free):
+            free = self._free_per_layer()
         while int(free.min()) < n_blocks:
             victim = self.scheduler.select_victim(
                 lambda i: int(self._blocks_held(i).max()),
                 exclude=(idx,) + self._victim_exclude())
             if victim is None:
+                # last resort before declaring the pool too small:
+                # unpin spilled requests' retained shared references so
+                # cache decay can actually free the co-held blocks
+                if self._demote_spilled_shared():
+                    self._decay_prefix_cache(n_blocks)
+                    free = self._free_per_layer()
+                    if int(free.min()) >= n_blocks:
+                        break
                 raise RuntimeError(
                     f"pool exhausted: {self.num_pool_blocks} physical "
                     f"blocks cannot back one prefill commit "
@@ -854,11 +1122,28 @@ class ThinKVEngine:
             free = free + self._blocks_held(victim.idx)
             self._preempt(victim)
 
-    def _release_slot(self, i: int):
-        self.pool = CC.release_blocks(self.dims, self.pool, self.tables[i])
+    def _release_slot(self, i: int, table=None):
+        """Decref ``table`` (default: everything slot ``i`` maps — the
+        retire path; ``_preempt`` passes only the victim's PRIVATE
+        mapping) and reset the slot's device + host state."""
+        self.pool = CC.release_blocks(
+            self.dims, self.pool,
+            self.tables[i] if table is None else table)
         self.tables = self.tables.at[i].set(CC.init_block_table(self.dims))
         self.caches = self._reset_slot(self.caches, jnp.int32(i))
         self._slot_ntok[i] = 0
+
+    def audit_pool(self) -> Dict:
+        """Assert the refcount accounting invariants across EVERY
+        reference holder: live slot tables, prefix-cache entries, and
+        preempted requests' retained shared mappings.  Raises
+        AssertionError on any violation (leak, phantom ref, double-free,
+        claimed+free != pool_blocks); returns per-layer counts."""
+        extra = [st.shared_table for st in self._spilled.values()
+                 if st.shared_table is not None]
+        if self.prefix_cache is not None:
+            extra += self.prefix_cache.cached_tables()
+        return CC.check_pool_invariants(self.pool, self.tables, extra)
 
     def _prefill(self, i: int, prompt: np.ndarray) -> np.ndarray:
         """Chunked batched prefill of one slot; returns last-token logits.
@@ -875,7 +1160,14 @@ class ThinKVEngine:
         C/g groups inside ONE jitted call, so the host only observes frees
         between calls; when the free list cannot cover the chunk's
         worst-case claim the prompt falls back to g-sized chunks instead
-        (same math, per-commit granularity)."""
+        (same math, per-commit granularity).
+
+        PREFIX CACHE: when enabled, the longest cached prefix of the
+        prompt is mapped straight into the block table (refcount++) with
+        its metadata snapshot, and the covered chunks are SKIPPED — an
+        exact full-prompt hit returns the cached boundary logits with
+        zero forward passes.  Commit-aligned boundaries of the computed
+        chunks are registered back into the cache."""
         dims = self.dims
         C = dims.G
         BC = self.prefill_chunk
@@ -884,24 +1176,61 @@ class ThinKVEngine:
         logits = None
         fails = []
         s0 = 0
+        pc = self.prefix_cache
+        hit = pc.lookup(prompt) if pc is not None else None
+        if hit is not None:
+            # map the shared blocks (one new reference) and restore the
+            # boundary snapshot; prefill continues at the covered length
+            self.pool = CC.incref_blocks(self.dims, self.pool,
+                                         jnp.asarray(hit.table))
+            table_i = jnp.asarray(hit.table)
+            cache_i = CC.CTCache(**{f: jnp.asarray(getattr(hit.cache, f))
+                                    for f in CC.CTCache.FIELDS})
+            logits = hit.logits
+            s0 = hit.length
+            self.metrics["prefix_hits"] += 1
+            self.metrics["prefix_tokens_skipped"] += s0
+
+        def register(boundary, logits_b):
+            """Index the committed state at ``boundary`` tokens (partial
+            TBQ buffer => exact-match-only entry)."""
+            if pc is None or logits_b is None or boundary <= 0:
+                return
+            self.pool = pc.register(
+                self.pool, prompt, boundary, table_i, cache_i, logits_b,
+                full_only=boundary % C != 0)
+
         big_claims = (BC // C) * self._cc if BC else 0
         while BC and len(prompt) - s0 >= BC:
             # worst-case free blocks one big chunk can need per layer: its
             # C/g commits claim <= ceil(g/BS) each with no frees in
             # between, but the logical table caps net growth at NB -
             # mapped — any claim beyond that is preceded by at least as
-            # many in-chunk frees, which replenish the free list first
-            mapped = (np.asarray(table_i) >= 0).sum(axis=1)       # [L]
-            need = np.minimum(big_claims, dims.NB - mapped)
-            if (self._free_per_layer() < need).any():
+            # many in-chunk frees, which replenish the free list first.
+            # Shared blocks add one potential COW claim each (the copy is
+            # NEW pool demand: the source stays claimed by other holders)
+            self.tables = self.tables.at[i].set(table_i)
+            t_np = np.asarray(table_i)
+            rc = np.asarray(self.pool.refcount)   # ONE transfer per chunk
+            shared = self._split_table(t_np, rc)[1]
+            mapped = (t_np >= 0).sum(axis=1)                  # [L]
+            need = np.minimum(big_claims, dims.NB - mapped) + \
+                shared.sum(axis=1)
+            free = (rc == 0).sum(axis=1).astype(np.int64)
+            if self._decay_prefix_cache(need, free=free):
+                free = self._free_per_layer()
+            if (free < need).any():
                 break            # tight pool: g-sized chunks from here on
             chunk = np.asarray(prompt[s0:s0 + BC], np.int32)
-            self.pool, table_i, cache_i, logits, fail = self._prefill_big(
+            (self.pool, table_i, cache_i, logits, fail,
+             n_cow) = self._prefill_big(
                 self.params, self.pool, table_i, cache_i,
                 jnp.asarray(chunk))
             fails.append(fail)
             self.metrics["prefill_big_chunks"] += 1
+            self.metrics["cow_faults"] += int(np.asarray(n_cow))
             s0 += BC
+            register(s0, logits)
         for s in range(s0, len(prompt), C):
             # NOTE the slot's own partial state is committed to self.pool /
             # self.tables only at the end of _prefill, but headroom-driven
@@ -913,12 +1242,16 @@ class ThinKVEngine:
             n_valid = len(chunk)
             padded = np.zeros(C, np.int32)
             padded[:n_valid] = chunk
-            self.pool, table_i, cache_i, logits, fail = self._prefill_chunk(
+            (self.pool, table_i, cache_i, logits, fail,
+             n_cow) = self._prefill_chunk(
                 self.params, self.pool, table_i, cache_i,
                 jnp.asarray(padded), jnp.int32(n_valid))
             fails.append(fail)
             self.metrics["prefill_chunks"] += 1
-        self.metrics["prefill_tokens"] += len(prompt)
+            self.metrics["cow_faults"] += int(np.asarray(n_cow))
+            register(s + n_valid, logits)
+        self.metrics["prefill_tokens"] += len(prompt) - (hit.length
+                                                         if hit else 0)
         self._slot_ntok[i] = len(prompt)
         self.tables = self.tables.at[i].set(table_i)
         self.caches = jax.tree.map(
@@ -1014,12 +1347,20 @@ class ThinKVEngine:
             if not any(not s.free for s in sch.slots):
                 admit_and_prefill()
                 if sch.queue and not any(not s.free for s in sch.slots):
-                    # nothing running means the WHOLE pool is free, and the
-                    # watermark still refuses every queued request; with no
-                    # in-flight request the pool can never change, so
-                    # admission can never succeed and nothing is
-                    # preemptible — fail loudly instead of spinning
-                    # max_ticks and dropping requests
+                    # last resort before declaring livelock: unpin
+                    # spilled requests' retained shared references
+                    # (blocks co-held by cache entries + spills deadlock
+                    # decay against preemption) and retry admission once
+                    if self._demote_spilled_shared():
+                        admit_and_prefill()
+                if sch.queue and not any(not s.free for s in sch.slots):
+                    # nothing running means every claimed block is pinned
+                    # by cache entries/spills the decay valve could not
+                    # release, and the watermark still refuses every
+                    # queued request; with no in-flight request the pool
+                    # can never change, so admission can never succeed
+                    # and nothing is preemptible — fail loudly instead
+                    # of spinning max_ticks and dropping requests
                     raise RuntimeError(
                         f"admission livelock: {len(sch.queue)} queued "
                         f"request(s), nothing running or preemptible, and "
@@ -1034,7 +1375,7 @@ class ThinKVEngine:
                 continue         # headroom preempted everything this round
             rng, sub = jax.random.split(rng)
             (nxt, self.pool, self.tables, self.caches, _, logits,
-             alloc_fail) = \
+             alloc_fail, cow_faults) = \
                 self._tick(self.params, self.pool, self.tables, self.caches,
                            jnp.asarray(self._feed), jnp.asarray(active), sub)
             nxt = np.asarray(nxt)
@@ -1043,6 +1384,7 @@ class ThinKVEngine:
                     "decode commit allocation failed despite preemption "
                     "headroom (pool accounting bug — data would have been "
                     "dropped)")
+            self.metrics["cow_faults"] += int(np.asarray(cow_faults).sum())
             self.metrics["ticks"] += 1
             self.metrics["tokens"] += int(active.sum())
             self._slot_ntok[active] += 1

@@ -84,11 +84,26 @@ class Scheduler:
         self.queue: List[Request] = []   # WAITING + PREEMPTED, sorted
         self.finished: List[Request] = []
         self._arrivals = 0
+        self._stamps: set = set()        # every arrival stamp ever issued
 
     def submit(self, req: Request) -> None:
+        """Queue a new request, guaranteeing a UNIQUE arrival stamp.
+
+        The arrival stamp doubles as the engine's bookkeeping key
+        (``_queued_at`` / ``_spilled`` / ``request_logits``), so a
+        collision would silently cross-wire spill state and queue-wait
+        metrics between requests.  Auto-assigned stamps skip past any
+        caller-provided ones, and a caller-provided stamp that was
+        already issued is rejected loudly."""
         if req.arrival < 0:
             req.arrival = self._arrivals
-            self._arrivals += 1
+        elif req.arrival in self._stamps:
+            raise ValueError(
+                f"duplicate arrival stamp {req.arrival}: stamps key the "
+                f"engine's per-request bookkeeping and must be unique — "
+                f"leave Request.arrival at -1 to auto-assign")
+        self._stamps.add(req.arrival)
+        self._arrivals = max(self._arrivals, req.arrival + 1)
         self.queue.append(req)
         self.queue.sort(key=_queue_key)
 

@@ -1,16 +1,25 @@
-"""Property test: global-pool accounting invariants under random
-admit/step(commit/evict)/retire/preempt/resume sequences.
+"""Property test: refcounted global-pool accounting invariants under
+random admit/step(commit/evict)/retire/preempt/resume/share/COW
+sequences.
 
 Across ANY interleaving — including allocation failures under an
-oversubscribed pool (claims reverted) and spill/resume cycles — every
-layer must satisfy:
+oversubscribed pool (claims reverted), spill/resume cycles, prefix-style
+SHARING (a second holder increfs a request's blocks), and explicit or
+commit-triggered copy-on-write faults — every layer must satisfy:
 
-* ``claimed + free == pool_blocks`` (no leaked or double-counted block);
-* no physical block is referenced by two live block tables;
-* no mapped block is marked free.
+* every physical block's refcount equals the number of live references
+  to it (block tables + cached holders — no leak, no phantom ref);
+* no refcount is negative (no double-free);
+* ``claimed(refcount > 0) + free(refcount == 0) == pool_blocks``.
 
-Additionally a resumed request's pool planes must equal its spilled
-planes on every mapped block (restore is bit-exact)."""
+Additionally:
+
+* a resumed request's pool planes must equal its spilled planes on every
+  mapped block (restore is bit-exact);
+* a SHARED holder's planes are content-immutable: from incref to
+  release, the cached blocks' pool content never changes — any writer
+  COW-faults into a private copy (or, on a failed COW claim, skips the
+  write entirely) rather than mutating in place."""
 import functools
 
 import jax
@@ -26,6 +35,7 @@ TK = ThinKVConfig(refresh_interval=8, group_size=4, block_size=4,
                   min_retention=2, max_segments=16, kmeans_iters=2)
 DIMS = CC.make_dims(TK, num_layers=2, kv_heads=2, head_dim=16)
 N_REQ = 3
+N_KINDS = 6
 # oversubscribed: room for ~1.5 requests' worst case across 3 requests
 POOL_BLOCKS = DIMS.NB + DIMS.NB // 2
 
@@ -43,14 +53,16 @@ def _step(pool, table, cache, k, v, spars):
 
 
 class _Harness:
-    """Host-side mirror of the engine's admit/preempt/resume bookkeeping
-    at the ct_cache level (no model, no scheduler)."""
+    """Host-side mirror of the engine's admit/preempt/resume/share
+    bookkeeping at the ct_cache level (no model, no scheduler)."""
 
     def __init__(self, seed):
         self.rng = np.random.default_rng(seed)
         self.pool = CC.init_global_pool(DIMS, POOL_BLOCKS)
         self.live = {}        # req -> (table, cache)
-        self.spilled = {}     # req -> (view, mapped)
+        self.spilled = {}     # req -> (view, mapped, cache)
+        self.cached = []      # prefix-cache-style holders:
+        #                       (table np, frozen planes, mapped mask)
 
     def live_tables(self):
         if not self.live:
@@ -58,7 +70,18 @@ class _Harness:
         return np.stack([np.asarray(t) for t, _ in self.live.values()])
 
     def check(self):
-        CC.check_pool_invariants(self.pool, self.live_tables())
+        CC.check_pool_invariants(self.pool, self.live_tables(),
+                                 extra_tables=[t for t, _, _ in self.cached])
+        # shared-content immutability: every cached holder's planes are
+        # bit-identical to the pool content at its mapped blocks
+        for table_np, frozen, mapped in self.cached:
+            now, _ = CC.extract_request(DIMS, self.pool,
+                                        jnp.asarray(table_np))
+            for f_p, n_p in zip(frozen, tuple(now)):
+                np.testing.assert_array_equal(
+                    np.asarray(n_p)[mapped], f_p[mapped],
+                    err_msg="shared block content mutated in place "
+                            "(COW fault missing)")
 
     def start(self, r):
         if r in self.live or r in self.spilled:
@@ -74,8 +97,8 @@ class _Harness:
         v = jnp.asarray(self.rng.standard_normal((DIMS.L, DIMS.H, DIMS.D)),
                         jnp.float32)
         spars = jnp.float32(self.rng.choice([0.3, 0.65, 0.92]))
-        pool, table, cache, _fail = _step(self.pool, table, cache, k, v,
-                                          spars)
+        pool, table, cache, _fail, _ncow = _step(self.pool, table, cache,
+                                                 k, v, spars)
         # _fail True is LEGAL here (oversubscribed, no engine headroom
         # logic at this level): claims revert, invariants must still hold
         self.pool, self.live[r] = pool, (table, cache)
@@ -116,10 +139,44 @@ class _Harness:
             np.testing.assert_array_equal(
                 np.asarray(back_p)[sel], spilled_p[sel])
 
+    def share(self, r):
+        """A prefix-cache-style holder increfs r's current mapping and
+        pins its content."""
+        if r not in self.live:
+            return
+        table, _ = self.live[r]
+        table_np = np.asarray(table).copy()
+        if not (table_np >= 0).any():
+            return
+        self.pool = CC.incref_blocks(DIMS, self.pool, jnp.asarray(table_np))
+        view, mapped = CC.extract_request(DIMS, self.pool,
+                                          jnp.asarray(table_np))
+        self.cached.append((table_np,
+                            jax.tree.map(np.asarray, tuple(view)),
+                            np.asarray(mapped)))
+
+    def release_cached(self):
+        if not self.cached:
+            return
+        table_np, _, _ = self.cached.pop(0)
+        self.pool = CC.release_blocks(DIMS, self.pool,
+                                      jnp.asarray(table_np))
+
+    def cow(self, r):
+        """Explicit COW fault over a random subset of r's mapped blocks
+        (oversubscribed: the claim may fail — the source must survive)."""
+        if r not in self.live:
+            return
+        table, cache = self.live[r]
+        mask = jnp.asarray(self.rng.random((DIMS.L, DIMS.NB)) < 0.5)
+        pool, table, _ok = CC.cow_blocks(DIMS, self.pool, table, mask)
+        self.pool, self.live[r] = pool, (table, cache)
+
 
 @settings(max_examples=6, deadline=None)
 @given(st.integers(0, 2 ** 31 - 1),
-       st.lists(st.integers(0, 4 * N_REQ - 1), min_size=12, max_size=28))
+       st.lists(st.integers(0, N_KINDS * N_REQ - 1), min_size=14,
+                max_size=30))
 def test_pool_accounting_invariants_hold(seed, ops):
     h = _Harness(seed)
     for r in range(N_REQ):
@@ -134,14 +191,21 @@ def test_pool_accounting_invariants_hold(seed, ops):
             h.preempt(r)
         elif kind == 2:
             h.resume(r)
-        else:
+        elif kind == 3:
             h.retire(r)
             h.start(r)                # fresh request reuses the id
+        elif kind == 4:
+            h.share(r)
+        else:
+            h.cow(r) if r % 2 else h.release_cached()
         h.check()
-    # drain: retire the live set first (frees their blocks), then resume +
-    # retire the spilled remainder — afterwards the whole pool is free
+    # drain: retire the live set first (frees their blocks), release the
+    # cached holders, then resume + retire the spilled remainder —
+    # afterwards the whole pool is free
     for r in range(N_REQ):
         h.retire(r)
+    while h.cached:
+        h.release_cached()
     for r in range(N_REQ):
         h.resume(r)
         h.retire(r)

@@ -1,6 +1,7 @@
 """Scheduler unit tests: priority+arrival ordering, size-aware admission,
-preemption lifecycle, and victim selection."""
+preemption lifecycle, victim selection, and arrival-stamp uniqueness."""
 import numpy as np
+import pytest
 
 from repro.serving.scheduler import (Request, RequestState, Scheduler)
 
@@ -81,6 +82,32 @@ def test_admit_with_duplicate_uids_and_gate_skip():
     newly = sch.admit(lambda req: req is not big)
     assert len(newly) == 1 and newly[0].request is not big
     assert sch.queue == [big]
+
+
+def test_arrival_stamps_are_unique_across_caller_and_auto():
+    """Regression: the engine keys ``_queued_at`` / ``_spilled`` /
+    ``request_logits`` by ``req.arrival``, so a caller-constructed
+    request with a non-negative arrival must never collide with an
+    auto-assigned stamp (previously ``submit`` skipped stamping any
+    ``arrival >= 0`` and the auto counter would reuse the same value,
+    silently cross-wiring spill state and queue-wait metrics)."""
+    sch = Scheduler(num_slots=4)
+    sch.submit(_req(0))                      # auto stamp 0
+    sch.submit(_req(1, arrival=3))           # caller-provided stamp
+    sch.submit(_req(2))                      # auto must SKIP past 3
+    sch.submit(_req(3))
+    stamps = sorted(r.arrival for r in sch.queue)
+    assert len(stamps) == len(set(stamps)), stamps
+    assert 3 in stamps
+    # a duplicate caller stamp is rejected loudly, not silently wired in
+    with pytest.raises(ValueError, match="duplicate arrival stamp"):
+        sch.submit(_req(4, arrival=3))
+    # preempted requests keep their stamp without re-registration
+    slot = sch.admit()[0]
+    kept = slot.request.arrival
+    sch.preempt(slot)
+    assert sch.queue[0].arrival == kept or \
+        any(r.arrival == kept for r in sch.queue)
 
 
 def test_lifecycle_states_and_retire():
