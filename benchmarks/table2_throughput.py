@@ -30,6 +30,12 @@ Three parts:
    prefix hit rate, COW faults, and throughput.  Identical prompts
    (100%) must skip every covered chunk for every request after the
    first; outputs are gated bit-identical to the cache-off run.
+7. **Device sweep** (tensor-parallel serving): the engine sharded over a
+   ``model``-axis mesh of 1 / 4 / 8 devices (KV-head-sharded pool planes
+   + per-shard fused attention launches; CPU host devices are FAKED via
+   ``--xla_force_host_platform_device_count`` in a subprocess, so the
+   numbers measure dispatch structure + collective overhead, not a real
+   multi-chip win).  Outputs are gated IDENTICAL across every mesh size.
 
 Results are also APPENDED to ``BENCH_table2.json`` at the repo root (one
 record per run, tagged with the git SHA) so the perf trajectory is
@@ -430,6 +436,86 @@ def prefix_sweep(shared_fracs=(0.0, 0.5, 1.0), arch="r1-llama-8b",
     return rows
 
 
+def mesh_sweep_inner(devices=(1, 4, 8), arch="r1-llama-8b", requests=3,
+                     slots=2, prompt_len=16, max_new=16, seed=0):
+    """Engine decode throughput at ``model``-axis mesh sizes (runs in a
+    process whose host device count covers max(devices); the smoke
+    config's head counts are overridden to 8 so every mesh divides the
+    KV-head axis).  Outputs are gated identical across mesh sizes — the
+    head-sharded engine must not change a single sampled token."""
+    from repro.config import ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import ThinKVEngine
+
+    mcfg = dataclasses.replace(get_smoke_config(arch), num_heads=8,
+                               num_kv_heads=8)
+    scfg = ServeConfig(model=mcfg, thinkv=_smoke_tk(), max_seqs=slots,
+                      temperature=0.0)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, mcfg.vocab_size, prompt_len)
+               for _ in range(requests)]
+    rows, params, outputs0 = [], None, None
+    for d in devices:
+        mesh = None
+        if d > 1:
+            mesh = jax.make_mesh((d,), ("model",))
+        eng = ThinKVEngine(scfg, params=params, backend="reference",
+                           mesh=mesh)
+        params = eng.params
+        # warm the jits outside the timed window
+        eng.submit([prompts[0].copy()], max_new_tokens=2)
+        eng.run()
+        base_tokens = eng.metrics["tokens"]
+        eng.submit([p.copy() for p in prompts], max_new_tokens=max_new)
+        t0 = time.perf_counter()
+        done = eng.run()
+        wall = time.perf_counter() - t0
+        outs = {r.uid: r.output for r in done}
+        if outputs0 is None:
+            outputs0 = outs
+        elif outs != outputs0:
+            raise SystemExit(
+                f"mesh-sweep regression: outputs at model={d} differ "
+                f"from the 1-device run (sharding changed the math)")
+        rows.append({
+            "devices": int(d),
+            "decode_tokens": eng.metrics["tokens"] - base_tokens,
+            "wall_s": wall,
+            "decode_tok_per_s": (eng.metrics["tokens"] - base_tokens)
+            / max(wall, 1e-9),
+            "pallas_launches_per_tick_per_shard": eng.tick_launch_count(),
+        })
+        print(f"  model={d}: {rows[-1]['decode_tok_per_s']:7.1f} tok/s | "
+              f"{rows[-1]['pallas_launches_per_tick_per_shard']} launch"
+              f"/tick/shard", flush=True)
+    return rows
+
+
+def mesh_sweep(devices=(1, 4, 8), smoke=False):
+    """Re-exec :func:`mesh_sweep_inner` in a subprocess with enough faked
+    host devices (XLA_FLAGS must be set before the first jax import, so
+    the parent process cannot run the sweep itself)."""
+    import sys
+    env = dict(os.environ)
+    flag = f"--xla_force_host_platform_device_count={max(devices)}"
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + flag).strip()
+    env.setdefault("PYTHONPATH", "src")
+    cmd = [sys.executable, os.path.abspath(__file__), "--mesh-sweep-inner",
+           ",".join(str(d) for d in devices)]
+    if smoke:
+        cmd.append("--smoke")
+    r = subprocess.run(cmd, env=env, capture_output=True, text=True,
+                       cwd=REPO_ROOT, timeout=3000)
+    for line in r.stdout.splitlines():
+        if line.startswith("MESH_SWEEP_JSON:"):
+            print("\n".join(l for l in r.stdout.splitlines()
+                            if l.startswith("  model=")))
+            return json.loads(line[len("MESH_SWEEP_JSON:"):])
+    raise SystemExit(
+        f"mesh sweep subprocess failed (rc={r.returncode}):\n"
+        f"{r.stdout[-3000:]}\n{r.stderr[-2000:]}")
+
+
 def _git_sha() -> str:
     try:
         return subprocess.check_output(
@@ -504,6 +590,8 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
                                      max_new=8)
     else:
         out["prefix"] = prefix_sweep()
+    print("  device sweep (tensor-parallel serving, model-axis mesh):")
+    out["mesh_sweep"] = mesh_sweep(devices=(1, 4, 8), smoke=smoke)
     if os.path.dirname(out_path):
         os.makedirs(os.path.dirname(out_path), exist_ok=True)
     with open(out_path, "w") as f:
@@ -522,6 +610,7 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
         "layer_sweep": out["layer_sweep"],
         "oversubscription": out["oversubscription"],
         "prefix": out["prefix"],
+        "mesh_sweep": out["mesh_sweep"],
     })
     print(f"  perf trajectory appended to {BENCH_LOG}")
     return out
@@ -536,9 +625,19 @@ if __name__ == "__main__":
     ap.add_argument("--layers", type=str, default=None,
                     help="comma-separated layer counts for the sweep, "
                          "e.g. 4,16,32")
+    ap.add_argument("--mesh-sweep-inner", type=str, default=None,
+                    help=argparse.SUPPRESS)   # subprocess entry (needs the
+    #                                           faked host device count)
     ap.add_argument("--out", default="benchmarks/results/"
                                      "table2_throughput.json")
     a = ap.parse_args()
+    if a.mesh_sweep_inner:
+        devs = tuple(int(x) for x in a.mesh_sweep_inner.split(","))
+        kw = dict(requests=2, slots=2, prompt_len=8, max_new=8) \
+            if a.smoke else {}
+        rows = mesh_sweep_inner(devices=devs, **kw)
+        print("MESH_SWEEP_JSON:" + json.dumps(rows))
+        raise SystemExit(0)
     main(a.out, smoke=a.smoke,
          layers=tuple(int(x) for x in a.layers.split(","))
          if a.layers else None)

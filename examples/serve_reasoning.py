@@ -7,6 +7,22 @@ DeepSeek-R1-Distill-Llama architecture (the paper's model family):
 requests stream through fixed slots, each slot's KV cache is
 thought-adaptively quantized (TBQ), segment-annealed (TBE), and paged with
 in-place slot reuse (CT).
+
+TENSOR-PARALLEL SERVING: the full launcher (``repro.launch.serve``)
+accepts ``--mesh model=N`` to shard the engine over a device mesh on the
+KV-head axis — pool planes, TBQ buffers, and the fused attention launch
+are partitioned per shard while block tables, refcounts, scheduler, and
+prefix cache stay replicated, so serving output is BIT-IDENTICAL to the
+single-device run.  On a CPU-only host, fake the devices first:
+
+    XLA_FLAGS=--xla_force_host_platform_device_count=8 \\
+    PYTHONPATH=src python -m repro.launch.serve \\
+        --requests 5 --slots 3 --temperature 0 \\
+        --heads 8 --kv-heads 8 --mesh model=8 --expect-mesh-parity
+
+(``--heads/--kv-heads 8`` make the smoke config head-shardable; real
+GQA serving configs need ``kv_heads % N == 0``.  ``--expect-mesh-parity``
+replays the trace unsharded and verifies bit-exact logits.)
 """
 import argparse
 import time

@@ -4,19 +4,25 @@
 # kernels) so kernel-path regressions — e.g. the decode tick dispatching
 # more than ONE fused pallas launch — fail CI rather than only pytest,
 # then the examples smoke gate (every example must run clean on tiny
-# configs so API drift fails CI instead of rotting), then two serving
+# configs so API drift fails CI instead of rotting), then three serving
 # gates: (1) the engine with the shared block pool at 25% of the dense
 # worst case must complete EVERY request (preemptions are expected and
-# fine; dropped tokens or a deadlock fail the gate), and (2) the same
+# fine; dropped tokens or a deadlock fail the gate), (2) the same
 # oversubscribed pool with --prefix-cache and fully shared prompts must
 # complete all requests with a NONZERO prefix hit count and a clean
 # refcount audit (claimed + free == pool_blocks, every reference
-# accounted — zero invariant violations).
+# accounted — zero invariant violations), and (3) the SHARDED serving
+# gate: the engine on an 8-device CPU mesh (KV-head-sharded pool planes
+# + per-shard fused attention launches) replays an oversubscribed
+# prefix-sharing trace and every request's per-step logits must be
+# BIT-IDENTICAL to an unsharded replay, with both audits clean.
+# The pytest run prints the 10 slowest tests (--durations=10) so the
+# growing suite's cost stays visible in every CI log.
 # Usage: scripts/ci.sh [extra pytest args]
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
-python -m pytest -x -q "$@"
+python -m pytest -x -q --durations=10 "$@"
 python benchmarks/table2_throughput.py --smoke
 echo "=== examples smoke gate ==="
 python examples/quickstart.py
@@ -31,3 +37,10 @@ python -m repro.launch.serve --requests 6 --slots 4 --prompt-len 16 \
     --max-new 32 --temperature 0 --pool-frac 0.25 \
     --prefix-cache --shared-prefix-frac 1.0 \
     --expect-all --expect-prefix-hits
+echo "=== sharded serving gate (8-device CPU mesh, bit-exact parity) ==="
+XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
+python -m repro.launch.serve --requests 5 --slots 3 --prompt-len 16 \
+    --max-new 24 --temperature 0 --pool-frac 0.4 \
+    --prefix-cache --shared-prefix-frac 1.0 \
+    --heads 8 --kv-heads 8 --mesh model=8 \
+    --expect-all --expect-prefix-hits --expect-mesh-parity

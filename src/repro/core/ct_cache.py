@@ -291,7 +291,8 @@ def commit_group(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 
 
 def commit_and_evict_if_full(cfg: ThinKVConfig, dims: CacheDims,
-                             cache: CTCache, view: PoolView
+                             cache: CTCache, view: PoolView,
+                             axis_name: str | None = None
                              ) -> Tuple[CTCache, PoolView]:
     """Commit the buffer as a group and enforce the per-layer budget when
     the buffer is full (paper Listing 1 checks `kv_size(l) > budget` in the
@@ -301,7 +302,7 @@ def commit_and_evict_if_full(cfg: ThinKVConfig, dims: CacheDims,
     def do_commit(args):
         c, v = args
         c, v = commit_group(cfg, dims, c, v)
-        return budget_evict(cfg, dims, c, v), v
+        return budget_evict(cfg, dims, c, v, axis_name=axis_name), v
 
     return jax.lax.cond(cache.buf_len >= dims.G, do_commit, lambda a: a,
                         (cache, view))
@@ -324,6 +325,38 @@ def append_token(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 
 
 # ---------------------------------------------------------------------------
+# head-axis sharding hooks (serving engine's shard_map tensor parallelism)
+# ---------------------------------------------------------------------------
+# Inside the engine's shard_map, every plane carries only this shard's KV
+# heads while all metadata is replicated.  Almost every CT op is head-local
+# (quantization groups run along head_dim inside one head; slot allocation
+# reads metadata only), so per-shard execution reproduces the single-device
+# metadata decisions exactly.  The TWO cross-head computations gather
+# explicitly — all_gather is pure data movement and integer psum is
+# order-free, so the sharded run stays BIT-IDENTICAL to 1-device:
+#   * TBE annealing clusters keys FLATTENED OVER HEADS (kmeans over
+#     [cap, H*D]) — the segment's local keys are gathered to full H first;
+#   * the COW dirty detector compares plane content — a slot dirty in any
+#     shard's heads must fault on every shard (mask OR-reduced by psum).
+
+
+def gather_heads(x: jax.Array, axis_name: str | None, axis: int
+                 ) -> jax.Array:
+    """All-gather the sharded head axis (no-op when ``axis_name`` is None —
+    the single-device path compiles collective-free)."""
+    if axis_name is None:
+        return x
+    return jax.lax.all_gather(x, axis_name, axis=axis, tiled=True)
+
+
+def _any_shard(mask: jax.Array, axis_name: str | None) -> jax.Array:
+    """Cross-shard OR of a boolean mask (deterministic: integer psum)."""
+    if axis_name is None:
+        return mask
+    return jax.lax.psum(mask.astype(jnp.int32), axis_name) > 0
+
+
+# ---------------------------------------------------------------------------
 # TBE: segment annealing + budget eviction (paper Sec. 4.3)
 # ---------------------------------------------------------------------------
 
@@ -340,10 +373,13 @@ def _segment_tokens(dims: CacheDims, slot_seg, slot_state, seg: jax.Array):
 
 def _anneal_one_segment(cfg: ThinKVConfig, dims: CacheDims, seg: jax.Array,
                         enable: jax.Array, k_codes, k_scales, slot_state,
-                        slot_seg, slot_bits, seg_level_row):
+                        slot_seg, slot_bits, seg_level_row,
+                        axis_name: str | None = None):
     """Anneal segment ``seg`` one retention level in ONE layer.  Returns
     updated (slot_state, seg_level_row).  ``k_codes``/``k_scales`` are the
-    layer's FLAT [NS, ...] planes."""
+    layer's FLAT [NS, ...] planes (this shard's heads when ``axis_name``
+    is set — the kmeans keys are gathered to the FULL head set so every
+    shard makes the same eviction decision as a single device would)."""
     idx, valid = _segment_tokens(dims, slot_seg, slot_state, seg)
     level = seg_level_row[seg]
     target = retention_at(level, cfg)
@@ -357,6 +393,7 @@ def _anneal_one_segment(cfg: ThinKVConfig, dims: CacheDims, seg: jax.Array,
     keys = Q.dequantize_by_bitcode(
         kc, ks.astype(jnp.float32),
         bits[:, None, None].astype(jnp.int32))            # [cap,H,D]
+    keys = gather_heads(keys, axis_name, axis=1)          # shard -> full H
     keys = keys.reshape(keys.shape[0], -1)
 
     keep_mask = kmeans_select(keys, valid, target,
@@ -384,7 +421,8 @@ def _free_empty_blocks(dims: CacheDims, slot_state, block_type):
 
 
 def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-                   view: PoolView, before_seg: jax.Array) -> CTCache:
+                   view: PoolView, before_seg: jax.Array,
+                   axis_name: str | None = None) -> CTCache:
     """Case 1: a transition segment ended — anneal every preceding segment
     (including previous transitions) one retention level, in every layer."""
     k_codes_f, _, k_scales_f, _ = view_flat(view)
@@ -396,7 +434,7 @@ def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
             enable = (seg < before_seg) & (cache.seg_type[seg] >= 0)
             slot_state, seg_level_row = _anneal_one_segment(
                 cfg, dims, seg, enable, k_codes, k_scales, slot_state,
-                slot_seg, slot_bits, seg_level_row)
+                slot_seg, slot_bits, seg_level_row, axis_name)
             return (slot_state, seg_level_row), None
 
         (slot_state, seg_level_row), _ = jax.lax.scan(
@@ -415,7 +453,8 @@ def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 
 
 def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-                 view: PoolView, max_rounds: int = 4) -> CTCache:
+                 view: PoolView, max_rounds: int = 4,
+                 axis_name: str | None = None) -> CTCache:
     """Case 2: cache above budget with no transition — anneal the oldest,
     least-important segment one level per round until within budget."""
     k_codes_f, _, k_scales_f, _ = view_flat(view)
@@ -443,7 +482,7 @@ def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
                 enable = jnp.any(shrinkable)
                 return _anneal_one_segment(
                     cfg, dims, seg, enable, k_codes, k_scales, slot_state,
-                    slot_seg, slot_bits, seg_level_row)
+                    slot_seg, slot_bits, seg_level_row, axis_name)
 
             return jax.lax.cond(over, do, lambda c: c,
                                 (slot_state, seg_level_row))
@@ -467,7 +506,8 @@ def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 # ---------------------------------------------------------------------------
 
 def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-            view: PoolView, sparsity: jax.Array) -> CTCache:
+            view: PoolView, sparsity: jax.Array,
+            axis_name: str | None = None) -> CTCache:
     """Every tau steps: classify the sparsity into a thought type, close the
     current segment, trigger TBE if the closing segment was a transition,
     then enforce the budget."""
@@ -477,7 +517,8 @@ def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 
     cache = jax.lax.cond(
         ended_type == jnp.int32(ThoughtType.TRANSITION),
-        lambda c: tbe_anneal_all(cfg, dims, c, view, before_seg=ended_seg),
+        lambda c: tbe_anneal_all(cfg, dims, c, view, before_seg=ended_seg,
+                                 axis_name=axis_name),
         lambda c: c, cache)
 
     nxt = jnp.minimum(ended_seg + 1, dims.S - 1)
@@ -487,7 +528,7 @@ def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
         prev_thought=cache.cur_thought,
         cur_thought=new_thought,
     )
-    return budget_evict(cfg, dims, cache, view)
+    return budget_evict(cfg, dims, cache, view, axis_name=axis_name)
 
 
 # ---------------------------------------------------------------------------
@@ -855,7 +896,8 @@ def check_pool_invariants(pool: GlobalPool, tables, extra_tables=()) -> dict:
 def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
                    table: jax.Array, cache: CTCache, sparsity: jax.Array,
                    active: jax.Array, n_new: jax.Array | int = 1,
-                   with_alloc_fail: bool = False, track_cow: bool = True):
+                   with_alloc_fail: bool = False, track_cow: bool = True,
+                   axis_name: str | None = None):
     """Engine-side ``advance_after_write`` against the shared global pool.
 
     ``n_new`` tokens were written into the buffer this call (1 per decode
@@ -896,12 +938,19 @@ def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
         def maintain(args):
             pool, table, cache, _, _ = args
             view0 = gather_view(pool.view, table)
-            cache, view = commit_and_evict_if_full(cfg, dims, cache, view0)
+            cache, view = commit_and_evict_if_full(cfg, dims, cache, view0,
+                                                   axis_name=axis_name)
             cache = jax.lax.cond(
                 at_refresh,
-                lambda c: refresh(cfg, dims, c, view, sparsity),
+                lambda c: refresh(cfg, dims, c, view, sparsity,
+                                  axis_name=axis_name),
                 lambda c: c, cache)
-            dirty = changed_slots(view0, view) if track_cow else None
+            if track_cow:
+                # a slot dirty in ANY shard's heads must COW on EVERY
+                # shard (the table/refcount updates are replicated)
+                dirty = _any_shard(changed_slots(view0, view), axis_name)
+            else:
+                dirty = None
             pool, table, cache, failed, cow = sync_block_tables(
                 dims, pool, table, cache, view, dirty_slots=dirty)
             return (pool, table, cache, jnp.any(failed),

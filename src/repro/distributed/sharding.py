@@ -200,6 +200,61 @@ def to_shardings(specs, mesh: Mesh):
 
 
 # ---------------------------------------------------------------------------
+# serving-engine specs: tensor-parallel sharding of the ThinKV global pool
+# ---------------------------------------------------------------------------
+# The serving engine shards on the KV-HEAD axis of the paged planes
+# ([L, NP, BS, H, ...] — axis 3) via shard_map: attention is embarrassingly
+# parallel over heads, so per-shard math is bit-identical to a slice of the
+# single-device run and only the attention OUTPUT rejoins the replicated
+# residual stream (all-gather, pure data movement).  Everything head-
+# agnostic — block tables, refcounts, slot/segment metadata, scheduler and
+# prefix-cache state — stays REPLICATED, which keeps every admission/
+# preemption/COW decision a replicated computation and the pool accounting
+# shard-consistent by construction.  (This deliberately differs from
+# ``decode_batch_specs``' sequence sharding of the FullKV path: the CT
+# pool's slot axis is addressed by data-dependent scatters at every commit,
+# while GQA serving configs keep kv_heads % |model| == 0.)
+
+SERVE_HEAD_AXIS = "model"          # mesh axis the KV-head dim shards over
+_PLANE_HEAD_DIM = 3                # [L, NP, BS, H, ...]
+_BUF_HEAD_DIM = 2                  # per-request TBQ buffer [L, G, H, D]
+
+
+def serve_plane_spec() -> P:
+    """Pool / per-request paged planes ``[L, nb, BS, H, ...]``."""
+    return P(None, None, None, SERVE_HEAD_AXIS)
+
+
+def serve_buf_spec(batched: bool) -> P:
+    """TBQ buffer spec: ``[L, G, H, D]`` (or ``[R, L, G, H, D]``)."""
+    head = _BUF_HEAD_DIM + (1 if batched else 0)
+    return P(*([None] * head), SERVE_HEAD_AXIS)
+
+
+def serve_pool_specs(pool):
+    """GlobalPool pytree of PartitionSpec: planes head-sharded, refcount
+    replicated."""
+    return type(pool)(
+        view=type(pool.view)(*(serve_plane_spec() for _ in pool.view)),
+        refcount=P())
+
+
+def serve_cache_specs(cache, batched: bool):
+    """CTCache pytree of PartitionSpec: TBQ buffer planes head-sharded,
+    all metadata replicated.  ``batched`` selects the engine's stacked
+    ``[R, ...]`` layout vs a single request's."""
+    spec = {f: P() for f in cache.FIELDS}
+    spec["buf_k"] = spec["buf_v"] = serve_buf_spec(batched)
+    return type(cache)(**spec)
+
+
+def head_shardable(num_kv_heads: int, mesh: Mesh) -> bool:
+    """Can the serving engine shard ``num_kv_heads`` over mesh['model']?"""
+    n = _axis_sizes(mesh).get(SERVE_HEAD_AXIS, 1)
+    return num_kv_heads % n == 0 and num_kv_heads >= n
+
+
+# ---------------------------------------------------------------------------
 # in-graph sharding constraints (GSPMD guidance)
 # ---------------------------------------------------------------------------
 # GSPMD occasionally replicates large activations rather than keep the batch

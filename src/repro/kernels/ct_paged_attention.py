@@ -42,6 +42,17 @@ wrapper remains for the single-sequence controller.  The query-group axis
 prefill (every chunk token attends the same frozen pool, so chunk queries
 fold into the q-group axis).
 
+PER-SHARD LAUNCHES (tensor-parallel serving): no grid step ever reads
+across the ``H`` axis — each ``(l, r, h, b)`` cell touches exactly one
+head's tile of every operand — so the serving engine's ``shard_map``
+simply calls these entry points with the head axes of queries, planes,
+and buffers sliced to the shard's ``H / num_shards`` local heads (see
+``kernels.ops.local_heads``).  The per-shard launch computes the exact
+corresponding slice of the full launch, the grid shrinks to
+``(L, R, H/n, NB + 1)``, and the fused tick stays ONE launch per shard.
+The head count is a plain grid extent with no tiling constraint, so any
+``H % num_shards == 0`` split compiles unchanged.
+
 Tiling: a KV block is (block_size=16, head_dim=128) per head — exactly one
 TPU (16,128) tile; codes are uint8 lanes, scales one bf16 (16,8) tile.
 

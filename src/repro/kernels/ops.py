@@ -90,6 +90,32 @@ def paged_decode_attention_fused(qh, k_codes, v_codes, k_scales, v_scales,
         block_table, buf_k, buf_v, buf_len, group=group)
 
 
+# ---------------------------------------------------------------------------
+# per-shard launch plumbing (tensor-parallel serving over the KV-head axis)
+# ---------------------------------------------------------------------------
+# Inside the engine's ``shard_map``, each device launches the SAME fused
+# kernel over its contiguous slice of KV heads: the grid axes are
+# (layer, request, head, block), and no kernel step reads across heads, so
+# a per-shard launch over H/n heads computes exactly the corresponding
+# slice of the single-device launch.  This slice (going in) plus
+# ``core.ct_cache.gather_heads`` (attention outputs coming back out) are
+# the only sharding the kernel entry points ever see — pure data
+# movement; the per-head math is untouched, keeping sharded runs
+# bit-identical.
+
+
+def local_heads(x: jax.Array, axis: int, axis_name: str,
+                num_shards: int) -> jax.Array:
+    """This shard's contiguous head range along ``axis`` (call only inside
+    ``shard_map``; the head dim must divide by ``num_shards``).  Works for
+    both KV-head axes and query-head axes — queries are laid out kv-head-
+    major (``Hq = H * gq``), so a contiguous Hq/n slice is exactly the
+    queries of the shard's kv heads."""
+    size = x.shape[axis] // num_shards
+    i = jax.lax.axis_index(axis_name)
+    return jax.lax.dynamic_slice_in_dim(x, i * size, size, axis)
+
+
 def _subjaxprs(params):
     """Yield every sub-jaxpr stored in an eqn's params."""
     from jax import core as jcore

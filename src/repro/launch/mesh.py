@@ -30,3 +30,42 @@ def mesh_config(*, multi_pod: bool = False) -> MeshConfig:
 def make_mesh(cfg: MeshConfig):
     """Mesh for an arbitrary MeshConfig (tests use small CPU meshes)."""
     return jax.make_mesh(cfg.shape, cfg.axis_names)
+
+
+def parse_mesh_spec(spec: str) -> MeshConfig:
+    """``--mesh`` string -> MeshConfig: comma-separated ``axis=N`` pairs,
+    e.g. ``model=8`` or ``data=2,model=4`` (axis order is spec order).
+    """
+    shape, names = [], []
+    for part in spec.split(","):
+        name, _, n = part.partition("=")
+        name, n = name.strip(), n.strip()
+        if not name or not n.isdigit() or int(n) < 1:
+            raise ValueError(
+                f"bad --mesh entry {part!r}: expected axis=N with N >= 1 "
+                f"(e.g. --mesh model=8)")
+        names.append(name)
+        shape.append(int(n))
+    return MeshConfig(shape=tuple(shape), axis_names=tuple(names))
+
+
+def make_serve_mesh(spec: str):
+    """Serving mesh from a ``--mesh`` spec (``model=N`` shards the engine's
+    KV-head axis N ways).  Total size must not exceed the visible devices —
+    on CPU, set ``XLA_FLAGS=--xla_force_host_platform_device_count=N``
+    before the first jax import to fake an N-device host."""
+    cfg = parse_mesh_spec(spec)
+    if "model" not in cfg.axis_names:
+        raise ValueError(
+            f"--mesh {spec} has no 'model' axis — serving shards the "
+            f"KV-head dim over mesh['model'] (e.g. --mesh model=8)")
+    need = 1
+    for n in cfg.shape:
+        need *= n
+    have = jax.device_count()
+    if need > have:
+        raise ValueError(
+            f"--mesh {spec} needs {need} devices but only {have} are "
+            f"visible (on CPU, export XLA_FLAGS="
+            f"--xla_force_host_platform_device_count={need})")
+    return make_mesh(cfg)

@@ -22,10 +22,21 @@ prompts — the shared-system-prompt fleet shape).  ``--expect-prefix-hits``
 gates on at least one hit, > 0 prefill tokens skipped, and a clean
 refcount audit (``claimed + free == pool_blocks``, every reference
 accounted).
+
+Tensor-parallel knobs: ``--mesh model=N`` shards the engine's pool
+planes, TBQ buffers, and attention over N devices on the KV-head axis
+(``kv_heads % N == 0`` — use ``--heads/--kv-heads`` to override the
+smoke config; on CPU export
+``XLA_FLAGS=--xla_force_host_platform_device_count=N`` first).
+``--expect-mesh-parity`` turns the run into the sharded-serving CI gate:
+a second, UNSHARDED engine replays the identical trace and every
+request's per-step logits must be BIT-IDENTICAL across the two
+topologies, with both pool audits clean.
 """
 from __future__ import annotations
 
 import argparse
+import dataclasses
 
 import numpy as np
 
@@ -82,9 +93,33 @@ def main():
                     help="CI gate: fail unless the run scored >= 1 prefix "
                          "hit with > 0 prefill tokens skipped and a clean "
                          "pool refcount audit")
+    ap.add_argument("--mesh", type=str, default=None,
+                    help="device mesh spec for tensor-parallel serving, "
+                         "e.g. model=8 (shards pool planes + attention "
+                         "over the KV-head axis; kv_heads %% N == 0)")
+    ap.add_argument("--heads", type=int, default=None,
+                    help="override the arch's query-head count (e.g. to "
+                         "make a smoke config head-shardable)")
+    ap.add_argument("--kv-heads", type=int, default=None,
+                    help="override the arch's KV-head count")
+    ap.add_argument("--expect-mesh-parity", action="store_true",
+                    help="CI gate (needs --mesh): replay the identical "
+                         "trace on an UNSHARDED engine and fail unless "
+                         "every request's logits are bit-identical and "
+                         "both pool audits are clean")
     args = ap.parse_args()
+    if args.expect_mesh_parity and not args.mesh:
+        ap.error("--expect-mesh-parity requires --mesh")
 
     mcfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
+    if args.heads is not None:
+        mcfg = dataclasses.replace(mcfg, num_heads=args.heads)
+    if args.kv_heads is not None:
+        mcfg = dataclasses.replace(mcfg, num_kv_heads=args.kv_heads)
+    if mcfg.num_heads % mcfg.num_kv_heads != 0:
+        ap.error(f"--heads/--kv-heads must keep num_heads divisible by "
+                 f"num_kv_heads (got {mcfg.num_heads} / "
+                 f"{mcfg.num_kv_heads})")
     tk = ThinKVConfig(refresh_interval=args.tau, group_size=args.group,
                       block_size=args.group, token_budget=args.budget,
                       retention_schedule=(32, 16, 8, 4), min_retention=4,
@@ -97,8 +132,13 @@ def main():
     pool_blocks = args.pool_blocks
     if args.pool_frac is not None:
         pool_blocks = max(int(worst_case * args.pool_frac), 1)
+    mesh = None
+    if args.mesh:
+        from repro.launch.mesh import make_serve_mesh
+        mesh = make_serve_mesh(args.mesh)
     eng = ThinKVEngine(cfg, backend=args.backend, pool_blocks=pool_blocks,
-                       prefix_cache=args.prefix_cache)
+                       prefix_cache=args.prefix_cache, mesh=mesh,
+                       record_logits=args.expect_mesh_parity)
     rng = np.random.default_rng(0)
     shared_len = int(round(args.prompt_len * args.shared_prefix_frac))
     shared = rng.integers(0, mcfg.vocab_size, shared_len)
@@ -167,6 +207,54 @@ def main():
         print(f"prefix gate OK: {eng.metrics['prefix_hits']} hit(s), "
               f"{eng.metrics['prefix_tokens_skipped']} prefill tokens "
               f"skipped")
+    if args.mesh:
+        import jax
+        print(f"mesh: {args.mesh} over {jax.device_count()} devices | "
+              f"kv heads sharded {eng._nshard}-way | single fused launch "
+              f"per tick per shard")
+    if args.expect_mesh_parity:
+        ref = ThinKVEngine(cfg, params=eng.params, backend=args.backend,
+                           pool_blocks=pool_blocks,
+                           prefix_cache=args.prefix_cache,
+                           record_logits=True)
+        ref.submit([p.copy() for p in prompts],
+                   max_new_tokens=args.max_new, priorities=priorities)
+        ref_done = ref.run()
+        # compare the FULL request sets symmetrically: a request the
+        # sharded run dropped (or never started) must fail the gate, not
+        # silently fall out of a zip/keys iteration
+        mismatch = []
+        if len(done) != len(ref_done):
+            mismatch.append(f"completed {len(done)} vs {len(ref_done)}")
+        if set(eng.request_logits) != set(ref.request_logits):
+            mismatch.append("recorded-request sets differ")
+        mismatch += [
+            r.uid for r, s in zip(done, ref_done)
+            if r.uid != s.uid or r.output != s.output]
+        logit_steps = 0
+        bad_steps = 0
+        for key in set(eng.request_logits) & set(ref.request_logits):
+            seq, ref_seq = eng.request_logits[key], ref.request_logits[key]
+            if len(seq) != len(ref_seq):
+                mismatch.append(f"arrival{key}:steps")
+                continue
+            for a, b in zip(seq, ref_seq):
+                logit_steps += 1
+                if a.shape != b.shape or not (a == b).all():
+                    bad_steps += 1
+        try:
+            audit_m = eng.audit_pool()
+            audit_s = ref.audit_pool()
+        except AssertionError as e:
+            raise SystemExit(f"mesh-parity gate FAILED: pool audit: {e}")
+        if mismatch or bad_steps or audit_m != audit_s:
+            raise SystemExit(
+                f"mesh-parity gate FAILED: output mismatches {mismatch}, "
+                f"{bad_steps}/{logit_steps} non-bit-identical logit "
+                f"steps, audits {audit_m} vs {audit_s}")
+        print(f"mesh-parity gate OK: {len(done)} requests, {logit_steps} "
+              f"logit steps bit-identical between --mesh {args.mesh} and "
+              f"the unsharded engine; both audits clean")
 
 
 if __name__ == "__main__":

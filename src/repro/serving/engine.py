@@ -135,6 +135,39 @@ end of the prompt).  The sharing/eviction/preemption interplay:
     references and folds them into the private spill mapping; resume
     then scatters the already-spilled planes (still bit-exact — the
     spill snapshots every mapped block) and decay can free the blocks.
+
+TENSOR-PARALLEL SHARDING (``mesh=``).  Given a device mesh with a
+``model`` axis (``launch.mesh.make_serve_mesh("model=N")``), the engine
+shards its HEAVY state over the KV-HEAD axis: pool K/V planes
+(``[L, NP, BS, H, ...]``), TBQ buffers (``[R, L, G, H, D]``), and the
+per-layer attention — each shard launches the SAME fused
+``ct_paged_attention_fused`` kernel over its H/N local heads (still one
+launch per tick per shard).  Everything head-AGNOSTIC stays REPLICATED:
+weights, block tables, refcounts, slot/segment metadata, the scheduler,
+the prefix cache, and all host-side pool accounting — so the admission/
+preemption/COW logic above runs unchanged.  The tick/prefill dataflows
+are wrapped in ``shard_map``:
+
+  * trunk + MLP + residual/unembed run replicated (identical on every
+    shard); queries/KV are SLICED to the shard's contiguous kv-head
+    range before the buffer write and the attention launch, and only the
+    attention OUTPUT is all-gathered back into the replicated stream;
+  * the two cross-head computations inside cache maintenance gather
+    explicitly (see ``core.ct_cache``): TBE's kmeans keys (flattened
+    over ALL heads) and the COW dirty mask (OR across shards);
+  * per-head attention math, quantization groups (within one head's
+    head_dim), and slot allocation are head-local or metadata-only, so
+    every shard makes byte-identical metadata/refcount decisions.
+
+Because no FLOATING-POINT reduction ever crosses shards (gathers are
+data movement; the dirty-mask reduction is an integer psum), the sharded
+engine is BIT-IDENTICAL to the 1-device run on both backends — asserted
+end to end by ``tests/test_serving_traces.py``.  Spill/resume under
+sharding: ``PreemptedState`` GATHERS the shards to host numpy
+(``np.asarray`` of the head-sharded planes) and resume scatters the
+planes back through the freshly claimed table with the head axis
+re-partitioned — preemption survives mesh-size changes (a trace spilled
+on one topology could in principle resume on another).
 """
 from __future__ import annotations
 
@@ -189,13 +222,20 @@ def _joint_attend(q, k_pool, v_pool, valid_pool, buf_k, buf_v, buf_mask):
     return out.astype(q.dtype), p, valid
 
 
-def _probs_sparsity(p_t, valid_t):
-    """Paper App. C.2 sparsity from one query's probs [H, gq, N]."""
+def _probs_sparsity(p_t, valid_t, axis_name=None):
+    """Paper App. C.2 sparsity from one query's probs [H, gq, N].
+
+    Per-head sparsities are head-local; the final mean runs over ALL
+    heads — under head sharding (``axis_name`` set) the per-head values
+    are all-gathered first so the sharded mean is bit-identical to the
+    single-device one (a psum would re-order the float reduction)."""
     pooled = jnp.max(p_t, axis=1)
     pooled = jnp.where(valid_t[None, :], pooled, 0.0)
     pooled = pooled / jnp.maximum(jnp.sum(pooled, -1, keepdims=True), 1e-30)
-    return jnp.mean(row_sparsity(
-        pooled, jnp.broadcast_to(valid_t[None, :], pooled.shape)))
+    per_head = row_sparsity(
+        pooled, jnp.broadcast_to(valid_t[None, :], pooled.shape))   # [H]
+    per_head = CC.gather_heads(per_head, axis_name, axis=0)
+    return jnp.mean(per_head)
 
 
 @dataclasses.dataclass
@@ -237,7 +277,8 @@ class ThinKVEngine:
                  record_logits: bool = False,
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = False,
-                 prefix_cache_capacity: int = 64):
+                 prefix_cache_capacity: int = 64,
+                 mesh=None):
         assert cfg.model.family in (ArchFamily.DENSE, ArchFamily.MOE,
                                     ArchFamily.VLM), \
             "engine demo covers decoder-only backbones (the paper's scope)"
@@ -259,6 +300,20 @@ class ThinKVEngine:
             else self.model.init_params(cfg.seed)
         self.dims = CC.make_dims(self.tk, cfg.model.num_layers,
                                  cfg.model.num_kv_heads, cfg.model.head_dim)
+        # --- tensor-parallel sharding over the KV-head axis (see module
+        # docstring): pool planes / TBQ buffers / attention sharded over
+        # mesh["model"], everything head-agnostic replicated ---
+        self.mesh = mesh
+        if mesh is not None:
+            from repro.distributed import sharding as SH
+            n = SH._axis_sizes(mesh).get(SH.SERVE_HEAD_AXIS, 1)
+            assert SH.head_shardable(self.dims.H, mesh), \
+                (f"mesh['{SH.SERVE_HEAD_AXIS}']={n} cannot shard "
+                 f"{self.dims.H} kv heads (head sharding needs "
+                 f"kv_heads % mesh size == 0)")
+            self._nshard, self._axis = n, SH.SERVE_HEAD_AXIS
+        else:
+            self._nshard, self._axis = 1, None
         n_lstar = min(self.tk.num_calib_layers, cfg.model.num_layers)
         self.lstar = tuple(int(x) for x in (
             lstar if lstar is not None else range(n_lstar)))
@@ -271,6 +326,11 @@ class ThinKVEngine:
             (cfg.max_seqs, self.dims.L, self.dims.NB)).copy()
         self.caches = jax.vmap(lambda _: CC.init_cache(self.dims))(
             jnp.arange(cfg.max_seqs))
+        if self.mesh is not None:
+            from jax.sharding import NamedSharding, PartitionSpec
+            self.params = jax.device_put(
+                self.params, NamedSharding(self.mesh, PartitionSpec()))
+            self._place_state()
         if prefill_chunk is None:
             # default: 128-token large chunks when they can align with
             # group commits; a g that does not divide 128 disables the
@@ -323,6 +383,69 @@ class ThinKVEngine:
         self._cc = -(-self.dims.G // self.dims.BS)
 
     # ------------------------------------------------------------------
+    # tensor-parallel plumbing (no-ops when mesh is None)
+    # ------------------------------------------------------------------
+
+    def _place_state(self) -> None:
+        """(Re)partition the device state onto the mesh: pool planes +
+        TBQ buffers sharded on the KV-head axis, everything else
+        replicated.  Called at init and after a resume scatters spilled
+        numpy planes back into ``self.pool``.  (A prefix-cache hit also
+        rebuilds table/cache from host numpy, but only into LOCALS that
+        immediately flow through the shard_map'd prefill, whose in_specs
+        re-partition them — ``self`` state is untouched until the chunk
+        returns properly sharded outputs.)"""
+        if self.mesh is None:
+            return
+        from jax.sharding import NamedSharding, PartitionSpec
+        from repro.distributed import sharding as SH
+        self.pool = jax.device_put(
+            self.pool,
+            SH.to_shardings(SH.serve_pool_specs(self.pool), self.mesh))
+        self.caches = jax.device_put(
+            self.caches,
+            SH.to_shardings(SH.serve_cache_specs(self.caches, batched=True),
+                            self.mesh))
+        self.tables = jax.device_put(
+            self.tables, NamedSharding(self.mesh, PartitionSpec()))
+
+    def _local_heads(self, x, axis: int):
+        """This shard's contiguous slice of a head axis (kv heads, or
+        query heads — kv-head-major, so the slice is the shard's kv
+        groups).  Identity off-mesh."""
+        if self._axis is None:
+            return x
+        return K.local_heads(x, axis, self._axis, self._nshard)
+
+    def _gather_heads(self, x, axis: int):
+        """All-gather a per-shard head slice back to the full head axis
+        (the only way shard-local attention rejoins the replicated
+        residual stream).  Identity off-mesh."""
+        return CC.gather_heads(x, self._axis, axis=axis)
+
+    def _spmd_specs(self, single_request: bool):
+        """(pool_spec, cache_spec, replicated) PartitionSpec pytrees for
+        wrapping a tick/prefill dataflow in shard_map."""
+        from jax.sharding import PartitionSpec as P
+        from repro.distributed import sharding as SH
+        return (SH.serve_pool_specs(self.pool),
+                SH.serve_cache_specs(self.caches,
+                                     batched=not single_request),
+                P())
+
+    def _wrap_spmd(self, fn, in_specs, out_specs):
+        """shard_map a tick/prefill dataflow over the mesh (identity
+        off-mesh).  ``check_rep=False``: replicated outputs are computed
+        identically on every shard by construction (replicated inputs +
+        deterministic ops + explicit gathers), which the static
+        replication checker cannot see through collectives."""
+        if self.mesh is None:
+            return fn
+        from jax.experimental.shard_map import shard_map
+        return shard_map(fn, mesh=self.mesh, in_specs=in_specs,
+                         out_specs=out_specs, check_rep=False)
+
+    # ------------------------------------------------------------------
     # attention helpers shared by tick + prefill
     # ------------------------------------------------------------------
 
@@ -352,6 +475,9 @@ class ThinKVEngine:
         backend = self.backend
         R = self.cfg.max_seqs
         gq = cfg.num_heads // dims.H
+        ax = self._axis                      # None off-mesh
+        H_loc = dims.H // self._nshard       # kv heads per shard
+        Hq_loc = cfg.num_heads // self._nshard
 
         def tick(params, pool, tables, caches, tokens, active, rng):
             h = jax.vmap(lambda t: E.embed(params["embed"], t[None],
@@ -375,8 +501,11 @@ class ThinKVEngine:
                     row = jax.lax.dynamic_update_index_in_dim(
                         b_r[lidx], val_r.astype(b_r.dtype), bl, 0)
                     return b_r.at[lidx].set(row)
-                buf_k = jax.vmap(upd)(buf_k, k, buf_len)
-                buf_v = jax.vmap(upd)(buf_v, v, buf_len)
+                # buffers are head-sharded: write this shard's kv heads
+                buf_k = jax.vmap(upd)(buf_k, self._local_heads(k, 1),
+                                      buf_len)
+                buf_v = jax.vmap(upd)(buf_v, self._local_heads(v, 1),
+                                      buf_len)
                 x2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
                 if cfg.moe is not None:
                     m, _ = moe_apply(lp["moe"], x2[:, None], cfg)
@@ -390,18 +519,23 @@ class ThinKVEngine:
                 (jnp.arange(cfg.num_layers), params["layers"]))
             caches = caches.replace(buf_k=buf_k, buf_v=buf_v)
             n_buf = buf_len + 1                                  # [R]
+            # queries of this shard's kv heads ([L, R, Hq/N, hd]; the Hq
+            # axis is kv-head-major, so the slice is contiguous)
+            qs_loc = self._local_heads(qs, 2)
 
             def dense_one_layer(kc_l, vc_l, ks_l, vs_l, q_l, st_l, bt_l,
                                 tb_l, bk_l, bv_l):
                 """Dense-dequant attention + probs, one layer's planes,
                 every slot — shared by the reference attention scan and
-                the kernel backend's sparsity probe."""
+                the kernel backend's sparsity probe.  Runs on this
+                shard's heads; sparsity means over ALL heads (gather
+                inside :func:`_probs_sparsity`)."""
                 def one(q_r, st_r, bt_r, tb_r, bk_r, bv_r, nb_r):
                     bm = (jnp.arange(dims.G) < nb_r)[None]       # [1, G]
                     o, p, valid = self._dense_layer(
                         q_r[None], kc_l, vc_l, ks_l, vs_l, st_r, bt_r,
                         tb_r, bk_r, bv_r, bm)
-                    return o[0], _probs_sparsity(p[0], valid[0])
+                    return o[0], _probs_sparsity(p[0], valid[0], ax)
                 return jax.vmap(one)(q_l, st_l, bt_l, tb_l, bk_l, bv_l,
                                      n_buf)
 
@@ -410,13 +544,14 @@ class ThinKVEngine:
                 return dense_one_layer(
                     pool.view.k_codes[l], pool.view.v_codes[l],
                     pool.view.k_scales[l], pool.view.v_scales[l],
-                    qs[l], caches.slot_state[:, l], caches.slot_bits[:, l],
+                    qs_loc[l], caches.slot_state[:, l],
+                    caches.slot_bits[:, l],
                     tables[:, l], buf_k[:, l], buf_v[:, l])
 
             # ---- pass 2: attention, ONCE, over the stacked queries ----
             if backend == "kernel":
-                qh = qs.reshape(cfg.num_layers, R, dims.H, gq,
-                                cfg.head_dim).astype(jnp.float32)
+                qh = qs_loc.reshape(cfg.num_layers, R, H_loc, gq,
+                                    cfg.head_dim).astype(jnp.float32)
                 o_all = K.paged_decode_attention_fused(
                     qh, pool.view.k_codes, pool.view.v_codes,
                     pool.view.k_scales, pool.view.v_scales,
@@ -424,7 +559,7 @@ class ThinKVEngine:
                     CC.stacked_slot_plane(dims, caches.slot_bits),
                     tables, CC.stacked_buffers(buf_k),
                     CC.stacked_buffers(buf_v), n_buf, force=self._force)
-                o_all = o_all.reshape(cfg.num_layers, R, cfg.num_heads,
+                o_all = o_all.reshape(cfg.num_layers, R, Hq_loc,
                                       cfg.head_dim).astype(qs.dtype)
                 # sparsity is only CONSUMED at tau refresh boundaries — run
                 # the dense probs pass for the calibrated layers only on
@@ -445,13 +580,18 @@ class ThinKVEngine:
 
                 _, (o_all, spars_all) = jax.lax.scan(
                     attend, 0,
-                    (qs, pool.view.k_codes, pool.view.v_codes,
+                    (qs_loc, pool.view.k_codes, pool.view.v_codes,
                      pool.view.k_scales, pool.view.v_scales,
                      jnp.swapaxes(caches.slot_state, 0, 1),
                      jnp.swapaxes(caches.slot_bits, 0, 1),
                      jnp.swapaxes(tables, 0, 1),
                      CC.stacked_buffers(buf_k), CC.stacked_buffers(buf_v)))
                 sparsity = jnp.mean(spars_all[lstar_arr], axis=0)  # [R]
+
+            # shard-local attention rejoins the replicated stream here:
+            # all-gather the head axis, then the output projection +
+            # residual run replicated (bit-identical to 1-device)
+            o_all = self._gather_heads(o_all, 2)
 
             # ---- pass 3: attention output residuals ----
             def residual(hc, inp):
@@ -468,7 +608,8 @@ class ThinKVEngine:
                 cache_r, table_r, spars_r, active_r = xs
                 pool, table_r, cache_r, fail_r, cow_r = CC.engine_advance(
                     tk, dims, pool, table_r, cache_r, spars_r, active_r,
-                    with_alloc_fail=True, track_cow=self._track_cow)
+                    with_alloc_fail=True, track_cow=self._track_cow,
+                    axis_name=ax)
                 return pool, (table_r, cache_r, fail_r, cow_r)
 
             pool, (tables_out, caches, alloc_fail, cow_faults) = \
@@ -486,7 +627,11 @@ class ThinKVEngine:
             return (nxt.astype(jnp.int32), pool, tables_out, caches,
                     sparsity, logits, alloc_fail, cow_faults)
 
-        return tick
+        pool_s, cache_s, rep = self._spmd_specs(single_request=False)
+        return self._wrap_spmd(
+            tick,
+            in_specs=(rep, pool_s, rep, cache_s, rep, rep, rep),
+            out_specs=(rep, pool_s, rep, cache_s, rep, rep, rep, rep))
 
     # ------------------------------------------------------------------
     def _make_prefill_chunk(self):
@@ -494,6 +639,7 @@ class ThinKVEngine:
         lstar = jnp.asarray(self.lstar)
         backend = self.backend
         C = dims.G                      # chunk == quantization group
+        ax = self._axis
 
         def chunk_step(params, pool, table, cache, tokens_c, n_valid):
             """Process up to C prompt tokens of ONE slot in a single
@@ -518,6 +664,11 @@ class ThinKVEngine:
                                k, 0.0).astype(buf_k.dtype)
                 vm = jnp.where(tok_valid[:, None, None],
                                v, 0.0).astype(buf_v.dtype)
+                # buffers/planes are head-sharded: this shard sees only
+                # its kv heads (and their kv-head-major query groups)
+                km = self._local_heads(km, 1)
+                vm = self._local_heads(vm, 1)
+                q = self._local_heads(q, 1)
                 buf_k = buf_k.at[lidx].set(km)
                 buf_v = buf_v.at[lidx].set(vm)
 
@@ -535,7 +686,7 @@ class ThinKVEngine:
                         q, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
                         table_l, km, vm, buf_mask)
                     last = jnp.clip(n_valid - 1, 0, C - 1)
-                    return o, _probs_sparsity(p[last], valid[last])
+                    return o, _probs_sparsity(p[last], valid[last], ax)
 
                 if backend == "kernel":
                     o = self._chunk_kernel(q, kc_l, vc_l, ks_l, vs_l,
@@ -549,7 +700,7 @@ class ThinKVEngine:
                 else:
                     o, spars = dense()
 
-                h = h + A.out_proj(lp["attn"], o)
+                h = h + A.out_proj(lp["attn"], self._gather_heads(o, 1))
                 x2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
                 if cfg.moe is not None:
                     m, _ = moe_apply(lp["moe"], x2[None], cfg)
@@ -569,7 +720,7 @@ class ThinKVEngine:
             pool, table, cache, fail, n_cow = CC.engine_advance(
                 tk, dims, pool, table, cache, sparsity,
                 jnp.bool_(True), n_new=n_valid, with_alloc_fail=True,
-                track_cow=self._track_cow)
+                track_cow=self._track_cow, axis_name=ax)
 
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
             last = jnp.clip(n_valid - 1, 0, C - 1)
@@ -577,7 +728,11 @@ class ThinKVEngine:
                              cfg.logit_softcap)
             return pool, table, cache, logits, fail, n_cow
 
-        return chunk_step
+        pool_s, cache_s, rep = self._spmd_specs(single_request=True)
+        return self._wrap_spmd(
+            chunk_step,
+            in_specs=(rep, pool_s, rep, cache_s, rep, rep),
+            out_specs=(pool_s, rep, cache_s, rep, rep, rep))
 
     def _chunk_kernel(self, q, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
                       table_l, k_chunk, v_chunk, tok_valid):
@@ -593,7 +748,7 @@ class ThinKVEngine:
         """
         dims = self.dims
         c, hq, hd = q.shape
-        h = dims.H
+        h = k_chunk.shape[1]        # kv heads VISIBLE here (H/N on-mesh)
         gq = hq // h
         # [C, Hq, hd] -> [1, H, C*gq, hd]
         qh = q.reshape(c, h, gq, hd).transpose(1, 0, 2, 3) \
@@ -628,6 +783,7 @@ class ThinKVEngine:
         lstar_arr = jnp.asarray(self.lstar)
         backend = self.backend
         C = self.prefill_chunk
+        ax = self._axis
 
         def big_step(params, pool, table, cache, tokens_c):
             start = cache.num_tokens
@@ -651,25 +807,30 @@ class ThinKVEngine:
                 bits_l = cache.slot_bits[lidx]
                 table_l = table[lidx]                            # [NB]
                 is_calib = jnp.any(lidx == lstar_arr)
+                # attention runs on this shard's heads; k/v stay FULL in
+                # the scan output (the group commits slice them locally)
+                q_loc = self._local_heads(q, 1)
+                k_loc = self._local_heads(k, 1)
+                v_loc = self._local_heads(v, 1)
 
                 def dense():
                     bm = jnp.arange(C)[None, :] <= jnp.arange(C)[:, None]
                     o, p, valid = self._dense_layer(
-                        q, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
-                        table_l, k, v, bm)
-                    return o, _probs_sparsity(p[C - 1], valid[C - 1])
+                        q_loc, kc_l, vc_l, ks_l, vs_l, state_l, bits_l,
+                        table_l, k_loc, v_loc, bm)
+                    return o, _probs_sparsity(p[C - 1], valid[C - 1], ax)
 
                 if backend == "kernel":
-                    o = self._chunk_kernel(q, kc_l, vc_l, ks_l, vs_l,
-                                           state_l, bits_l, table_l, k, v,
-                                           None)
+                    o = self._chunk_kernel(q_loc, kc_l, vc_l, ks_l, vs_l,
+                                           state_l, bits_l, table_l,
+                                           k_loc, v_loc, None)
                     spars = jax.lax.cond(is_calib & has_refresh,
                                          lambda: dense()[1],
                                          lambda: jnp.float32(0))
                 else:
                     o, spars = dense()
 
-                h = h + A.out_proj(lp["attn"], o)
+                h = h + A.out_proj(lp["attn"], self._gather_heads(o, 1))
                 x2 = rmsnorm(lp["norm2"], h, cfg.norm_eps)
                 if cfg.moe is not None:
                     m, _ = moe_apply(lp["moe"], x2[None], cfg)
@@ -699,14 +860,18 @@ class ThinKVEngine:
             def commit(carry, inp):
                 pool, table, cache = carry
                 bk_g, bv_g = inp
+                # the TBQ buffer is head-sharded: each shard commits its
+                # own kv heads ([L, G, H/N, D] slice of the full group)
                 cache = cache.replace(
-                    buf_k=bk_g.astype(cache.buf_k.dtype),
-                    buf_v=bv_g.astype(cache.buf_v.dtype),
+                    buf_k=self._local_heads(bk_g, 2).astype(
+                        cache.buf_k.dtype),
+                    buf_v=self._local_heads(bv_g, 2).astype(
+                        cache.buf_v.dtype),
                     buf_len=jnp.int32(0))
                 pool, table, cache, fail, n_cow = CC.engine_advance(
                     tk, dims, pool, table, cache, sparsity, jnp.bool_(True),
                     n_new=dims.G, with_alloc_fail=True,
-                    track_cow=self._track_cow)
+                    track_cow=self._track_cow, axis_name=ax)
                 return (pool, table, cache), (fail, n_cow)
 
             (pool, table, cache), (fails, n_cows) = jax.lax.scan(
@@ -718,7 +883,11 @@ class ThinKVEngine:
             return (pool, table, cache, logits, jnp.any(fails),
                     jnp.sum(n_cows))
 
-        return big_step
+        pool_s, cache_s, rep = self._spmd_specs(single_request=True)
+        return self._wrap_spmd(
+            big_step,
+            in_specs=(rep, pool_s, rep, cache_s, rep),
+            out_specs=(pool_s, rep, cache_s, rep, rep, rep))
 
     def tick_launch_count(self) -> int:
         """Per-tick ``pallas_call`` LAUNCH count, audited on the decode
@@ -1047,6 +1216,9 @@ class ThinKVEngine:
         slot.tokens_out = st.tokens_out
         self._slot_ntok[i] = int(st.cache.num_tokens)
         self._feed[i] = st.next_token
+        # the spilled planes came back as host numpy: re-partition the
+        # restored state onto the mesh (head-sharded planes/buffers)
+        self._place_state()
         self.metrics["resumes"] += 1
         return True
 

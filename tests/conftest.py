@@ -6,8 +6,48 @@ import os
 # test_distributed.py, which re-execs itself with 8 devices.
 os.environ.setdefault("JAX_PLATFORMS", "cpu")
 
+import subprocess  # noqa: E402
+import sys  # noqa: E402
+
 import numpy as np  # noqa: E402
 import pytest  # noqa: E402
+
+MESH_FLAG = "--xla_force_host_platform_device_count=8"
+
+
+def has_mesh_devices() -> bool:
+    """True inside a subprocess re-exec'd with the 8-device flag."""
+    return MESH_FLAG in os.environ.get("XLA_FLAGS", "")
+
+
+def run_in_mesh_subprocess(test_file: str, extra_args=(), timeout=1800):
+    """Re-exec ``pytest test_file`` in a subprocess with 8 forced CPU
+    host devices (XLA_FLAGS must be set before the first jax import, so
+    multi-device tests cannot run in the main test process).  The single
+    shared implementation of the wrapper used by test_distributed /
+    test_ring_attention / test_serving_traces / test_pool_invariants."""
+    env = dict(os.environ)
+    env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + MESH_FLAG).strip()
+    env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
+    r = subprocess.run(
+        [sys.executable, "-m", "pytest", test_file, "-x", "-q",
+         "--no-header", *extra_args],
+        env=env, capture_output=True, text=True, timeout=timeout)
+    sys.stdout.write(r.stdout[-4000:])
+    assert r.returncode == 0, r.stdout[-4000:] + r.stderr[-2000:]
+
+
+def pytest_addoption(parser):
+    parser.addoption(
+        "--update-golden", action="store_true", default=False,
+        help="regenerate the golden serving-trace fixtures under "
+             "tests/golden/ instead of comparing against them "
+             "(test_serving_traces.py)")
+
+
+@pytest.fixture
+def update_golden(request):
+    return request.config.getoption("--update-golden")
 
 
 @pytest.fixture

@@ -3,26 +3,14 @@
 Runs in a flagged subprocess with 8 CPU devices (same pattern as
 test_distributed.py).
 """
-import os
-import subprocess
-import sys
-
 import pytest
 
-_FLAG = "--xla_force_host_platform_device_count=8"
+from conftest import has_mesh_devices, run_in_mesh_subprocess
 
-if _FLAG not in os.environ.get("XLA_FLAGS", ""):
+if not has_mesh_devices():
     @pytest.mark.parametrize("dummy", [0])
     def test_ring_attention_suite(dummy):
-        env = dict(os.environ)
-        env["XLA_FLAGS"] = (env.get("XLA_FLAGS", "") + " " + _FLAG).strip()
-        env["PYTHONPATH"] = env.get("PYTHONPATH", "src")
-        r = subprocess.run(
-            [sys.executable, "-m", "pytest", __file__, "-x", "-q",
-             "--no-header"],
-            env=env, capture_output=True, text=True, timeout=1200)
-        sys.stdout.write(r.stdout[-3000:])
-        assert r.returncode == 0, r.stdout[-3000:] + r.stderr[-2000:]
+        run_in_mesh_subprocess(__file__, timeout=1200)
 else:
     import jax
     import jax.numpy as jnp
