@@ -436,6 +436,95 @@ def prefix_sweep(shared_fracs=(0.0, 0.5, 1.0), arch="r1-llama-8b",
     return rows
 
 
+def streaming_sweep(loads=(0.5, 1.5), pool_fracs=(1.0, 0.5),
+                    arch="r1-llama-8b", requests=6, slots=2,
+                    prompt_len=12, max_new=16, seed=0):
+    """Open-loop streamed serving latency: the asyncio orchestrator under
+    seeded Poisson arrivals in TICK space, swept over offered load (as a
+    multiple of the saturated service rate ``slots / max_new`` requests
+    per tick) x pool fraction.  Per cell: decode tok/s plus per-request
+    TTFT / TPOT / queue-wait p50/p99 — the latency side of Table 2 that
+    the closed-loop batch rows cannot show (at 1.5x offered load the
+    queue-wait tail is the cost of oversubscription; TPOT should stay
+    flat because the tick itself is unchanged).  Every cell must still
+    complete every request — open-loop pressure may queue work, never
+    drop it."""
+    from repro.config import ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.core import ct_cache as CC
+    from repro.serving.engine import ThinKVEngine
+    from repro.serving.orchestrator import Orchestrator
+
+    mcfg = get_smoke_config(arch)
+    tk = _smoke_tk()
+    scfg = ServeConfig(model=mcfg, thinkv=tk, max_seqs=slots,
+                       temperature=0.0)
+    dims = CC.make_dims(tk, mcfg.num_layers, mcfg.num_kv_heads,
+                        mcfg.head_dim)
+    worst = slots * dims.NB
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, mcfg.vocab_size, prompt_len)
+               for _ in range(requests)]
+
+    rows = []
+    params = None
+    for frac in pool_fracs:
+        for load in loads:
+            rate = load * slots / max_new          # requests per tick
+            gaps = np.random.default_rng(seed + 1).exponential(
+                1.0 / rate, requests)
+            at_tick = np.floor(np.cumsum(gaps)).astype(int)
+            eng = ThinKVEngine(scfg, params=params, backend="reference",
+                               pool_blocks=max(int(worst * frac), 1))
+            params = eng.params
+            # warm the jits outside the timed window
+            eng.submit([prompts[0].copy()], max_new_tokens=2)
+            eng.run()
+            base_tokens = eng.metrics["tokens"]
+            warmed = len(eng.scheduler.finished)
+            orch = Orchestrator(eng)
+            for i, p in enumerate(prompts):
+                orch.schedule_arrival(after_tick=int(at_tick[i]),
+                                      prompt=p.copy(),
+                                      max_new_tokens=max_new, uid=i)
+            t0 = time.perf_counter()
+            # finished accumulates across episodes: drop the warm-up run
+            done = orch.run_sync()[warmed:]
+            wall = time.perf_counter() - t0
+            full = sum(len(r.output) == max_new for r in done)
+            if len(done) != requests or full != requests:
+                raise SystemExit(
+                    f"streaming regression at load={load} "
+                    f"pool_frac={frac}: {len(done)}/{requests} finished, "
+                    f"{full} with full outputs")
+            pct = orch.percentiles(
+                keys=("ttft_s", "ttft_ticks", "tpot_s",
+                      "queue_wait_ticks"))
+            row = {
+                "offered_load": load,
+                "arrival_rate_per_tick": rate,
+                "pool_frac": frac,
+                "pool_blocks": eng.num_pool_blocks,
+                "requests": requests,
+                "completed": len(done),
+                "decode_tok_per_s": (eng.metrics["tokens"] - base_tokens)
+                / max(wall, 1e-9),
+                "preemptions": eng.metrics["preemptions"],
+                "prefill_overlapped_decode":
+                    orch.prefill_overlaps_decode(),
+                "latency": pct,
+            }
+            rows.append(row)
+            qw = pct.get("queue_wait_ticks", {"p50": 0.0, "p99": 0.0})
+            tt = pct.get("ttft_ticks", {"p50": 0.0, "p99": 0.0})
+            print(f"  load {load:4.2f}x pool {100 * frac:4.0f}%: "
+                  f"{row['decode_tok_per_s']:7.1f} tok/s | TTFT p50/p99 "
+                  f"{tt['p50']:5.1f}/{tt['p99']:5.1f} ticks | queue wait "
+                  f"p50/p99 {qw['p50']:5.1f}/{qw['p99']:5.1f} ticks | "
+                  f"{row['preemptions']:2d} preemptions")
+    return rows
+
+
 def mesh_sweep_inner(devices=(1, 4, 8), arch="r1-llama-8b", requests=3,
                      slots=2, prompt_len=16, max_new=16, seed=0):
     """Engine decode throughput at ``model``-axis mesh sizes (runs in a
@@ -590,6 +679,14 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
                                      max_new=8)
     else:
         out["prefix"] = prefix_sweep()
+    print("  streaming sweep (open-loop Poisson arrivals, asyncio "
+          "orchestrator):")
+    if smoke:
+        out["streaming"] = streaming_sweep(
+            loads=(1.5,), pool_fracs=(0.5,), requests=4, slots=2,
+            prompt_len=8, max_new=8)
+    else:
+        out["streaming"] = streaming_sweep()
     print("  device sweep (tensor-parallel serving, model-axis mesh):")
     out["mesh_sweep"] = mesh_sweep(devices=(1, 4, 8), smoke=smoke)
     if os.path.dirname(out_path):
@@ -610,6 +707,7 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
         "layer_sweep": out["layer_sweep"],
         "oversubscription": out["oversubscription"],
         "prefix": out["prefix"],
+        "streaming": out["streaming"],
         "mesh_sweep": out["mesh_sweep"],
     })
     print(f"  perf trajectory appended to {BENCH_LOG}")

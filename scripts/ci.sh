@@ -15,7 +15,12 @@
 # gate: the engine on an 8-device CPU mesh (KV-head-sharded pool planes
 # + per-shard fused attention launches) replays an oversubscribed
 # prefix-sharing trace and every request's per-step logits must be
-# BIT-IDENTICAL to an unsharded replay, with both audits clean.
+# BIT-IDENTICAL to an unsharded replay, with both audits clean, and
+# (4) the STREAMED orchestrator gate: the asyncio orchestrator serves an
+# oversubscribed shared-prefix trace under open-loop Poisson arrivals
+# with >= 1 preemption and >= 1 prefix hit, every request completes,
+# prefill demonstrably overlaps decode, and every request's per-step
+# logits are BIT-IDENTICAL to a synchronous batch run() replay.
 # The pytest run prints the 10 slowest tests (--durations=10) so the
 # growing suite's cost stays visible in every CI log.
 # Usage: scripts/ci.sh [extra pytest args]
@@ -28,6 +33,8 @@ echo "=== examples smoke gate ==="
 python examples/quickstart.py
 python examples/calibrate_thoughts.py
 python examples/serve_reasoning.py --requests 3 --slots 2 --max-new 16
+python examples/serve_reasoning.py --requests 3 --slots 2 --max-new 16 \
+    --stream
 echo "=== oversubscription gate ==="
 python -m repro.launch.serve --requests 6 --slots 4 --prompt-len 12 \
     --max-new 48 --temperature 0 --pool-frac 0.25 --priorities 0,1 \
@@ -37,6 +44,13 @@ python -m repro.launch.serve --requests 6 --slots 4 --prompt-len 16 \
     --max-new 32 --temperature 0 --pool-frac 0.25 \
     --prefix-cache --shared-prefix-frac 1.0 \
     --expect-all --expect-prefix-hits
+echo "=== streamed orchestrator gate (open-loop, bit-exact parity) ==="
+python -m repro.launch.serve --requests 6 --slots 4 --prompt-len 16 \
+    --max-new 48 --temperature 0 --pool-frac 0.25 --priorities 0,1 \
+    --prefix-cache --shared-prefix-frac 1.0 \
+    --stream --arrival-rate 0.5 \
+    --expect-all --expect-preemptions --expect-prefix-hits \
+    --expect-stream-parity
 echo "=== sharded serving gate (8-device CPU mesh, bit-exact parity) ==="
 XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
 python -m repro.launch.serve --requests 5 --slots 3 --prompt-len 16 \

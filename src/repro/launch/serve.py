@@ -23,6 +23,20 @@ gates on at least one hit, > 0 prefill tokens skipped, and a clean
 refcount audit (``claimed + free == pool_blocks``, every reference
 accounted).
 
+Streaming knobs: ``--stream`` serves through the asyncio orchestrator
+(``serving.orchestrator``) — per-request ``async for`` token streams,
+prefill of waiting requests overlapped with decode of running ones, and
+per-request TTFT/TPOT/queue-wait percentiles reported.
+``--arrival-rate R`` makes the workload OPEN-LOOP: requests arrive by a
+seeded Poisson process at R requests per engine tick (tick-space pacing
+is deterministic across hosts, unlike wall-clock timers), independent of
+completions.  ``--expect-stream-parity`` turns the run into the
+orchestrator CI gate: a second engine replays the same requests through
+the synchronous batch ``run()`` path and every request's per-step logits
+must be BIT-IDENTICAL (greedy only — per-request logits are
+schedule-invariant at temperature 0, so even staggered arrivals must
+reproduce the batch run exactly), with both pool audits clean.
+
 Tensor-parallel knobs: ``--mesh model=N`` shards the engine's pool
 planes, TBQ buffers, and attention over N devices on the KV-head axis
 (``kv_heads % N == 0`` — use ``--heads/--kv-heads`` to override the
@@ -44,6 +58,49 @@ from repro.config import ServeConfig, ThinKVConfig
 from repro.configs import get_config, get_smoke_config
 from repro.core import ct_cache as CC
 from repro.serving.engine import ThinKVEngine
+
+
+def _run_streamed(eng, args, prompts, priorities):
+    """Serve through the asyncio orchestrator: open-loop seeded Poisson
+    arrivals in TICK space (deterministic), one consumer task per
+    request draining its ``async for`` token stream concurrently.
+    Returns (finished requests, orchestrator, streamed token counts)."""
+    import asyncio
+
+    from repro.serving.orchestrator import Orchestrator
+
+    orch = Orchestrator(eng)
+    arr_rng = np.random.default_rng(1)
+    if args.arrival_rate > 0:
+        gaps = arr_rng.exponential(1.0 / args.arrival_rate, len(prompts))
+        at_tick = np.floor(np.cumsum(gaps)).astype(int)
+    else:
+        at_tick = np.zeros(len(prompts), int)
+
+    async def go():
+        streams = [
+            orch.schedule_arrival(
+                after_tick=int(at_tick[i]), prompt=p,
+                max_new_tokens=args.max_new,
+                priority=priorities[i] if priorities else 0, uid=i)
+            for i, p in enumerate(prompts)]
+        counts = {}
+
+        async def consume(s):
+            n = 0
+            async for _tok in s:
+                n += 1
+            counts[s.request.uid] = n
+
+        consumers = [asyncio.ensure_future(consume(s)) for s in streams]
+        orch.close()
+        done = await orch.serve()
+        for c in consumers:
+            await c
+        return done, counts
+
+    done, counts = asyncio.run(go())
+    return done, orch, counts
 
 
 def main():
@@ -93,6 +150,20 @@ def main():
                     help="CI gate: fail unless the run scored >= 1 prefix "
                          "hit with > 0 prefill tokens skipped and a clean "
                          "pool refcount audit")
+    ap.add_argument("--stream", action="store_true",
+                    help="serve via the asyncio orchestrator: streaming "
+                         "token delivery, overlapped prefill/decode, "
+                         "per-request TTFT/TPOT/queue-wait percentiles")
+    ap.add_argument("--arrival-rate", type=float, default=0.0,
+                    help="open-loop Poisson arrivals at this many requests "
+                         "per engine TICK (0 = everything arrives up "
+                         "front); needs --stream")
+    ap.add_argument("--expect-stream-parity", action="store_true",
+                    help="CI gate (needs --stream, greedy): replay the "
+                         "same requests through the synchronous batch "
+                         "run() on a second engine and fail unless every "
+                         "request's per-step logits are bit-identical "
+                         "and both pool audits are clean")
     ap.add_argument("--mesh", type=str, default=None,
                     help="device mesh spec for tensor-parallel serving, "
                          "e.g. model=8 (shards pool planes + attention "
@@ -110,6 +181,11 @@ def main():
     args = ap.parse_args()
     if args.expect_mesh_parity and not args.mesh:
         ap.error("--expect-mesh-parity requires --mesh")
+    if (args.arrival_rate or args.expect_stream_parity) and not args.stream:
+        ap.error("--arrival-rate/--expect-stream-parity require --stream")
+    if args.expect_stream_parity and args.temperature > 0:
+        ap.error("--expect-stream-parity needs --temperature 0: only "
+                 "greedy per-request logits are schedule-invariant")
 
     mcfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     if args.heads is not None:
@@ -138,7 +214,8 @@ def main():
         mesh = make_serve_mesh(args.mesh)
     eng = ThinKVEngine(cfg, backend=args.backend, pool_blocks=pool_blocks,
                        prefix_cache=args.prefix_cache, mesh=mesh,
-                       record_logits=args.expect_mesh_parity)
+                       record_logits=(args.expect_mesh_parity or
+                                      args.expect_stream_parity))
     rng = np.random.default_rng(0)
     shared_len = int(round(args.prompt_len * args.shared_prefix_frac))
     shared = rng.integers(0, mcfg.vocab_size, shared_len)
@@ -150,8 +227,14 @@ def main():
     if args.priorities:
         cycle = [int(x) for x in args.priorities.split(",")]
         priorities = [cycle[i % len(cycle)] for i in range(args.requests)]
-    eng.submit(prompts, max_new_tokens=args.max_new, priorities=priorities)
-    done = eng.run()
+    orch = None
+    if args.stream:
+        done, orch, streamed_counts = _run_streamed(
+            eng, args, prompts, priorities)
+    else:
+        eng.submit(prompts, max_new_tokens=args.max_new,
+                   priorities=priorities)
+        done = eng.run()
     toks = eng.metrics["tokens"]
     wall = eng.metrics["wall_s"]
     fr = np.mean([r.stats["footprint_frac"] for r in done])
@@ -165,6 +248,26 @@ def main():
           f"{eng.metrics['resumes']} resumes | mean queue wait "
           f"{eng.metrics['queue_wait_ticks'] / max(eng.metrics['admissions'], 1):.1f}"
           f" ticks")
+    if args.stream:
+        pct = orch.percentiles()
+        parts = []
+        for key, label, scale in (("ttft_s", "TTFT", 1e3),
+                                  ("tpot_s", "TPOT", 1e3)):
+            if key in pct:
+                parts.append(f"{label} p50 {pct[key]['p50'] * scale:.0f}ms"
+                             f" / p99 {pct[key]['p99'] * scale:.0f}ms")
+        if "queue_wait_ticks" in pct:
+            parts.append(f"queue wait p50 "
+                         f"{pct['queue_wait_ticks']['p50']:.1f} / p99 "
+                         f"{pct['queue_wait_ticks']['p99']:.1f} ticks")
+        rate = f"{args.arrival_rate} req/tick" if args.arrival_rate \
+            else "all-at-once"
+        print(f"streamed ({rate} open-loop): {sum(streamed_counts.values())}"
+              f" tokens delivered over {len(streamed_counts)} streams | "
+              + " | ".join(parts))
+        print(f"overlap: prefill-inside-decode="
+              f"{orch.prefill_overlaps_decode()} "
+              f"stream-inside-next-tick={orch.stream_overlaps_dispatch()}")
     if args.expect_all:
         short = [r for r in done if len(r.output) < args.max_new]
         if len(done) != args.requests or short:
@@ -207,6 +310,57 @@ def main():
         print(f"prefix gate OK: {eng.metrics['prefix_hits']} hit(s), "
               f"{eng.metrics['prefix_tokens_skipped']} prefill tokens "
               f"skipped")
+    if args.expect_stream_parity:
+        ref = ThinKVEngine(cfg, params=eng.params, backend=args.backend,
+                           pool_blocks=pool_blocks,
+                           prefix_cache=args.prefix_cache,
+                           record_logits=True)
+        ref.submit([p.copy() for p in prompts],
+                   max_new_tokens=args.max_new, priorities=priorities)
+        ref_done = ref.run()
+        mismatch = []
+        if len(done) != len(ref_done):
+            mismatch.append(f"completed {len(done)} vs {len(ref_done)}")
+        # greedy per-request logits are schedule-invariant: the streamed
+        # run's staggered arrivals must reproduce the batch run's logits
+        # bit for bit, keyed by arrival stamp (both submit in uid order)
+        if set(eng.request_logits) != set(ref.request_logits):
+            mismatch.append("recorded-request sets differ")
+        out_by_uid = {r.uid: r.output for r in done}
+        mismatch += [
+            s.uid for s in ref_done
+            if out_by_uid.get(s.uid) != s.output]
+        logit_steps = bad_steps = 0
+        for key in set(eng.request_logits) & set(ref.request_logits):
+            seq, ref_seq = eng.request_logits[key], ref.request_logits[key]
+            if len(seq) != len(ref_seq):
+                mismatch.append(f"arrival{key}:steps")
+                continue
+            for a, b in zip(seq, ref_seq):
+                logit_steps += 1
+                if a.shape != b.shape or not (a == b).all():
+                    bad_steps += 1
+        try:
+            eng.audit_pool()
+            ref.audit_pool()
+        except AssertionError as e:
+            raise SystemExit(f"stream-parity gate FAILED: pool audit: {e}")
+        if mismatch or bad_steps:
+            raise SystemExit(
+                f"stream-parity gate FAILED: mismatches {mismatch}, "
+                f"{bad_steps}/{logit_steps} non-bit-identical logit steps "
+                f"between the streamed orchestrator and the synchronous "
+                f"run() path")
+        if not orch.prefill_overlaps_decode():
+            raise SystemExit(
+                "stream-parity gate FAILED: the metrics log shows no "
+                "prefill overlapping a running request's decode — the "
+                "orchestrator never actually interleaved admission with "
+                "generation")
+        print(f"stream-parity gate OK: {len(done)} requests, "
+              f"{logit_steps} logit steps bit-identical between the "
+              f"streamed orchestrator and the synchronous run() path; "
+              f"prefill/decode overlap observed; both audits clean")
     if args.mesh:
         import jax
         print(f"mesh: {args.mesh} over {jax.device_count()} devices | "

@@ -168,11 +168,34 @@ sharding: ``PreemptedState`` GATHERS the shards to host numpy
 planes back through the freshly claimed table with the head axis
 re-partitioned — preemption survives mesh-size changes (a trace spilled
 on one topology could in principle resume on another).
+
+THE API SEAM (``docs/serving.md``).  The engine itself is DEVICE-FACING
+only: it owns the pool, the jitted tick/prefill programs, and the
+admission/preemption/COW bookkeeping, exposed through a JetStream-style
+surface —
+
+    prefill(prompt, slot, rng) -> (Prefix, rng)   # chunked prefill +
+                                                  # first-token sample
+    insert(prefix, slot)       -> bool            # materialize a Prefix
+    generate(rng)              -> (ResultTokens, rng)  # ONE fused tick,
+                                                  # non-blocking D2H
+    free_resource(slot)                           # release every pool ref
+    drop_spill(arrival)                           # drop a cancelled spill
+
+``Prefix`` reuses the ``PreemptedState`` spill format as its portable
+transfer form (``detach_prefix``), so preemption resume and a
+disaggregated prefill→decode handoff are the SAME code path; a
+``ResultTokens`` starts its D2H copies at construction
+(``copy_to_host_async``) so the transfer overlaps the next dispatch.
+The HOST LOOP lives in ``serving.orchestrator``: an asyncio
+continuous-batching loop with per-request ``async for`` token streams,
+mid-flight cancellation, and TTFT/TPOT/queue-wait metrics.  ``run()``
+is a thin synchronous wrapper over it that replays the historical
+monolithic loop's decision order bit-exactly.
 """
 from __future__ import annotations
 
 import dataclasses
-import time
 from typing import Dict, List, Optional, Sequence
 
 import jax
@@ -259,6 +282,82 @@ class PreemptedState:
     # memory, their content is pinned immutable by the other holders, and
     # resume re-attaches them verbatim ([L, NB] int32, -1 elsewhere)
     shared_table: "np.ndarray" = None
+
+
+@dataclasses.dataclass
+class Prefix:
+    """Transferable result of :meth:`ThinKVEngine.prefill`.
+
+    Two forms (JetStream-style prefill/insert seam):
+
+    * RESIDENT (``slot >= 0, state is None``) — the prefilled KV already
+      lives in the engine's pool under ``slot``'s block table; ``insert``
+      into the same slot only seeds the next-token feed.  This is the
+      fast path the orchestrator uses (prefill ran in the admitted slot).
+    * PORTABLE (``state`` set) — ``detach_prefix`` spilled the planes to
+      host numpy in the :class:`PreemptedState` transfer format (the same
+      one preemption uses); ``insert`` claims fresh physical blocks and
+      scatters them back into ANY slot of ANY engine with matching dims —
+      the disaggregated prefill/decode handoff shape.
+    """
+
+    length: int                # prompt tokens materialized in the cache
+    first_token: int           # sampled from the last-prompt-token logits
+    logits: "np.ndarray"       # last-token logits [V] (host)
+    slot: int = -1             # resident slot, -1 once detached
+    state: Optional[PreemptedState] = None
+
+
+class ResultTokens:
+    """Packed per-tick result with ``copy_to_host_async`` semantics.
+
+    Wraps the device arrays one fused decode tick produced — next tokens
+    [R], per-slot validity [R], generated-so-far lengths [R], last-token
+    logits [R, V], plus the deferred commit-failure flag and COW-fault
+    count — and starts their D2H copies IMMEDIATELY at construction, so
+    the transfer overlaps whatever the host dispatches next (the next
+    tick, a prefill chunk).  Nothing blocks until :meth:`block` (or the
+    ``*_host`` properties), which the orchestrator calls from an executor
+    thread while the asyncio loop keeps streaming."""
+
+    def __init__(self, tick: int, tokens, valid: np.ndarray,
+                 lengths: np.ndarray, logits, alloc_fail, cow_faults):
+        self.tick = tick                 # 1-based tick index of this result
+        self.valid = valid               # [R] bool (host — scheduler truth)
+        self.lengths = lengths           # [R] tokens generated AFTER this
+        self._tokens = tokens            # [R] int32 (device)
+        self._logits = logits            # [R, V] (device)
+        self._alloc_fail = alloc_fail
+        self._cow_faults = cow_faults
+        self._host = None
+        for x in (tokens, logits, alloc_fail, cow_faults):
+            if hasattr(x, "copy_to_host_async"):
+                x.copy_to_host_async()
+
+    def block(self) -> "ResultTokens":
+        """Wait for the D2H copies; host views cached idempotently."""
+        if self._host is None:
+            self._host = (np.asarray(self._tokens),
+                          np.asarray(self._logits),
+                          bool(np.any(np.asarray(self._alloc_fail))),
+                          int(np.asarray(self._cow_faults).sum()))
+        return self
+
+    @property
+    def tokens_host(self) -> np.ndarray:
+        return self.block()._host[0]
+
+    @property
+    def logits_host(self) -> np.ndarray:
+        return self.block()._host[1]
+
+    @property
+    def alloc_fail_host(self) -> bool:
+        return self.block()._host[2]
+
+    @property
+    def cow_faults_host(self) -> int:
+        return self.block()._host[3]
 
 
 class ThinKVEngine:
@@ -368,7 +467,8 @@ class ThinKVEngine:
                                           "queue_wait_ticks": 0,
                                           "prefix_hits": 0,
                                           "prefix_tokens_skipped": 0,
-                                          "cow_faults": 0}
+                                          "cow_faults": 0,
+                                          "cancellations": 0}
         from repro.serving.prefix_cache import PrefixCache
         self.prefix_cache = PrefixCache(
             self.dims, capacity=prefix_cache_capacity) \
@@ -1187,10 +1287,10 @@ class ThinKVEngine:
         self.metrics["preemptions"] += 1
 
     def _resume(self, slot, st: PreemptedState) -> bool:
-        """Re-admit a preempted request bit-exactly: claim fresh physical
-        blocks for its spilled PRIVATE mapping, scatter the planes back,
-        re-attach the retained shared blocks verbatim, restore the cache
-        pytree and host bookkeeping.
+        """Re-admit a preempted request bit-exactly via :meth:`insert`
+        (claim fresh physical blocks for the spilled PRIVATE mapping,
+        scatter the planes back, re-attach retained shared blocks
+        verbatim) and restore the scheduler-side bookkeeping.
 
         Returns False (leaving pool and slot state untouched, the partial
         claim released) when the free list cannot back the full mapping —
@@ -1198,27 +1298,12 @@ class ThinKVEngine:
         past its watermark estimate (thought-type block fragmentation can
         exceed the dense-packing estimate); the caller re-spills and
         re-queues, and the next sweep's gate sees true free counts."""
-        i = slot.idx
-        pool, table_i, ok = CC.restore_request(
-            self.dims, self.pool, jnp.asarray(st.mapped),
-            CC.PoolView(*(jnp.asarray(p) for p in st.view)))
-        if not bool(ok):
-            self.pool = CC.release_blocks(self.dims, pool, table_i)
+        prefix = Prefix(length=int(st.cache.num_tokens),
+                        first_token=st.next_token,
+                        logits=None, state=st)
+        if not self.insert(prefix, slot.idx):
             return False
-        self.pool = pool
-        if st.shared_table is not None:
-            shared_t = jnp.asarray(st.shared_table)
-            table_i = jnp.where(shared_t >= 0, shared_t, table_i)
-        self.tables = self.tables.at[i].set(table_i)
-        cache_i = jax.tree.map(jnp.asarray, st.cache)
-        self.caches = jax.tree.map(
-            lambda all_, one: all_.at[i].set(one), self.caches, cache_i)
         slot.tokens_out = st.tokens_out
-        self._slot_ntok[i] = int(st.cache.num_tokens)
-        self._feed[i] = st.next_token
-        # the spilled planes came back as host numpy: re-partition the
-        # restored state onto the mesh (head-sharded planes/buffers)
-        self._place_state()
         self.metrics["resumes"] += 1
         return True
 
@@ -1437,139 +1522,184 @@ class ThinKVEngine:
                                "logits": np.asarray(logits)})
         return np.asarray(logits)
 
-    def _finish_token(self, slot, tok: int) -> bool:
-        """Book-keeping for one generated token; returns done."""
-        req = slot.request
-        req.output.append(tok)
-        slot.tokens_out += 1
-        self._feed[slot.idx] = tok
-        done = slot.tokens_out >= req.max_new_tokens or \
-            (req.eos_token is not None and tok == req.eos_token)
-        if done:
-            req.stats = self.slot_stats(slot.idx)
-            req.stats["preemptions"] = req.preemptions
-            self.scheduler.retire(slot)
-            self._release_slot(slot.idx)
-        return done
+    # ------------------------------------------------------------------
+    # the device-facing API seam: prefill / insert / generate /
+    # free_resource (JetStream-shaped; the asyncio orchestrator in
+    # ``serving.orchestrator`` is the only host loop built on it)
+    # ------------------------------------------------------------------
+
+    def prefill(self, prompt: np.ndarray, slot_idx: int, rng=None):
+        """Chunked prefill of ``prompt`` into ``slot_idx`` + first-token
+        sampling; returns ``(Prefix, rng)``.
+
+        The returned :class:`Prefix` is RESIDENT: the committed KV lives
+        in the pool under the slot's block table (prefix-cache hits and
+        headroom preemption of other slots all happened inside).  Greedy
+        sampling leaves ``rng`` untouched; temperature sampling splits it
+        exactly once, so the caller's rng stream is reproducible
+        regardless of how prefills interleave with ticks."""
+        logits = self._prefill(slot_idx, np.asarray(prompt))
+        if self.cfg.temperature > 0:
+            rng, sub = jax.random.split(rng)
+            tok = int(jax.random.categorical(
+                sub, jnp.asarray(logits) / self.cfg.temperature))
+        else:
+            tok = int(np.argmax(logits))
+        return Prefix(length=len(prompt), first_token=tok,
+                      logits=logits, slot=slot_idx), rng
+
+    def detach_prefix(self, prefix: Prefix) -> Prefix:
+        """Convert a RESIDENT prefix into the PORTABLE transfer form:
+        spill the slot's planes/metadata to host numpy (the
+        :class:`PreemptedState` format preemption uses) and release every
+        pool reference the slot held.  Shared references are DEMOTED into
+        the private mapping first (decref + respill — the spill snapshots
+        every mapped block, so the round trip stays bit-exact), leaving
+        the detached prefix self-contained: it pins nothing in this
+        engine's pool and ``insert`` rebuilds it from fresh blocks."""
+        assert prefix.state is None and prefix.slot >= 0, \
+            "detach_prefix needs a RESIDENT prefix"
+        i = prefix.slot
+        table_np = np.asarray(self.tables[i])
+        view, _ = CC.extract_request(self.dims, self.pool, self.tables[i])
+        prefix.state = PreemptedState(
+            view=tuple(np.asarray(p) for p in view),
+            mapped=table_np >= 0,
+            cache=jax.tree.map(lambda x: np.asarray(x[i]), self.caches),
+            tokens_out=0,
+            next_token=prefix.first_token)
+        self._release_slot(i)
+        prefix.slot = -1
+        return prefix
+
+    def insert(self, prefix: Prefix, slot_idx: int) -> bool:
+        """Materialize a :class:`Prefix` into slot ``slot_idx``.
+
+        RESIDENT prefixes (prefill ran in this very slot) only seed the
+        next-token feed.  PORTABLE prefixes — detached prefills and
+        preemption spills alike — claim fresh physical blocks for the
+        spilled mapping, scatter the planes back through the new table,
+        re-attach any retained shared references verbatim, and restore
+        the cache pytree + host bookkeeping; all reads go through the
+        block table in logical order, so the inserted request's logits
+        are bit-identical to one that never moved.  Returns False (pool
+        untouched, partial claim released) when the free list cannot
+        back the mapping."""
+        i = slot_idx
+        if prefix.state is None:
+            assert prefix.slot == i, \
+                (f"resident prefix lives in slot {prefix.slot}; detach it "
+                 f"before inserting into slot {i}")
+            self._feed[i] = prefix.first_token
+            return True
+        st = prefix.state
+        pool, table_i, ok = CC.restore_request(
+            self.dims, self.pool, jnp.asarray(st.mapped),
+            CC.PoolView(*(jnp.asarray(p) for p in st.view)))
+        if not bool(ok):
+            self.pool = CC.release_blocks(self.dims, pool, table_i)
+            return False
+        self.pool = pool
+        if st.shared_table is not None:
+            shared_t = jnp.asarray(st.shared_table)
+            table_i = jnp.where(shared_t >= 0, shared_t, table_i)
+        self.tables = self.tables.at[i].set(table_i)
+        cache_i = jax.tree.map(jnp.asarray, st.cache)
+        self.caches = jax.tree.map(
+            lambda all_, one: all_.at[i].set(one), self.caches, cache_i)
+        self._slot_ntok[i] = int(st.cache.num_tokens)
+        self._feed[i] = st.next_token
+        # the spilled planes came back as host numpy: re-partition the
+        # restored state onto the mesh (head-sharded planes/buffers)
+        self._place_state()
+        return True
+
+    def generate(self, rng):
+        """Dispatch ONE fused decode tick; returns ``(ResultTokens, rng)``.
+
+        Runs the preemption headroom check first (so the in-flight commit
+        cannot hit an allocation failure), then launches the tick over
+        every occupied slot and returns WITHOUT blocking: the
+        :class:`ResultTokens` has already started its D2H copies, and the
+        host is free to dispatch the next tick or a prefill while they
+        land.  Returns ``(None, rng)`` — rng untouched — when headroom
+        preempted every slot (nothing to tick).  The caller must route
+        the result through :meth:`consume` to fold the deferred
+        commit-failure flag and COW-fault count into the metrics."""
+        self._ensure_decode_headroom()
+        active = np.array([not s.free for s in self.scheduler.slots])
+        if not active.any():
+            return None, rng
+        rng, sub = jax.random.split(rng)
+        (nxt, self.pool, self.tables, self.caches, _, logits,
+         alloc_fail, cow_faults) = \
+            self._tick(self.params, self.pool, self.tables, self.caches,
+                       jnp.asarray(self._feed), jnp.asarray(active), sub)
+        self.metrics["ticks"] += 1
+        self.metrics["tokens"] += int(active.sum())
+        self._slot_ntok[active] += 1
+        return ResultTokens(tick=int(self.metrics["ticks"]), tokens=nxt,
+                            valid=active, lengths=self._slot_ntok.copy(),
+                            logits=logits, alloc_fail=alloc_fail,
+                            cow_faults=cow_faults), rng
+
+    def consume(self, res: ResultTokens) -> ResultTokens:
+        """Fold a completed tick's deferred device flags into the host
+        metrics (blocking on its D2H copies if they have not landed).
+        The allocation-failure assert lives here — after the overlapped
+        transfer — instead of on the dispatch path."""
+        if res.alloc_fail_host:
+            raise AssertionError(
+                "decode commit allocation failed despite preemption "
+                "headroom (pool accounting bug — data would have been "
+                "dropped)")
+        self.metrics["cow_faults"] += res.cow_faults_host
+        if self.record_logits:
+            self.trace.append({"kind": "decode",
+                               "active": res.valid.copy(),
+                               "logits": res.logits_host})
+        return res
+
+    def free_resource(self, slot_idx: int) -> None:
+        """Release EVERY pool reference slot ``slot_idx`` holds — private
+        blocks decref to the free list, shared blocks decref toward their
+        other holders — and reset its device cache + host bookkeeping.
+        Retirement and mid-flight cancellation both land here; the slot
+        is immediately reusable by the next admission."""
+        self._release_slot(slot_idx)
+
+    def drop_spill(self, arrival: int) -> bool:
+        """Drop a cancelled request's :class:`PreemptedState` spill,
+        releasing the shared-block references it RETAINED at preemption
+        time (the spilled private planes are host numpy — dropping them
+        frees no pool blocks, but the retained refs would otherwise
+        leak: ``audit_pool`` counts spills as reference holders)."""
+        st = self._spilled.pop(arrival, None)
+        if st is None:
+            return False
+        if st.shared_table is not None and (st.shared_table >= 0).any():
+            self.pool = CC.release_blocks(
+                self.dims, self.pool, jnp.asarray(st.shared_table))
+        return True
 
     def run(self, max_ticks: int = 10_000) -> List[Request]:
-        """Continuous-batching loop until all submitted requests finish.
+        """Synchronous compatibility wrapper over the asyncio
+        orchestrator: serve everything already submitted, return the
+        finished requests.
 
-        Admission, preemption, and resume all happen between device calls:
-        ``_ensure_decode_headroom`` runs before every tick so an in-flight
-        commit can never fail, and ``admit_and_prefill`` resumes spilled
-        requests / prefills fresh ones whenever slots and watermark
-        headroom allow.  Raises RuntimeError only on a true livelock —
-        nothing running (whole pool free), nothing preemptible, and the
-        watermark still refusing every queued request."""
-        sch = self.scheduler
-        rng = jax.random.PRNGKey(self.cfg.seed)
-        t0 = time.perf_counter()
-
-        def record_request_logits(req, logits):
-            if self.record_logits:
-                self.request_logits.setdefault(req.arrival, []).append(
-                    np.asarray(logits))
-
-        def admit_and_prefill():
-            nonlocal rng
-            # keep admitting while prefill can immediately retire requests
-            while True:
-                if not sch.queue or all(not s.free for s in sch.slots):
-                    break       # gate construction syncs device state —
-                                # skip it on the steady-state hot path
-                newly = sch.admit(self._admission_gate())
-                if not newly:
-                    break
-                for slot in newly:
-                    req = slot.request
-                    if req is None:
-                        continue    # vacated mid-sweep (defensive; started
-                                    # slots only — pending ones can't be
-                                    # victims, see _victim_exclude)
-                    self.metrics["admissions"] += 1
-                    self.metrics["queue_wait_ticks"] += \
-                        self.metrics["ticks"] - self._queued_at.pop(
-                            req.arrival, self.metrics["ticks"])
-                    st = self._spilled.pop(req.arrival, None)
-                    if st is not None:
-                        if not self._resume(slot, st):
-                            # an earlier admission this sweep overclaimed
-                            # past its estimate: re-spill, re-queue, and
-                            # let the next sweep's gate see true counts
-                            self._spilled[req.arrival] = st
-                            self.scheduler.preempt(slot)
-                            self._queued_at[req.arrival] = \
-                                self.metrics["ticks"]
-                        continue
-                    logits = self._prefill(slot.idx, req.prompt)
-                    record_request_logits(req, logits)
-                    if self.cfg.temperature > 0:
-                        rng, sub = jax.random.split(rng)
-                        tok = int(jax.random.categorical(
-                            sub, jnp.asarray(logits) / self.cfg.temperature))
-                    else:
-                        tok = int(np.argmax(logits))
-                    self._finish_token(slot, tok)
-
-        admit_and_prefill()
-        for _ in range(max_ticks):
-            if not sch.busy():
-                break
-            if not any(not s.free for s in sch.slots):
-                admit_and_prefill()
-                if sch.queue and not any(not s.free for s in sch.slots):
-                    # last resort before declaring livelock: unpin
-                    # spilled requests' retained shared references
-                    # (blocks co-held by cache entries + spills deadlock
-                    # decay against preemption) and retry admission once
-                    if self._demote_spilled_shared():
-                        admit_and_prefill()
-                if sch.queue and not any(not s.free for s in sch.slots):
-                    # nothing running means every claimed block is pinned
-                    # by cache entries/spills the decay valve could not
-                    # release, and the watermark still refuses every
-                    # queued request; with no in-flight request the pool
-                    # can never change, so admission can never succeed
-                    # and nothing is preemptible — fail loudly instead
-                    # of spinning max_ticks and dropping requests
-                    raise RuntimeError(
-                        f"admission livelock: {len(sch.queue)} queued "
-                        f"request(s), nothing running or preemptible, and "
-                        f"the global pool ({self.num_pool_blocks} blocks) "
-                        f"is below the smallest request's watermark "
-                        f"estimate — the pool cannot serve even one "
-                        f"request")
-                continue
-            self._ensure_decode_headroom()
-            active = np.array([not s.free for s in sch.slots])
-            if not active.any():
-                continue         # headroom preempted everything this round
-            rng, sub = jax.random.split(rng)
-            (nxt, self.pool, self.tables, self.caches, _, logits,
-             alloc_fail, cow_faults) = \
-                self._tick(self.params, self.pool, self.tables, self.caches,
-                           jnp.asarray(self._feed), jnp.asarray(active), sub)
-            nxt = np.asarray(nxt)
-            if bool(np.any(np.asarray(alloc_fail))):
-                raise AssertionError(
-                    "decode commit allocation failed despite preemption "
-                    "headroom (pool accounting bug — data would have been "
-                    "dropped)")
-            self.metrics["cow_faults"] += int(np.asarray(cow_faults).sum())
-            self.metrics["ticks"] += 1
-            self.metrics["tokens"] += int(active.sum())
-            self._slot_ntok[active] += 1
-            if self.record_logits:
-                self.trace.append({"kind": "decode",
-                                   "active": active.copy(),
-                                   "logits": np.asarray(logits)})
-            for slot in sch.active_slots():
-                record_request_logits(slot.request, logits[slot.idx])
-                self._finish_token(slot, int(nxt[slot.idx]))
-            admit_and_prefill()
-        self.metrics["wall_s"] = time.perf_counter() - t0
-        return sch.finished
+        The orchestrator replays the exact decision order of the
+        historical monolithic loop (admission sweeps, headroom checks,
+        rng splits), so tokens, per-request logits, pool audits, and
+        metrics are bit-identical to it — the differential serving-trace
+        suite pins that equivalence.  Re-entry works the same way:
+        ``run(max_ticks=k)`` may stop mid-flight and a later ``run()``
+        picks up the surviving slot/queue state.  Raises RuntimeError
+        only on a true admission livelock (see
+        ``Orchestrator._admit_and_prefill``)."""
+        from repro.serving.orchestrator import Orchestrator
+        orch = Orchestrator(self)
+        self.last_orchestrator = orch
+        return orch.run_sync(max_ticks=max_ticks)
 
     # ------------------------------------------------------------------
     def slot_stats(self, i: int) -> Dict:

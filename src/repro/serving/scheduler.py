@@ -7,6 +7,10 @@ oversubscribed global block pool:
        ▲                  │
        └──── preempt ◀────┘      (PREEMPTED requests rejoin the queue)
 
+with a terminal CANCELLED state reachable from any non-FINISHED state:
+``cancel`` drops a queued request, ``vacate`` clears a running slot
+(the engine releases the matching pool blocks / spill references).
+
 * Fixed request slots (static shapes for jit); a request occupies one
   slot while RUNNING and none otherwise.
 * The queue holds WAITING and PREEMPTED requests together, ordered by
@@ -42,6 +46,7 @@ class RequestState(enum.Enum):
     RUNNING = "running"        # occupies a slot
     PREEMPTED = "preempted"    # paused; blocks spilled to host, re-queued
     FINISHED = "finished"      # retired (EOS or max tokens)
+    CANCELLED = "cancelled"    # removed mid-flight (client disconnect)
 
 
 # eq=False: identity equality only — the generated __eq__ would compare
@@ -170,6 +175,31 @@ class Scheduler:
         req.done = True
         req.state = RequestState.FINISHED
         self.finished.append(req)
+        slot.request = None
+        slot.tokens_out = 0
+        return req
+
+    def cancel(self, req: Request) -> bool:
+        """Drop a QUEUED (WAITING or PREEMPTED) request without running
+        it; returns False when the request is not in the queue.  The
+        engine owns the matching pool teardown (dropping a spill's
+        retained references); a RUNNING request is cancelled via
+        ``vacate`` on its slot instead."""
+        try:
+            self.queue.remove(req)
+        except ValueError:
+            return False
+        req.state = RequestState.CANCELLED
+        req.done = True
+        return True
+
+    def vacate(self, slot: Slot) -> Request:
+        """Clear a slot for a mid-flight cancellation: the request is
+        neither retired (it did not finish) nor re-queued (it will never
+        resume).  The engine must release the slot's pool blocks."""
+        req = slot.request
+        req.state = RequestState.CANCELLED
+        req.done = True
         slot.request = None
         slot.tokens_out = 0
         return req

@@ -45,6 +45,40 @@ def pytest_addoption(parser):
              "(test_serving_traces.py)")
 
 
+# --- asyncio test support -------------------------------------------------
+# pytest-asyncio (requirements-dev.txt) runs @pytest.mark.asyncio tests
+# when installed; the container has no network, so — same pattern as the
+# hypothesis shim in _prop.py — fall back to a minimal runner that drives
+# coroutine test functions through asyncio.run on a fresh event loop.
+try:
+    import pytest_asyncio  # noqa: F401
+    HAVE_PYTEST_ASYNCIO = True
+except ImportError:
+    HAVE_PYTEST_ASYNCIO = False
+
+
+def pytest_configure(config):
+    if not HAVE_PYTEST_ASYNCIO:
+        config.addinivalue_line(
+            "markers", "asyncio: run the coroutine test via asyncio.run "
+                       "(pytest-asyncio fallback shim)")
+
+
+@pytest.hookimpl(tryfirst=True)
+def pytest_pyfunc_call(pyfuncitem):
+    if HAVE_PYTEST_ASYNCIO:
+        return None          # the real plugin owns coroutine tests
+    import asyncio
+    import inspect
+    fn = pyfuncitem.obj
+    if not inspect.iscoroutinefunction(fn):
+        return None
+    kwargs = {name: pyfuncitem.funcargs[name]
+              for name in pyfuncitem._fixtureinfo.argnames}
+    asyncio.run(fn(**kwargs))
+    return True
+
+
 @pytest.fixture
 def update_golden(request):
     return request.config.getoption("--update-golden")

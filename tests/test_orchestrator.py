@@ -1,0 +1,321 @@
+"""Asyncio orchestrator: streaming parity, overlap, cancellation
+teardown (audited), the Prefix/ResultTokens seam, and per-request
+timing metrics.
+
+Runs on the reference backend with the tiny smoke config (single
+process, 1 device) — cross-backend and cross-topology equivalence of
+the orchestrator-driven loop is pinned by test_serving_traces.py.
+"""
+import dataclasses
+
+import numpy as np
+import pytest
+
+from repro.config import ServeConfig, ThinKVConfig
+from repro.configs import get_smoke_config
+from repro.serving.engine import Prefix, ThinKVEngine
+from repro.serving.orchestrator import Orchestrator
+from repro.serving.scheduler import RequestState
+
+TK = ThinKVConfig(refresh_interval=16, group_size=8, block_size=8,
+                  token_budget=48, retention_schedule=(16, 8, 4),
+                  min_retention=4, max_segments=64, kmeans_iters=4)
+
+
+def _engine(slots=2, **kw):
+    cfg = get_smoke_config("r1-llama-8b")
+    return ThinKVEngine(
+        ServeConfig(model=cfg, thinkv=TK, max_seqs=slots, temperature=0.0),
+        **kw)
+
+
+def _prompts(rng, n, lo=4, hi=10):
+    return [rng.integers(0, 256, int(rng.integers(lo, hi))) for _ in range(n)]
+
+
+async def _drain(stream):
+    return [tok async for tok in stream]
+
+
+# ----------------------------------------------------------------------
+# streaming parity + overlap
+# ----------------------------------------------------------------------
+
+@pytest.mark.asyncio
+async def test_streamed_tokens_match_batch_run(rng):
+    """``async for`` delivers exactly the tokens the synchronous wrapper
+    produces (same engine config/params, same arrival order)."""
+    import asyncio
+    prompts = _prompts(rng, 3)
+    batch = _engine(record_logits=True)
+    batch.submit([p.copy() for p in prompts], max_new_tokens=12)
+    done = batch.run()
+    want = {r.uid: list(r.output) for r in done}
+
+    eng = _engine(record_logits=True, params=batch.params)
+    orch = Orchestrator(eng)
+    streams = [orch.submit(p.copy(), max_new_tokens=12, uid=i)
+               for i, p in enumerate(prompts)]
+    consumers = [asyncio.ensure_future(_drain(s)) for s in streams]
+    orch.close()
+    finished = await orch.serve()
+    got = {s.request.uid: await c for s, c in zip(streams, consumers)}
+    assert got == want
+    assert len(finished) == 3
+    # per-request logits sequences are bit-identical too
+    assert set(eng.request_logits) == set(batch.request_logits)
+    for key in eng.request_logits:
+        for x, y in zip(eng.request_logits[key], batch.request_logits[key]):
+            assert (x == y).all()
+
+
+@pytest.mark.asyncio
+async def test_streaming_overlaps_next_dispatch(rng):
+    """The overlap claim, on the event log: a tick-N token reaches its
+    consumer AFTER tick N+1 was dispatched and BEFORE it was consumed —
+    streaming rides inside the next device tick's window."""
+    import asyncio
+    eng = _engine(slots=2)
+    orch = Orchestrator(eng)
+    streams = [orch.submit(p, max_new_tokens=16, uid=i)
+               for i, p in enumerate(_prompts(rng, 2))]
+    consumers = [asyncio.ensure_future(_drain(s)) for s in streams]
+    orch.close()
+    await orch.serve()
+    for c in consumers:
+        await c
+    assert orch.stream_overlaps_dispatch(), \
+        [e["kind"] for e in orch.events][:30]
+
+
+@pytest.mark.asyncio
+async def test_prefill_overlaps_running_decode(rng):
+    """A waiting request admitted mid-flight prefills INSIDE another
+    request's decode window (more requests than slots forces it)."""
+    import asyncio
+    eng = _engine(slots=2)
+    orch = Orchestrator(eng)
+    streams = [orch.submit(p, max_new_tokens=14, uid=i)
+               for i, p in enumerate(_prompts(rng, 4))]
+    consumers = [asyncio.ensure_future(_drain(s)) for s in streams]
+    orch.close()
+    done = await orch.serve()
+    assert len(done) == 4
+    for c in consumers:
+        await c
+    assert orch.prefill_overlaps_decode()
+
+
+@pytest.mark.asyncio
+async def test_open_loop_tick_arrivals(rng):
+    """``schedule_arrival`` injects in tick space, deterministically:
+    arrival stamps follow injection order and everything completes."""
+    import asyncio
+    eng = _engine(slots=2)
+    orch = Orchestrator(eng)
+    streams = [orch.schedule_arrival(after_tick=2 * i, prompt=p,
+                                     max_new_tokens=8, uid=i)
+               for i, p in enumerate(_prompts(rng, 4))]
+    consumers = [asyncio.ensure_future(_drain(s)) for s in streams]
+    orch.close()
+    done = await orch.serve()
+    assert len(done) == 4
+    outs = [await c for c in consumers]
+    assert all(len(o) == 8 for o in outs)
+    arrivals = [s.request.arrival for s in streams]
+    assert arrivals == sorted(arrivals)
+    # later-scheduled requests really arrived later (submit-event ticks
+    # are non-decreasing and at least one is strictly after tick 0)
+    sub_ticks = [e["tick"] for e in orch.events if e["kind"] == "submit"]
+    assert sub_ticks == sorted(sub_ticks) and sub_ticks[-1] > 0
+
+
+# ----------------------------------------------------------------------
+# cancellation teardown (the satellite bugfix, audited)
+# ----------------------------------------------------------------------
+
+@pytest.mark.asyncio
+async def test_cancelled_stream_never_yields_again_slot_reused(rng):
+    """After ``cancel()`` mid-stream: not one more token is yielded, the
+    slot is free for the next admission sweep, the pool audit stays
+    clean, and the other request still completes."""
+    import asyncio
+    eng = _engine(slots=1)
+    orch = Orchestrator(eng)
+    s_a = orch.submit(rng.integers(0, 256, 8), max_new_tokens=64, uid=0)
+    s_b = orch.submit(rng.integers(0, 256, 8), max_new_tokens=6, uid=1)
+
+    got_a = []
+
+    async def consume_a():
+        async for tok in s_a:
+            got_a.append(tok)
+            if len(got_a) == 3:
+                s_a.cancel()
+                # the stream must be terminally closed IMMEDIATELY
+                with pytest.raises(StopAsyncIteration):
+                    await s_a.__anext__()
+
+    ca = asyncio.ensure_future(consume_a())
+    cb = asyncio.ensure_future(_drain(s_b))
+    orch.close()
+    done = await orch.serve()
+    await ca
+    out_b = await cb
+    assert len(got_a) == 3                  # nothing after the cancel
+    assert s_a.cancelled
+    req_a = await s_a.result()
+    assert req_a.state is RequestState.CANCELLED and req_a.done
+    assert eng.metrics["cancellations"] == 1
+    # the cancelled request never entered finished; B reused its slot
+    assert [r.uid for r in done] == [1]
+    assert len(out_b) == 6
+    eng.audit_pool()                        # no leaked/orphaned refcounts
+    cancel_ev = [e for e in orch.events if e["kind"] == "cancel"]
+    assert len(cancel_ev) == 1
+
+
+@pytest.mark.asyncio
+async def test_cancel_preempted_request_drops_spill(rng):
+    """Cancelling a PREEMPTED request drops its host spill AND the
+    shared-block references the spill retained (the leak the audit
+    would catch): run an oversubscribed shared-prefix workload until a
+    preemption exists, cancel the preempted request, serve the rest."""
+    shared = rng.integers(0, 256, 16)
+    prompts = [np.concatenate([shared, rng.integers(0, 256, 8)])
+               for _ in range(3)]
+    eng = _engine(slots=3, prefix_cache=True)
+    eng.submit([p.copy() for p in prompts], max_new_tokens=24)
+    eng.run(max_ticks=3)                    # everyone mid-flight
+    victim_slot = eng.scheduler.active_slots()[-1]
+    victim = victim_slot.request
+    eng._preempt(victim_slot)               # spill it (test_preemption idiom)
+    victim_arrival = victim.arrival
+    st = eng._spilled[victim_arrival]
+    # the shared-prefix workload makes the spill RETAIN shared refs —
+    # exactly the references a cancelled teardown must release
+    assert st.shared_table is not None and (st.shared_table >= 0).any()
+
+    orch = Orchestrator(eng)
+    orch.cancel_request(victim)             # adopted request, no stream
+    orch.close()
+    done = await orch.serve()
+    assert victim.state is RequestState.CANCELLED
+    assert victim_arrival not in eng._spilled
+    assert eng.metrics["cancellations"] == 1
+    assert len(done) == 2 and all(len(r.output) == 24 for r in done)
+    eng.audit_pool()                        # retained refs were released
+
+
+@pytest.mark.asyncio
+async def test_cancel_waiting_request_before_admission(rng):
+    """A request cancelled while still WAITING never runs at all."""
+    import asyncio
+    eng = _engine(slots=1)
+    orch = Orchestrator(eng)
+    s_a = orch.submit(rng.integers(0, 256, 8), max_new_tokens=10, uid=0)
+    s_b = orch.submit(rng.integers(0, 256, 8), max_new_tokens=10, uid=1)
+    s_b.cancel()                            # still queued behind A
+    ca = asyncio.ensure_future(_drain(s_a))
+    orch.close()
+    done = await orch.serve()
+    assert [r.uid for r in done] == [0]
+    assert len(await ca) == 10
+    assert (await s_b.result()).state is RequestState.CANCELLED
+    assert await _drain(s_b) == []          # yields nothing, ever
+    eng.audit_pool()
+
+
+# ----------------------------------------------------------------------
+# the engine seam itself
+# ----------------------------------------------------------------------
+
+def test_result_tokens_async_host_copy(rng):
+    """generate() returns without blocking; ResultTokens carries packed
+    tokens/validity/lengths and the host views land on block()."""
+    import jax
+    eng = _engine(slots=2)
+    eng.submit(_prompts(rng, 2), max_new_tokens=4)
+    eng.scheduler.admit(eng._admission_gate())
+    key = jax.random.PRNGKey(0)
+    for slot in eng.scheduler.active_slots():
+        prefix, key = eng.prefill(slot.request.prompt, slot.idx, key)
+        eng.insert(prefix, slot.idx)
+        slot.tokens_out += 1
+    res, key = eng.generate(key)
+    assert res is not None and res.tick == 1
+    res.block()
+    assert res.tokens_host.shape == (2,)
+    assert res.valid.tolist() == [True, True]
+    assert res.lengths.shape == (2,)
+    assert res.logits_host.shape[0] == 2
+    assert res.alloc_fail_host is False
+    assert isinstance(res.cow_faults_host, int)
+
+
+def test_portable_prefix_round_trip_bit_exact(rng):
+    """detach_prefix -> insert rebuilds the prefill from fresh physical
+    blocks (the disaggregated transfer shape); subsequent decode logits
+    are bit-identical to the undisturbed resident path."""
+    import jax
+    prompt = rng.integers(0, 256, 12)
+
+    def decode_logits(eng, detach):
+        key = jax.random.PRNGKey(0)
+        eng.submit([prompt.copy()], max_new_tokens=6)
+        (slot,) = eng.scheduler.admit(eng._admission_gate())
+        prefix, key = eng.prefill(slot.request.prompt, slot.idx, key)
+        if detach:
+            eng.detach_prefix(prefix)
+            assert prefix.slot == -1 and prefix.state is not None
+            # slot released: nothing mapped, audit clean
+            assert not (np.asarray(eng.tables[slot.idx]) >= 0).any()
+            eng.audit_pool()
+        assert eng.insert(prefix, slot.idx)
+        eng._feed[slot.idx] = prefix.first_token
+        slot.tokens_out += 1
+        outs = []
+        for _ in range(5):
+            res, key = eng.generate(key)
+            eng.consume(res)
+            outs.append(res.logits_host[slot.idx].copy())
+            eng._feed[slot.idx] = int(res.tokens_host[slot.idx])
+            slot.tokens_out += 1
+        return outs
+
+    a = decode_logits(_engine(slots=1), detach=False)
+    eng_b = _engine(slots=1)
+    b = decode_logits(eng_b, detach=True)
+    for x, y in zip(a, b):
+        assert (x == y).all()
+    eng_b.audit_pool()
+
+
+# ----------------------------------------------------------------------
+# per-request timing metrics
+# ----------------------------------------------------------------------
+
+@pytest.mark.asyncio
+async def test_ttft_tpot_queue_wait_recorded(rng):
+    import asyncio
+    eng = _engine(slots=1)
+    orch = Orchestrator(eng)
+    streams = [orch.submit(p, max_new_tokens=8, uid=i)
+               for i, p in enumerate(_prompts(rng, 3))]
+    consumers = [asyncio.ensure_future(_drain(s)) for s in streams]
+    orch.close()
+    await orch.serve()
+    for c in consumers:
+        await c
+    summary = orch.request_summary()
+    assert len(summary) == 3
+    for s in summary.values():
+        assert s["ttft_s"] > 0 and s["tpot_s"] >= 0
+        assert s["queue_wait_ticks"] is not None
+        assert s["tokens"] == 8
+    # 1 slot, 3 requests: the last-admitted request waited in the queue
+    assert max(s["queue_wait_ticks"] for s in summary.values()) > 0
+    pcts = orch.percentiles()
+    assert set(pcts) == {"ttft_s", "tpot_s", "queue_wait_ticks"}
+    assert all({"p50", "p99"} <= set(v) for v in pcts.values())
+    assert streams[0].metrics is not None

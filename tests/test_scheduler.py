@@ -1,8 +1,10 @@
 """Scheduler unit tests: priority+arrival ordering, size-aware admission,
-preemption lifecycle, victim selection, and arrival-stamp uniqueness."""
+preemption lifecycle, victim selection, arrival-stamp uniqueness,
+cancellation, and a continuous-arrival fairness property."""
 import numpy as np
 import pytest
 
+from _prop import given, settings, strategies as st
 from repro.serving.scheduler import (Request, RequestState, Scheduler)
 
 
@@ -120,3 +122,82 @@ def test_lifecycle_states_and_retire():
     sch.retire(slot)
     assert req.state is RequestState.FINISHED and req.done
     assert not sch.busy()
+
+
+def test_cancel_queued_and_vacate_running():
+    sch = Scheduler(num_slots=1)
+    sch.submit(_req(0))
+    sch.submit(_req(1))
+    (slot,) = sch.admit()
+    running, waiting = slot.request, sch.queue[0]
+    # cancel the queued one: gone from the queue, terminal state
+    assert sch.cancel(waiting)
+    assert waiting.state is RequestState.CANCELLED and waiting.done
+    assert waiting not in sch.queue
+    assert not sch.cancel(waiting)           # idempotent-ish: not queued
+    # vacate the running one: slot free, request NOT in finished
+    assert sch.vacate(slot) is running
+    assert running.state is RequestState.CANCELLED and running.done
+    assert slot.free and running not in sch.finished
+    assert not sch.busy()
+
+
+@settings(max_examples=30, deadline=None)
+@given(st.lists(st.integers(0, 2), min_size=2, max_size=10),
+       st.integers(1, 3), st.integers(0, 2 ** 31 - 1))
+def test_fairness_under_continuous_arrivals(priorities, num_slots, seed):
+    """PROPERTY: under staggered (continuous) arrivals with random
+    preemption interleavings, no request starves —
+
+    * a preempted request keeps its ORIGINAL arrival stamp forever;
+    * among equal priorities, admission always picks the oldest arrival
+      (preempted work beats later-submitted work);
+    * every request finishes within a bounded number of rounds.
+    """
+    rng = np.random.default_rng(seed)
+    sch = Scheduler(num_slots=num_slots)
+    reqs = [_req(uid, priority=p) for uid, p in enumerate(priorities)]
+    stamped = {}                            # uid -> original arrival
+    submitted = 0
+    remaining_work = {r.uid: 2 for r in reqs}   # "tokens" until retire
+    rounds = 0
+    max_rounds = 20 * len(reqs) + 10
+    while len(sch.finished) < len(reqs):
+        rounds += 1
+        assert rounds < max_rounds, \
+            (f"starvation: {[r.uid for r in sch.queue]} still queued "
+             f"after {rounds} rounds")
+        # staggered submits: 0-2 new arrivals per round
+        for _ in range(int(rng.integers(0, 3))):
+            if submitted < len(reqs):
+                sch.submit(reqs[submitted])
+                stamped[reqs[submitted].uid] = reqs[submitted].arrival
+                submitted += 1
+        newly = sch.admit()
+        # fairness: each admission chose the best (priority, arrival)
+        # among the queue AS ADMITTED — no queued request may dominate
+        # a just-admitted one
+        for slot in newly:
+            for q in sch.queue:
+                assert (-q.priority, q.arrival) >= \
+                    (-slot.request.priority, slot.request.arrival)
+        # random preemptions (at most all-but-one slot per round, so the
+        # system always makes progress somewhere)
+        active = sch.active_slots()
+        for slot in active[1:]:
+            if rng.random() < 0.4:
+                req = slot.request
+                before = req.arrival
+                sch.preempt(slot)
+                assert req.arrival == before == stamped[req.uid], \
+                    "preemption must preserve the original arrival stamp"
+        # progress + retire
+        for slot in sch.active_slots():
+            remaining_work[slot.request.uid] -= 1
+            if remaining_work[slot.request.uid] <= 0:
+                sch.retire(slot)
+    # everything finished exactly once, stamps never mutated
+    assert sorted(r.uid for r in sch.finished) == sorted(
+        r.uid for r in reqs)
+    for r in reqs:
+        assert r.arrival == stamped[r.uid]

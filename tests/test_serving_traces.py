@@ -23,6 +23,15 @@ asserting:
 * the trace actually EXERCISED the machinery: preemptions > 0, prefix
   hits > 0, COW faults > 0, and >= 1 big-chunk (flash) prefill.
 
+The pressure trace is ADDITIONALLY replayed through the asyncio
+orchestrator (``serving.orchestrator``) with staggered tick-space
+arrivals in all four cells, asserting bit-identical per-request logits
+against the batch replays (greedy logits are schedule-invariant),
+cross-cell agreement of tokens/audits/metrics under the streamed
+schedule, and — from the orchestrator's event log — that a waiting
+request's prefill genuinely landed inside another request's decode
+window (the continuous-batching overlap is observed, not assumed).
+
 A GOLDEN-TRACE fixture (``tests/golden/serving_trace.json``) pins the
 reference 1-device cell's emitted tokens + final pool audit across PRs:
 pairwise parity cannot see BOTH backends drifting together, the golden
@@ -50,7 +59,7 @@ if not has_mesh_devices():
         run_in_mesh_subprocess(
             __file__,
             extra_args=("--update-golden",) if update_golden else (),
-            timeout=3000)
+            timeout=4500)
 else:
     import dataclasses
 
@@ -141,7 +150,34 @@ else:
             "metrics": {k: int(eng.metrics[k]) for k in _METRIC_KEYS},
         }
 
-    def run_cells(trace, backends=("reference", "kernel")):
+    # staggered tick-space arrivals for the streamed replay: request i
+    # enters the queue after STREAM_ARRIVALS[i] engine ticks, so waiting
+    # requests' prefills land while earlier ones are mid-decode
+    STREAM_ARRIVALS = (0, 0, 2, 5, 8)
+
+    def replay_streamed(eng, trace, after_ticks=STREAM_ARRIVALS):
+        """Replay the trace through the asyncio ORCHESTRATOR with
+        staggered open-loop arrivals (instead of one up-front batch
+        submit).  Same comparable facts as :func:`replay`, plus the
+        orchestrator's overlap verdicts from its event log."""
+        from repro.serving.orchestrator import Orchestrator
+        orch = Orchestrator(eng)
+        for i, p in enumerate(trace["prompts"]):
+            orch.schedule_arrival(after_tick=int(after_ticks[i]),
+                                  prompt=p.copy(),
+                                  max_new_tokens=trace["max_new"],
+                                  priority=trace["priorities"][i], uid=i)
+        done = orch.run_sync()
+        return {
+            "outputs": {int(r.uid): list(r.output) for r in done},
+            "logits": dict(eng.request_logits),
+            "audit": eng.audit_pool(),
+            "metrics": {k: int(eng.metrics[k]) for k in _METRIC_KEYS},
+            "prefill_overlapped": orch.prefill_overlaps_decode(),
+        }
+
+    def run_cells(trace, backends=("reference", "kernel"),
+                  replay_fn=replay):
         """Replay the trace through {backend} x {1-device, mesh} and
         return ``cells[(backend, n_devices)]``.  Params are built once
         and shared so every cell serves the same model."""
@@ -152,7 +188,7 @@ else:
             for ndev, m in ((1, None), (MESH_N, mesh)):
                 eng = build_engine(scfg, backend, m, trace, params=params)
                 params = eng.params
-                cells[(backend, ndev)] = replay(eng, trace)
+                cells[(backend, ndev)] = replay_fn(eng, trace)
         return cells
 
     def assert_bit_identical(a, b, label):
@@ -178,6 +214,11 @@ else:
     @pytest.fixture(scope="module")
     def flash_cells():
         return run_cells(generate_trace("flash"))
+
+    @pytest.fixture(scope="module")
+    def streamed_pressure_cells():
+        return run_cells(generate_trace("pressure"),
+                         replay_fn=replay_streamed)
 
     def test_eight_devices():
         import jax
@@ -241,6 +282,61 @@ else:
         for cells in (pressure_cells, flash_cells):
             audits = [c["audit"] for c in cells.values()]
             assert all(a == audits[0] for a in audits[1:]), audits
+
+    @pytest.mark.parametrize("backend", ["reference", "kernel"])
+    @pytest.mark.parametrize("ndev", [1, MESH_N])
+    def test_streamed_replay_bit_identical_to_batch(
+            pressure_cells, streamed_pressure_cells, backend, ndev):
+        """ACCEPTANCE: the asyncio orchestrator serving the pressure
+        trace with STAGGERED open-loop arrivals reproduces the one-shot
+        batch ``run()`` replay bit for bit — every request's per-step
+        logits and emitted tokens, in every {backend} x {topology} cell.
+        (Greedy per-request logits are schedule-invariant: preemption
+        and resume are bit-exact and COW prefix content is immutable,
+        so WHEN a request runs cannot change WHAT it computes.)
+
+        The final pool audits are NOT compared against the batch cell:
+        the staggered schedule admits in a different order, so the
+        prefix cache retains a different (but internally consistent —
+        ``audit_pool`` asserts claimed + free == pool_blocks) set of
+        entries at drain.  Streamed-cell audits ARE compared against
+        each other below."""
+        batch = pressure_cells[(backend, ndev)]
+        streamed = streamed_pressure_cells[(backend, ndev)]
+        assert_bit_identical(batch, streamed,
+                             f"pressure/{backend}/{ndev}dev "
+                             f"batch-vs-streamed")
+
+    def test_streamed_cells_agree_with_each_other(
+            streamed_pressure_cells):
+        """The streamed schedule itself is topology- and backend-
+        invariant: identical tokens, pool audits, and serving metrics
+        across all four streamed cells, plus bit-identical logits
+        across topologies within each backend."""
+        cells = streamed_pressure_cells
+        base = cells[("reference", 1)]
+        assert base["metrics"]["preemptions"] > 0
+        assert base["metrics"]["prefix_hits"] > 0
+        for key, c in cells.items():
+            assert c["outputs"] == base["outputs"], key
+            assert c["audit"] == base["audit"], key
+            assert c["metrics"] == base["metrics"], key
+        for backend in ("reference", "kernel"):
+            assert_bit_identical(cells[(backend, 1)],
+                                 cells[(backend, MESH_N)],
+                                 f"streamed/{backend} 1dev-vs-mesh")
+
+    def test_streamed_replay_overlaps_prefill_with_decode(
+            streamed_pressure_cells):
+        """ACCEPTANCE: the orchestrator's event log proves a waiting
+        request's prefill landed while another request was mid-decode
+        (tokens recorded both at-or-before and after the prefill's
+        tick) — the continuous-batching overlap is real, not nominal,
+        in every cell."""
+        for key, c in streamed_pressure_cells.items():
+            assert c["prefill_overlapped"], \
+                (f"{key}: no prefill landed inside another request's "
+                 f"decode window under staggered arrivals")
 
     def test_golden_trace_regression(pressure_cells, flash_cells,
                                      update_golden):
