@@ -36,6 +36,11 @@ Three parts:
    ``--xla_force_host_platform_device_count`` in a subprocess, so the
    numbers measure dispatch structure + collective overhead, not a real
    multi-chip win).  Outputs are gated IDENTICAL across every mesh size.
+8. **Dispatch sweep** (multi-tick mega-dispatch): Python dispatches per
+   decoded token and the host-gap share of wall time at
+   ``ticks_per_dispatch`` x ``samples_per_slot`` (COW-forked best-of-n)
+   — the fused ``while_loop`` pack must push dispatches/token below 1
+   at 8 ticks per dispatch (gated).
 
 Results are also APPENDED to ``BENCH_table2.json`` at the repo root (one
 record per run, tagged with the git SHA) so the perf trajectory is
@@ -270,7 +275,7 @@ def layer_sweep(layers=(4, 16, 32), arch="r1-llama-8b", ticks=6, slots=1,
             params = eng.params
             args = (eng.params, eng.pool, eng.tables, eng.caches,
                     jnp.zeros(slots, jnp.int32), jnp.ones(slots, bool),
-                    jax.random.PRNGKey(seed))
+                    eng._slot_rng)
             jax.block_until_ready(eng._tick(*args))      # warm the jit
             t0 = time.perf_counter()
             for _ in range(ticks):
@@ -525,6 +530,113 @@ def streaming_sweep(loads=(0.5, 1.5), pool_fracs=(1.0, 0.5),
     return rows
 
 
+def _device_dispatch_time(eng, reps=5):
+    """Warmed wall time of ONE decode dispatch (single tick or mega pack)
+    on a state snapshot with every slot active — the pure device +
+    dispatch cost, no host scheduling between launches."""
+    R = eng.cfg.max_seqs
+    tokens = jnp.zeros(R, jnp.int32)
+    active = jnp.ones(R, bool)
+    if eng._megatick is not None:
+        fn, args = eng._megatick, (
+            eng.params, eng.pool, eng.tables, eng.caches, tokens, active,
+            eng._slot_rng, jnp.full(R, 10 ** 6, jnp.int32),
+            jnp.full(R, -1, jnp.int32),
+            jnp.int32(eng.ticks_per_dispatch))
+    else:
+        fn, args = eng._tick, (
+            eng.params, eng.pool, eng.tables, eng.caches, tokens, active,
+            eng._slot_rng)
+    jax.block_until_ready(fn(*args))
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        out = fn(*args)
+    jax.block_until_ready(out)
+    return (time.perf_counter() - t0) / reps
+
+
+def dispatch_sweep(tpds=(1, 4, 8), samples=(1, 2), arch="r1-llama-8b",
+                   requests=4, slots=3, prompt_len=16, max_new=32, seed=0):
+    """Mega-dispatch measurement: Python dispatches per decoded token and
+    the host-gap share of wall time, swept over ``ticks_per_dispatch`` x
+    ``samples_per_slot`` (COW-forked best-of-n).  ``device_s_est`` is the
+    warmed per-dispatch device time times the dispatch count; the
+    remainder of wall time (``host_gap_s_est``) is host scheduling +
+    prefill — the cost the mega-dispatch amortises.  ``main`` gates
+    ``dispatches_per_token < 1`` at ticks_per_dispatch >= 8."""
+    from repro.config import ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.serving.engine import ThinKVEngine
+    from repro.serving.orchestrator import Orchestrator
+
+    mcfg = get_smoke_config(arch)
+    scfg = ServeConfig(model=mcfg, thinkv=_smoke_tk(), max_seqs=slots,
+                       temperature=0.0)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, mcfg.vocab_size, prompt_len)
+               for _ in range(requests)]
+    rows, params = [], None
+    for spr in samples:
+        for tpd in tpds:
+            eng = ThinKVEngine(scfg, params=params, backend="reference",
+                               ticks_per_dispatch=tpd,
+                               allow_forks=spr > 1)
+            params = eng.params
+            # warm the prefill/tick/megatick jits outside the timed window
+            eng.submit([prompts[0].copy()], max_new_tokens=2)
+            eng.run()
+            warmed = len(eng.scheduler.finished)
+            base = dict(eng.metrics)
+            per_dispatch_dev = _device_dispatch_time(eng)
+            t0 = time.perf_counter()
+            if spr > 1:
+                orch = Orchestrator(eng)
+                for i, p in enumerate(prompts):
+                    orch.submit(p.copy(), max_new_tokens=max_new,
+                                samples_per_slot=spr)
+                orch.close()
+                done = orch.run_sync()[warmed:]
+            else:
+                eng.submit([p.copy() for p in prompts],
+                           max_new_tokens=max_new)
+                done = eng.run()
+            wall = time.perf_counter() - t0
+            m = eng.metrics
+            dispatches = m["dispatches"] - base["dispatches"]
+            ticks = m["ticks"] - base["ticks"]
+            tokens = m["tokens"] - base["tokens"]
+            device_s = per_dispatch_dev * dispatches
+            row = {
+                "ticks_per_dispatch": int(tpd),
+                "samples_per_slot": int(spr),
+                "requests": requests,
+                "completed": len(done),
+                "dispatches": int(dispatches),
+                "ticks": int(ticks),
+                "tokens": int(tokens),
+                "dispatches_per_token": dispatches / max(tokens, 1),
+                "mean_ticks_per_dispatch": ticks / max(dispatches, 1),
+                "early_exit_finish": int(m["early_exit_finish"]
+                                         - base["early_exit_finish"]),
+                "early_exit_headroom": int(m["early_exit_headroom"]
+                                           - base["early_exit_headroom"]),
+                "forks": int(m["forks"] - base["forks"]),
+                "fork_cow_faults": int(m["fork_cow_faults"]
+                                       - base["fork_cow_faults"]),
+                "peak_refcount": int(m["peak_refcount"]),
+                "wall_s": wall,
+                "device_s_est": device_s,
+                "host_gap_s_est": max(wall - device_s, 0.0),
+            }
+            rows.append(row)
+            print(f"  tpd={tpd} samples={spr}: "
+                  f"{row['dispatches_per_token']:.3f} dispatches/token "
+                  f"({row['mean_ticks_per_dispatch']:.2f} ticks/dispatch)"
+                  f" | host gap {row['host_gap_s_est']:6.2f}s of "
+                  f"{row['wall_s']:6.2f}s wall | {row['forks']} fork(s)")
+    return rows
+
+
 def mesh_sweep_inner(devices=(1, 4, 8), arch="r1-llama-8b", requests=3,
                      slots=2, prompt_len=16, max_new=16, seed=0):
     """Engine decode throughput at ``model``-axis mesh sizes (runs in a
@@ -687,6 +799,21 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
             prompt_len=8, max_new=8)
     else:
         out["streaming"] = streaming_sweep()
+    print("  dispatch sweep (multi-tick mega-dispatch x COW forks):")
+    if smoke:
+        out["dispatch"] = dispatch_sweep(tpds=(1, 8), samples=(1, 2),
+                                         requests=3, slots=2,
+                                         prompt_len=8, max_new=16)
+    else:
+        out["dispatch"] = dispatch_sweep()
+    for r in out["dispatch"]:
+        if r["ticks_per_dispatch"] >= 8 and \
+                r["dispatches_per_token"] >= 1.0:
+            raise SystemExit(
+                f"mega-dispatch regression: {r['dispatches_per_token']:.2f}"
+                f" Python dispatches per decoded token at "
+                f"ticks_per_dispatch={r['ticks_per_dispatch']} "
+                f"(expected < 1 — the fused while_loop pack)")
     print("  device sweep (tensor-parallel serving, model-axis mesh):")
     out["mesh_sweep"] = mesh_sweep(devices=(1, 4, 8), smoke=smoke)
     if os.path.dirname(out_path):
@@ -708,6 +835,7 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
         "oversubscription": out["oversubscription"],
         "prefix": out["prefix"],
         "streaming": out["streaming"],
+        "dispatch": out["dispatch"],
         "mesh_sweep": out["mesh_sweep"],
     })
     print(f"  perf trajectory appended to {BENCH_LOG}")

@@ -17,6 +17,18 @@ queue-wait are reported at the end.  The tokens (and every logit behind
 them) are bit-identical to the batch path at temperature 0; streaming
 changes WHEN you see them, not what they are.  See docs/serving.md.
 
+BEST-OF-N REASONING: ``--samples n`` serves n candidate continuations
+per prompt WITHOUT re-prefilling or copying the cache — once a request
+is mid-decode, the engine COW-forks its slot (``fork_slot``): every
+physical cache block of the prompt + chain-of-thought-so-far is
+refcount-shared, the n logical sequences diverge through their own
+sampling streams, and only blocks a sequence actually rewrites get
+copied (copy-on-write faults).  At temperature 0 every fork reproduces
+its parent bit for bit; at temperature > 0 you rank the n finished
+candidates with a verifier and keep the best.  ``--ticks-per-dispatch
+N`` additionally fuses up to N decode ticks into one on-device
+dispatch (sampled tokens never visit the host mid-pack).
+
 TENSOR-PARALLEL SERVING: the full launcher (``repro.launch.serve``)
 accepts ``--mesh model=N`` to shard the engine over a device mesh on the
 KV-head axis — pool planes, TBQ buffers, and the fused attention launch
@@ -43,11 +55,13 @@ from repro.configs import get_smoke_config
 from repro.serving.engine import ThinKVEngine
 
 
-def run_streamed(eng, prompts, max_new):
+def run_streamed(eng, prompts, max_new, samples=1):
     """Streamed serving demo: one consumer task per request drains its
     ``async for`` token stream while the engine is mid-tick on the next
     batch; arrivals are staggered in tick space (request i enters the
-    queue after 2*i engine ticks) so prefill genuinely overlaps decode."""
+    queue after 2*i engine ticks) so prefill genuinely overlaps decode.
+    ``samples=n`` attaches n-1 COW-forked sibling streams per request
+    (``stream.forks``) — best-of-n over the shared prompt + CoT prefix."""
     import asyncio
 
     from repro.serving.orchestrator import Orchestrator
@@ -58,22 +72,27 @@ def run_streamed(eng, prompts, max_new):
         toks = []
         async for tok in stream:
             toks.append(tok)          # a real server would flush to the
-        return toks                   # client socket here, mid-tick
+        return stream, toks           # client socket here, mid-tick
 
     async def go():
         streams = [orch.schedule_arrival(after_tick=2 * i, prompt=p,
-                                         max_new_tokens=max_new, uid=i)
+                                         max_new_tokens=max_new,
+                                         uid=i if samples == 1 else None,
+                                         samples_per_slot=samples)
                    for i, p in enumerate(prompts)]
-        consumers = [asyncio.ensure_future(consume(s)) for s in streams]
+        consumers = [asyncio.ensure_future(consume(s))
+                     for parent in streams
+                     for s in (parent, *parent.forks)]
         orch.close()
         done = await orch.serve()
-        streamed = [await c for c in consumers]
-        return done, streamed
+        drained = [await c for c in consumers]
+        return done, drained, streams
 
-    done, streamed = asyncio.run(go())
-    for req, toks in zip(sorted(done, key=lambda r: r.uid), streamed):
-        assert list(req.output) == list(toks), "stream lost a token"
-    return done, orch
+    done, drained, streams = asyncio.run(go())
+    for stream, toks in drained:
+        assert list(stream.request.output) == list(toks), \
+            "stream lost a token"
+    return done, orch, streams
 
 
 def main():
@@ -85,7 +104,15 @@ def main():
     ap.add_argument("--stream", action="store_true",
                     help="serve via the asyncio orchestrator: streaming "
                          "token delivery with staggered arrivals")
+    ap.add_argument("--samples", type=int, default=1,
+                    help="best-of-n: serve n COW-forked candidate "
+                         "continuations per prompt (implies --stream)")
+    ap.add_argument("--ticks-per-dispatch", type=int, default=1,
+                    help="fuse up to N decode ticks into one on-device "
+                         "dispatch (sampling stays on-device)")
     args = ap.parse_args()
+    if args.samples > 1:
+        args.stream = True            # forks land via the orchestrator
 
     mcfg = get_smoke_config("r1-llama-8b")
     tk = ThinKVConfig(refresh_interval=16, group_size=8, block_size=8,
@@ -93,15 +120,19 @@ def main():
                       retention_schedule=(32, 16, 8, 4), min_retention=4,
                       max_segments=128, kmeans_iters=4)
     eng = ThinKVEngine(ServeConfig(model=mcfg, thinkv=tk,
-                                   max_seqs=args.slots, temperature=0.7))
+                                   max_seqs=args.slots, temperature=0.7),
+                       ticks_per_dispatch=args.ticks_per_dispatch,
+                       allow_forks=args.samples > 1)
 
     rng = np.random.default_rng(0)
     prompts = [rng.integers(0, mcfg.vocab_size, int(rng.integers(8, 24)))
                for _ in range(args.requests)]
 
     t0 = time.time()
+    streams = None
     if args.stream:
-        done, orch = run_streamed(eng, prompts, args.max_new)
+        done, orch, streams = run_streamed(eng, prompts, args.max_new,
+                                           samples=args.samples)
     else:
         eng.submit(prompts, max_new_tokens=args.max_new)
         done = eng.run()
@@ -124,6 +155,18 @@ def main():
               f"cache {max(r.stats['valid_tokens'])} toks "
               f"({r.stats['footprint_frac'] * 100:.1f}% of FullKV) | "
               f"avg {r.stats['avg_bits']:.2f} bits")
+    if args.samples > 1:
+        m = eng.metrics
+        print(f"\nbest-of-{args.samples}: {m['forks']} COW forks shared "
+              f"prompt+CoT blocks (peak refcount {m['peak_refcount']}, "
+              f"{m['fork_cow_faults']} divergence COW faults)")
+        for parent in streams:
+            group = [parent, *parent.forks]
+            lens = [len(s.request.output) for s in group]
+            # a real deployment scores the n candidates with a verifier /
+            # reward model here and keeps the argmax
+            print(f"  prompt {parent.request.uid}: {len(group)} "
+                  f"candidates of {lens} tokens")
 
 
 if __name__ == "__main__":

@@ -20,7 +20,13 @@
 # oversubscribed shared-prefix trace under open-loop Poisson arrivals
 # with >= 1 preemption and >= 1 prefix hit, every request completes,
 # prefill demonstrably overlaps decode, and every request's per-step
-# logits are BIT-IDENTICAL to a synchronous batch run() replay.
+# logits are BIT-IDENTICAL to a synchronous batch run() replay, and
+# (5) the MEGA-DISPATCH gate: an oversubscribed shared-prefix trace
+# served with 8 decode ticks fused per on-device dispatch and 2
+# COW-forked samples per request — mean ticks/dispatch > 1 with >= 1
+# early pack exit, >= 1 fork COW fault with shared refcounts > 1, clean
+# refcount audits, and tokens BIT-IDENTICAL to a per-tick replay (forks
+# identical to their parents at temperature 0).
 # The pytest run prints the 10 slowest tests (--durations=10) so the
 # growing suite's cost stays visible in every CI log.
 # Usage: scripts/ci.sh [extra pytest args]
@@ -51,6 +57,12 @@ python -m repro.launch.serve --requests 6 --slots 4 --prompt-len 16 \
     --stream --arrival-rate 0.5 \
     --expect-all --expect-preemptions --expect-prefix-hits \
     --expect-stream-parity
+echo "=== mega-dispatch gate (fused multi-tick + COW forks, bit-exact) ==="
+python -m repro.launch.serve --requests 4 --slots 3 --prompt-len 24 \
+    --max-new 64 --budget 48 --temperature 0 --pool-frac 0.6 \
+    --prefix-cache --shared-prefix-frac 1.0 \
+    --stream --ticks-per-dispatch 8 --samples-per-slot 2 \
+    --expect-all --expect-multi-tick
 echo "=== sharded serving gate (8-device CPU mesh, bit-exact parity) ==="
 XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
 python -m repro.launch.serve --requests 5 --slots 3 --prompt-len 16 \

@@ -299,6 +299,7 @@ class ServeConfig:
     max_gen_len: int = 1024
     kv_seq_len: int = 0                   # decode shapes: existing cache length
     temperature: float = 0.0
+    top_p: float = 1.0                    # nucleus mass; 1.0 disables
     seed: int = 0
 
 

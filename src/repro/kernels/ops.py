@@ -128,15 +128,21 @@ def _subjaxprs(params):
                 yield x
 
 
-def count_pallas_launches(jaxpr) -> int:
+def count_pallas_launches(jaxpr, while_trips: int = 1) -> int:
     """Static per-call ``pallas_call`` LAUNCH count of a (closed) jaxpr.
 
     Unlike a flat equation count, this multiplies launches inside a
     ``lax.scan`` body by the scan trip count — a kernel inside a layer scan
     really launches L times per step.  ``cond`` branches contribute their
-    maximum (worst case); ``while`` bodies are counted once (one trip lower
-    bound).  Use with ``jax.make_jaxpr(fn)(*args)`` to audit how many
-    kernel launches one engine tick dispatches.
+    maximum (worst case).  A ``lax.while_loop``'s trip count is dynamic,
+    so its body launches are multiplied by ``while_trips`` (the caller's
+    assumed trip count; default 1 — the one-trip lower bound) and its cond
+    launches are counted once.  Auditing a mega-dispatch therefore takes
+    two calls: ``count(j, while_trips=2) - count(j, while_trips=1)`` is
+    the per-trip launch count and the remainder is the launches outside
+    the loop (see ``ThinKVEngine.megatick_launch_count``).  Use with
+    ``jax.make_jaxpr(fn)(*args)`` to audit how many kernel launches one
+    engine tick dispatches.
     """
     from jax import core as jcore
     if isinstance(jaxpr, jcore.ClosedJaxpr):
@@ -148,12 +154,17 @@ def count_pallas_launches(jaxpr) -> int:
             n += 1
         elif name == "scan":
             n += eqn.params["length"] * count_pallas_launches(
-                eqn.params["jaxpr"])
+                eqn.params["jaxpr"], while_trips)
         elif name == "cond":
-            n += max(count_pallas_launches(b)
+            n += max(count_pallas_launches(b, while_trips)
                      for b in eqn.params["branches"])
+        elif name == "while":
+            n += while_trips * count_pallas_launches(
+                eqn.params["body_jaxpr"], while_trips)
+            n += count_pallas_launches(eqn.params["cond_jaxpr"],
+                                       while_trips)
         else:
-            n += sum(count_pallas_launches(j)
+            n += sum(count_pallas_launches(j, while_trips)
                      for j in _subjaxprs(eqn.params))
     return n
 

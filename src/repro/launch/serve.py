@@ -37,6 +37,20 @@ must be BIT-IDENTICAL (greedy only — per-request logits are
 schedule-invariant at temperature 0, so even staggered arrivals must
 reproduce the batch run exactly), with both pool audits clean.
 
+Mega-dispatch knobs: ``--ticks-per-dispatch N`` fuses up to N decode
+ticks into ONE on-device ``lax.while_loop`` dispatch — sampling happens
+on-device (``--temperature``/``--top-p``, per-request seeded streams)
+and sampled tokens feed the next tick's embedding without visiting the
+host; the loop exits early at scheduling events (a slot finishing, or
+the host-precomputed claim-safe trip count).  ``--samples-per-slot n``
+serves n samples per request by COW-forking the prompt + generated
+prefix into n logical sequences (best-of-n reasoning; needs
+``--stream``).  ``--expect-multi-tick`` turns the run into the
+mega-dispatch CI gate: mean ticks/dispatch > 1 with >= 1 early exit,
+clean pool audits, and bit-identical greedy tokens vs a second engine
+serving one tick per dispatch (plus fork COW faults, shared refcounts
+> 1, and fork/parent token identity when forking).
+
 Tensor-parallel knobs: ``--mesh model=N`` shards the engine's pool
 planes, TBQ buffers, and attention over N devices on the KV-head axis
 (``kv_heads % N == 0`` — use ``--heads/--kv-heads`` to override the
@@ -64,12 +78,16 @@ def _run_streamed(eng, args, prompts, priorities):
     """Serve through the asyncio orchestrator: open-loop seeded Poisson
     arrivals in TICK space (deterministic), one consumer task per
     request draining its ``async for`` token stream concurrently.
-    Returns (finished requests, orchestrator, streamed token counts)."""
+    ``--samples-per-slot n`` attaches ``n - 1`` COW-forked sibling
+    streams per request (best-of-n over the shared prompt + CoT prefix).
+    Returns (finished requests, orchestrator, streamed token counts,
+    parent streams)."""
     import asyncio
 
     from repro.serving.orchestrator import Orchestrator
 
     orch = Orchestrator(eng)
+    spr = getattr(args, "samples_per_slot", 1)
     arr_rng = np.random.default_rng(1)
     if args.arrival_rate > 0:
         gaps = arr_rng.exponential(1.0 / args.arrival_rate, len(prompts))
@@ -78,11 +96,15 @@ def _run_streamed(eng, args, prompts, priorities):
         at_tick = np.zeros(len(prompts), int)
 
     async def go():
+        # fork children draw uids from the orchestrator's own counter,
+        # so explicit parent uids would collide with them: let the
+        # counter number everything when forking (still deterministic)
         streams = [
             orch.schedule_arrival(
                 after_tick=int(at_tick[i]), prompt=p,
                 max_new_tokens=args.max_new,
-                priority=priorities[i] if priorities else 0, uid=i)
+                priority=priorities[i] if priorities else 0,
+                uid=i if spr == 1 else None, samples_per_slot=spr)
             for i, p in enumerate(prompts)]
         counts = {}
 
@@ -92,15 +114,17 @@ def _run_streamed(eng, args, prompts, priorities):
                 n += 1
             counts[s.request.uid] = n
 
-        consumers = [asyncio.ensure_future(consume(s)) for s in streams]
+        consumers = [asyncio.ensure_future(consume(s))
+                     for parent in streams
+                     for s in (parent, *parent.forks)]
         orch.close()
         done = await orch.serve()
         for c in consumers:
             await c
-        return done, counts
+        return done, counts, streams
 
-    done, counts = asyncio.run(go())
-    return done, orch, counts
+    done, counts, streams = asyncio.run(go())
+    return done, orch, counts, streams
 
 
 def main():
@@ -115,6 +139,18 @@ def main():
     ap.add_argument("--tau", type=int, default=16)
     ap.add_argument("--group", type=int, default=8)
     ap.add_argument("--temperature", type=float, default=0.8)
+    ap.add_argument("--top-p", type=float, default=1.0,
+                    help="nucleus sampling mass (1.0 = disabled); applied "
+                         "on-device wherever tokens are sampled")
+    ap.add_argument("--ticks-per-dispatch", type=int, default=1,
+                    help="fuse up to N decode ticks into ONE on-device "
+                         "while_loop dispatch (sampled tokens feed the "
+                         "next tick without visiting the host; the loop "
+                         "exits early at scheduling events)")
+    ap.add_argument("--samples-per-slot", type=int, default=1,
+                    help="serve n samples per request by COW-forking the "
+                         "prompt + generated-prefix cache into n logical "
+                         "sequences (best-of-n reasoning); needs --stream")
     ap.add_argument("--backend", default="auto",
                     choices=("auto", "reference", "kernel"),
                     help="decode attention path: dense dequant (reference) "
@@ -178,6 +214,15 @@ def main():
                          "trace on an UNSHARDED engine and fail unless "
                          "every request's logits are bit-identical and "
                          "both pool audits are clean")
+    ap.add_argument("--expect-multi-tick", action="store_true",
+                    help="CI gate (needs --ticks-per-dispatch > 1, greedy):"
+                         " fail unless mean ticks/dispatch > 1 with >= 1 "
+                         "early pack exit, the pool audit is clean, and a "
+                         "second engine replaying the workload one tick "
+                         "per dispatch emits bit-identical tokens; with "
+                         "--samples-per-slot > 1 additionally requires "
+                         ">= 1 COW fork fault, shared refcounts > 1, and "
+                         "fork outputs equal to their parents'")
     args = ap.parse_args()
     if args.expect_mesh_parity and not args.mesh:
         ap.error("--expect-mesh-parity requires --mesh")
@@ -186,6 +231,14 @@ def main():
     if args.expect_stream_parity and args.temperature > 0:
         ap.error("--expect-stream-parity needs --temperature 0: only "
                  "greedy per-request logits are schedule-invariant")
+    if args.samples_per_slot > 1 and not args.stream:
+        ap.error("--samples-per-slot > 1 requires --stream (forks land "
+                 "through the orchestrator)")
+    if args.expect_multi_tick and args.ticks_per_dispatch < 2:
+        ap.error("--expect-multi-tick requires --ticks-per-dispatch > 1")
+    if args.expect_multi_tick and args.temperature > 0:
+        ap.error("--expect-multi-tick needs --temperature 0 for the "
+                 "bit-exact per-tick parity replay")
 
     mcfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     if args.heads is not None:
@@ -201,7 +254,7 @@ def main():
                       retention_schedule=(32, 16, 8, 4), min_retention=4,
                       max_segments=256, kmeans_iters=4)
     cfg = ServeConfig(model=mcfg, thinkv=tk, max_seqs=args.slots,
-                      temperature=args.temperature)
+                      temperature=args.temperature, top_p=args.top_p)
     dims = CC.make_dims(tk, mcfg.num_layers, mcfg.num_kv_heads,
                         mcfg.head_dim)
     worst_case = args.slots * dims.NB
@@ -214,6 +267,8 @@ def main():
         mesh = make_serve_mesh(args.mesh)
     eng = ThinKVEngine(cfg, backend=args.backend, pool_blocks=pool_blocks,
                        prefix_cache=args.prefix_cache, mesh=mesh,
+                       ticks_per_dispatch=args.ticks_per_dispatch,
+                       allow_forks=args.samples_per_slot > 1,
                        record_logits=(args.expect_mesh_parity or
                                       args.expect_stream_parity))
     rng = np.random.default_rng(0)
@@ -228,8 +283,9 @@ def main():
         cycle = [int(x) for x in args.priorities.split(",")]
         priorities = [cycle[i % len(cycle)] for i in range(args.requests)]
     orch = None
+    streams = None
     if args.stream:
-        done, orch, streamed_counts = _run_streamed(
+        done, orch, streamed_counts, streams = _run_streamed(
             eng, args, prompts, priorities)
     else:
         eng.submit(prompts, max_new_tokens=args.max_new,
@@ -248,6 +304,17 @@ def main():
           f"{eng.metrics['resumes']} resumes | mean queue wait "
           f"{eng.metrics['queue_wait_ticks'] / max(eng.metrics['admissions'], 1):.1f}"
           f" ticks")
+    if args.ticks_per_dispatch > 1 or args.samples_per_slot > 1:
+        m = eng.metrics
+        print(f"mega-dispatch: {m['dispatches']} dispatches for "
+              f"{m['ticks']} ticks "
+              f"({m['ticks'] / max(m['dispatches'], 1):.2f} ticks/dispatch"
+              f", {m['dispatches'] / max(m['tokens'], 1):.3f} "
+              f"dispatches/token) | early exits: "
+              f"{m['early_exit_finish']} finish, "
+              f"{m['early_exit_headroom']} headroom | {m['forks']} "
+              f"fork(s), {m['fork_cow_faults']} fork COW faults, peak "
+              f"refcount {m['peak_refcount']}")
     if args.stream:
         pct = orch.percentiles()
         parts = []
@@ -269,12 +336,13 @@ def main():
               f"{orch.prefill_overlaps_decode()} "
               f"stream-inside-next-tick={orch.stream_overlaps_dispatch()}")
     if args.expect_all:
+        want = args.requests * max(args.samples_per_slot, 1)
         short = [r for r in done if len(r.output) < args.max_new]
-        if len(done) != args.requests or short:
+        if len(done) != want or short:
             raise SystemExit(
-                f"oversubscription gate FAILED: {len(done)}/{args.requests} "
+                f"oversubscription gate FAILED: {len(done)}/{want} "
                 f"requests finished, {len(short)} with dropped tokens")
-        print(f"oversubscription gate OK: {args.requests}/{args.requests} "
+        print(f"oversubscription gate OK: {want}/{want} "
               f"requests completed with zero dropped tokens")
     if args.expect_preemptions:
         if eng.metrics["preemptions"] < 1 or \
@@ -409,6 +477,76 @@ def main():
         print(f"mesh-parity gate OK: {len(done)} requests, {logit_steps} "
               f"logit steps bit-identical between --mesh {args.mesh} and "
               f"the unsharded engine; both audits clean")
+    if args.expect_multi_tick:
+        m = eng.metrics
+        fails = []
+        mean_tpd = m["ticks"] / max(m["dispatches"], 1)
+        if mean_tpd <= 1.0:
+            fails.append(f"mean ticks/dispatch {mean_tpd:.2f} <= 1")
+        if m["dispatches"] / max(m["tokens"], 1) >= 1.0:
+            fails.append("Python dispatches per decoded token >= 1")
+        if m["early_exit_finish"] + m["early_exit_headroom"] < 1:
+            fails.append("no early pack exit observed (finish or "
+                         "headroom) — the trace never hit a scheduling "
+                         "event mid-pack")
+        if args.samples_per_slot > 1:
+            if m["forks"] < 1:
+                fails.append("no COW fork ever landed")
+            if m["peak_refcount"] < 2:
+                fails.append("shared-prefix refcounts never exceeded 1")
+            if m["fork_cow_faults"] < 1:
+                fails.append("no COW fault on a forked slot — divergence "
+                             "never paid the copy (or never wrote near "
+                             "shared blocks; lengthen --max-new past "
+                             "--budget)")
+            diverged = sum(
+                1 for parent in streams for child in parent.forks
+                if child.request.output != parent.request.output)
+            if diverged:
+                fails.append(f"{diverged} greedy fork(s) diverged from "
+                             f"their parent's tokens")
+        try:
+            eng.audit_pool()
+        except AssertionError as e:
+            fails.append(f"pool audit: {e}")
+        # bit-exact greedy parity vs the per-tick loop: a second engine
+        # serves the identical workload one tick per dispatch
+        ref = ThinKVEngine(cfg, params=eng.params, backend=args.backend,
+                           pool_blocks=pool_blocks,
+                           prefix_cache=args.prefix_cache,
+                           allow_forks=args.samples_per_slot > 1)
+        if args.stream:
+            _, _, _, ref_streams = _run_streamed(
+                ref, args, [p.copy() for p in prompts], priorities)
+            bad = sum(
+                1 for a, b in zip(streams, ref_streams)
+                for x, y in zip((a, *a.forks), (b, *b.forks))
+                if x.request.output != y.request.output)
+            if bad:
+                fails.append(f"{bad} stream(s) not bit-identical to the "
+                             f"per-tick replay")
+        else:
+            ref.submit([p.copy() for p in prompts],
+                       max_new_tokens=args.max_new, priorities=priorities)
+            ref_out = {r.uid: r.output for r in ref.run()}
+            if {r.uid: r.output for r in done} != ref_out:
+                fails.append("outputs differ from the per-tick replay")
+        try:
+            ref.audit_pool()
+        except AssertionError as e:
+            fails.append(f"per-tick replay pool audit: {e}")
+        if fails:
+            raise SystemExit("multi-tick gate FAILED: " + "; ".join(fails))
+        forked = (f", {m['forks']} fork(s) sharing prefix blocks "
+                  f"(peak refcount {m['peak_refcount']}, "
+                  f"{m['fork_cow_faults']} fork COW faults, every fork "
+                  f"token-identical to its parent)"
+                  if args.samples_per_slot > 1 else "")
+        print(f"multi-tick gate OK: {m['dispatches']} dispatches for "
+              f"{m['ticks']} ticks ({mean_tpd:.2f} ticks/dispatch), "
+              f"{m['early_exit_finish'] + m['early_exit_headroom']} early "
+              f"exit(s), bit-identical to the per-tick loop, both audits "
+              f"clean{forked}")
 
 
 if __name__ == "__main__":

@@ -214,9 +214,22 @@ from repro.layers.mlp import mlp
 from repro.layers.moe import moe_apply
 from repro.layers.norms import rmsnorm
 from repro.layers.rope import apply_rope, rope_freqs
+from repro.serving import sampling as SMP
 from repro.serving.scheduler import Request, Scheduler
 
 NEG_INF = -1e30
+
+
+def _sample_slots(slot_rngs, logits, temperature: float, top_p: float):
+    """Sample every slot's next token from ``logits [R, V]`` with the
+    per-slot stream keys ``slot_rngs [R, 2]``; returns ``(tokens [R],
+    advanced keys)``.  Greedy (temperature 0) is pure argmax and leaves
+    every stream untouched."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32), slot_rngs
+    return jax.vmap(
+        lambda k, lg: SMP.stream_sample(k, lg, temperature, top_p))(
+            slot_rngs, logits)
 
 
 def _joint_attend(q, k_pool, v_pool, valid_pool, buf_k, buf_v, buf_mask):
@@ -282,6 +295,11 @@ class PreemptedState:
     # memory, their content is pinned immutable by the other holders, and
     # resume re-attaches them verbatim ([L, NB] int32, -1 elsewhere)
     shared_table: "np.ndarray" = None
+    # the request's private sampling-stream key at spill time ([2]
+    # uint32) — restored verbatim so a preempted temperature>0 request
+    # resumes its stream exactly where it paused (schedule-invariance:
+    # preemption must not perturb the request's sampled tokens)
+    rng: "np.ndarray" = None
 
 
 @dataclasses.dataclass
@@ -320,6 +338,8 @@ class ResultTokens:
     ``*_host`` properties), which the orchestrator calls from an executor
     thread while the asyncio loop keeps streaming."""
 
+    packed = False                       # one tick per result
+
     def __init__(self, tick: int, tokens, valid: np.ndarray,
                  lengths: np.ndarray, logits, alloc_fail, cow_faults):
         self.tick = tick                 # 1-based tick index of this result
@@ -337,10 +357,11 @@ class ResultTokens:
     def block(self) -> "ResultTokens":
         """Wait for the D2H copies; host views cached idempotently."""
         if self._host is None:
+            cow = np.asarray(self._cow_faults).astype(np.int64)
             self._host = (np.asarray(self._tokens),
                           np.asarray(self._logits),
                           bool(np.any(np.asarray(self._alloc_fail))),
-                          int(np.asarray(self._cow_faults).sum()))
+                          int(cow.sum()), cow)
         return self
 
     @property
@@ -358,6 +379,93 @@ class ResultTokens:
     @property
     def cow_faults_host(self) -> int:
         return self.block()._host[3]
+
+    @property
+    def cow_per_slot_host(self) -> np.ndarray:
+        """Per-slot COW-fault counts [R] — lets the engine attribute
+        faults to forked slots (best-of-n divergence accounting)."""
+        return self.block()._host[4]
+
+
+class MultiResultTokens:
+    """Packed MULTI-tick result of one mega-dispatch (``packed=True``).
+
+    One ``generate`` call fused up to ``requested`` decode ticks in a
+    single ``lax.while_loop`` launch; this wraps everything the loop
+    produced — per-trip tokens ``[N, R]``, per-trip slot validity
+    ``[N, R]`` (a slot that finished via EOS/length inside the pack is
+    invalid from the NEXT trip on), per-trip logits ``[N, R, V]``, the
+    per-slot COW-fault counts, the OR'd allocation-failure flag, and the
+    trip count the loop actually executed (``trips_host < requested``
+    means a scheduling event — a slot finishing — exited the loop
+    early).  Rows ``trips_host..N-1`` of every buffer are zero-filled
+    and must be ignored.
+
+    Same ``copy_to_host_async`` contract as :class:`ResultTokens`:
+    D2H copies start at construction, nothing blocks until
+    :meth:`block` / the ``*_host`` properties.  The orchestrator drains
+    the pack trip by trip (fan-out order identical to ``trips`` separate
+    single-tick results); ``consume`` folds trip counts into
+    ``metrics["ticks"]`` and the host token mirror — host bookkeeping
+    is deferred until the pack lands, since the host cannot know the
+    executed trip count at dispatch time."""
+
+    packed = True
+
+    def __init__(self, base_tick: int, requested: int, tokens, valid,
+                 logits, alloc_fail, cow_faults, trips):
+        self.base_tick = base_tick       # metrics["ticks"] at dispatch
+        self.tick = base_tick + 1        # first fused tick (dispatch log)
+        self.requested = requested       # host-precomputed safe trip cap
+        self._tokens = tokens            # [N, R] int32 (device)
+        self._valid = valid              # [N, R] bool (device)
+        self._logits = logits            # [N, R, V] (device)
+        self._alloc_fail = alloc_fail
+        self._cow_faults = cow_faults    # [R] per-slot (device)
+        self._trips = trips              # int32 scalar (device)
+        self._host = None
+        for x in (tokens, valid, logits, alloc_fail, cow_faults, trips):
+            if hasattr(x, "copy_to_host_async"):
+                x.copy_to_host_async()
+
+    def block(self) -> "MultiResultTokens":
+        """Wait for the D2H copies; host views cached idempotently."""
+        if self._host is None:
+            self._host = (np.asarray(self._tokens),
+                          np.asarray(self._valid),
+                          np.asarray(self._logits),
+                          bool(np.any(np.asarray(self._alloc_fail))),
+                          np.asarray(self._cow_faults).astype(np.int64),
+                          int(np.asarray(self._trips)))
+        return self
+
+    @property
+    def tokens_host(self) -> np.ndarray:
+        return self.block()._host[0]
+
+    @property
+    def valid_host(self) -> np.ndarray:
+        return self.block()._host[1]
+
+    @property
+    def logits_host(self) -> np.ndarray:
+        return self.block()._host[2]
+
+    @property
+    def alloc_fail_host(self) -> bool:
+        return self.block()._host[3]
+
+    @property
+    def cow_per_slot_host(self) -> np.ndarray:
+        return self.block()._host[4]
+
+    @property
+    def cow_faults_host(self) -> int:
+        return int(self.block()._host[4].sum())
+
+    @property
+    def trips_host(self) -> int:
+        return self.block()._host[5]
 
 
 class ThinKVEngine:
@@ -377,6 +485,8 @@ class ThinKVEngine:
                  prefill_chunk: Optional[int] = None,
                  prefix_cache: bool = False,
                  prefix_cache_capacity: int = 64,
+                 ticks_per_dispatch: int = 1,
+                 allow_forks: bool = False,
                  mesh=None):
         assert cfg.model.family in (ArchFamily.DENSE, ArchFamily.MOE,
                                     ArchFamily.VLM), \
@@ -439,13 +549,21 @@ class ThinKVEngine:
                                       prefill_chunk % self.dims.G == 0), \
             "large prefill chunks must be 128-multiples aligned with commits"
         self.prefill_chunk = prefill_chunk
-        # trace-time flag: without the prefix cache no block is ever
-        # shared (refcounts stay 0/1), so the COW content diff in
-        # engine_advance is compiled out of the tick/prefill entirely
-        self._track_cow = bool(prefix_cache)
+        # trace-time flag: without the prefix cache OR forked generation
+        # no block is ever shared (refcounts stay 0/1), so the COW
+        # content diff in engine_advance is compiled out of the
+        # tick/prefill entirely.  ``allow_forks`` opts into sharing via
+        # ``fork_slot`` (samples_per_slot) with the cache off.
+        self._track_cow = bool(prefix_cache) or bool(allow_forks)
+        assert int(ticks_per_dispatch) >= 1, ticks_per_dispatch
+        self.ticks_per_dispatch = int(ticks_per_dispatch)
         # unjitted fns kept for jaxpr inspection (launch-count auditing)
         self._tick_fn = self._make_tick()
         self._tick = jax.jit(self._tick_fn)
+        self._megatick_fn = self._make_megatick() \
+            if self.ticks_per_dispatch > 1 else None
+        self._megatick = jax.jit(self._megatick_fn) \
+            if self._megatick_fn is not None else None
         self._prefill_chunk_fn = self._make_prefill_chunk()
         self._prefill_chunk = jax.jit(self._prefill_chunk_fn)
         self._prefill_big_fn = self._make_prefill_big() if prefill_chunk \
@@ -459,6 +577,7 @@ class ThinKVEngine:
         # compare these across engines regardless of preemption schedule)
         self.request_logits: Dict[int, List[np.ndarray]] = {}
         self.metrics: Dict[str, float] = {"ticks": 0, "tokens": 0,
+                                          "dispatches": 0,
                                           "prefill_tokens": 0,
                                           "prefill_chunks": 0,
                                           "prefill_big_chunks": 0,
@@ -468,6 +587,11 @@ class ThinKVEngine:
                                           "prefix_hits": 0,
                                           "prefix_tokens_skipped": 0,
                                           "cow_faults": 0,
+                                          "forks": 0,
+                                          "fork_cow_faults": 0,
+                                          "peak_refcount": 0,
+                                          "early_exit_finish": 0,
+                                          "early_exit_headroom": 0,
                                           "cancellations": 0}
         from repro.serving.prefix_cache import PrefixCache
         self.prefix_cache = PrefixCache(
@@ -478,6 +602,16 @@ class ThinKVEngine:
         self._queued_at: Dict[int, int] = {}            # arrival -> tick
         self._slot_ntok = np.zeros(cfg.max_seqs, np.int64)  # num_tokens mirror
         self._feed = np.zeros(cfg.max_seqs, np.int32)   # next-token inputs
+        # per-slot sampling stream keys [R, 2] — reseeded from request
+        # identity (fold_in(seed, arrival)) at prefill/fork time, so
+        # temperature>0 sampling is schedule-invariant (see
+        # ``serving.sampling``); placeholder split until then
+        self._slot_rng = jax.random.split(
+            jax.random.PRNGKey(cfg.seed), cfg.max_seqs)
+        # slots whose blocks may be shared through ``fork_slot`` (COW
+        # faults on these slots are best-of-n divergence, not prefix-
+        # cache traffic — metered separately as fork_cow_faults)
+        self._forked = np.zeros(cfg.max_seqs, bool)
         # worst-case fresh physical blocks one group commit can claim per
         # layer: G slots span at most ceil(G/BS) fully-free blocks
         self._cc = -(-self.dims.G // self.dims.BS)
@@ -568,7 +702,14 @@ class ThinKVEngine:
         return _joint_attend(q, kd, vd, valid, buf_k, buf_v, buf_mask)
 
     # ------------------------------------------------------------------
-    def _make_tick(self):
+    def _make_tick_core(self):
+        """The UNWRAPPED single-tick dataflow (embed → trunk → fused
+        attention → residual → ``engine_advance``), ending at the
+        next-token logits — NO sampling, NO shard_map.  Shared verbatim
+        by the single-tick program (:meth:`_make_tick`) and every trip
+        of the multi-tick mega-dispatch (:meth:`_make_megatick`), which
+        is what makes the two dispatch granularities bit-identical: they
+        trace the exact same per-tick computation."""
         cfg, tk, dims = self.mcfg, self.tk, self.dims
         lstar = self.lstar                   # static tuple of layer ids
         lstar_arr = jnp.asarray(self.lstar)
@@ -579,7 +720,7 @@ class ThinKVEngine:
         H_loc = dims.H // self._nshard       # kv heads per shard
         Hq_loc = cfg.num_heads // self._nshard
 
-        def tick(params, pool, tables, caches, tokens, active, rng):
+        def tick_core(params, pool, tables, caches, tokens, active):
             h = jax.vmap(lambda t: E.embed(params["embed"], t[None],
                                            cfg)[0])(tokens)      # [R, Dm]
             pos = caches.num_tokens                              # [R]
@@ -718,20 +859,108 @@ class ThinKVEngine:
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
             logits = softcap(E.unembed(params["embed"], h, cfg),
                              cfg.logit_softcap)                  # [R, V]
-            if self.cfg.temperature > 0:
-                rngs = jax.random.split(rng, R)
-                nxt = jax.vmap(lambda r, lg: jax.random.categorical(
-                    r, lg / self.cfg.temperature))(rngs, logits)
-            else:
-                nxt = jnp.argmax(logits, axis=-1)
-            return (nxt.astype(jnp.int32), pool, tables_out, caches,
-                    sparsity, logits, alloc_fail, cow_faults)
+            return (pool, tables_out, caches, sparsity, logits,
+                    alloc_fail, cow_faults)
+
+        return tick_core
+
+    def _make_tick(self):
+        """ONE decode tick + on-device sampling (the N=1 dispatch path):
+        the shared core followed by :func:`_sample_slots` over the
+        per-slot stream keys.  Greedy output is bit-identical to the
+        pre-sampling-refactor tick — the core computation is unchanged
+        and argmax ties break the same way."""
+        core = self._make_tick_core()
+        temp, top_p = self.cfg.temperature, self.cfg.top_p
+
+        def tick(params, pool, tables, caches, tokens, active, slot_rngs):
+            (pool, tables_out, caches, sparsity, logits, alloc_fail,
+             cow_faults) = core(params, pool, tables, caches, tokens,
+                                active)
+            nxt, slot_rngs = _sample_slots(slot_rngs, logits, temp, top_p)
+            return (nxt, pool, tables_out, caches, sparsity, logits,
+                    alloc_fail, cow_faults, slot_rngs)
 
         pool_s, cache_s, rep = self._spmd_specs(single_request=False)
         return self._wrap_spmd(
             tick,
             in_specs=(rep, pool_s, rep, cache_s, rep, rep, rep),
-            out_specs=(rep, pool_s, rep, cache_s, rep, rep, rep, rep))
+            out_specs=(rep, pool_s, rep, cache_s, rep, rep, rep, rep, rep))
+
+    def _make_megatick(self):
+        """Fuse up to ``ticks_per_dispatch`` decode ticks in ONE
+        ``lax.while_loop`` dispatch: each trip runs the shared tick core,
+        samples on-device (per-slot stream keys), and feeds the sampled
+        tokens straight back into the next trip's embedding — no token
+        ever visits the host inside the pack.
+
+        The loop exits only at SCHEDULING EVENTS, mirroring exactly the
+        decisions the host loop would take between single ticks:
+
+        * ``trips`` (operand) — the host-precomputed claim-safe trip
+          count (:meth:`_safe_decode_trips`, from the PR 3 watermark
+          machinery) capped at ``ticks_per_dispatch``; commit-claim
+          headroom or preemption pressure shows up as a smaller cap;
+        * a slot FINISHING — a sampled token equal to the slot's eos id,
+          or the slot reaching its ``remaining`` token allowance
+          (max_new_tokens), deactivates the slot and stops the loop
+          after that trip so the host can retire it and admit new work.
+
+        Slots finishing on the same trip all deactivate together; their
+        later-trip rows are invalid.  The per-trip active masks, trip
+        count, OR'd alloc-fail flag and per-slot COW totals come back
+        packed (:class:`MultiResultTokens`)."""
+        core = self._make_tick_core()
+        temp, top_p = self.cfg.temperature, self.cfg.top_p
+        N = self.ticks_per_dispatch
+        R = self.cfg.max_seqs
+        V = self.mcfg.vocab_size
+
+        def mega(params, pool, tables, caches, tokens, active, slot_rngs,
+                 remaining, eos, trips):
+
+            def cond(c):
+                t, active, stop = c[0], c[5], c[12]
+                return (t < trips) & jnp.any(active) & ~stop
+
+            def body(c):
+                (t, pool, tables, caches, tokens, active, slot_rngs,
+                 produced, toks, valid, logits_buf, fail, _stop, cow) = c
+                (pool, tables, caches, _, logits, fail_t, cow_t) = core(
+                    params, pool, tables, caches, tokens, active)
+                nxt, slot_rngs = _sample_slots(slot_rngs, logits, temp,
+                                               top_p)
+                toks = toks.at[t].set(nxt)
+                valid = valid.at[t].set(active)
+                logits_buf = logits_buf.at[t].set(logits)
+                produced = produced + active.astype(jnp.int32)
+                done = active & ((produced >= remaining) |
+                                 ((eos >= 0) & (nxt == eos)))
+                return (t + 1, pool, tables, caches, nxt, active & ~done,
+                        slot_rngs, produced, toks, valid, logits_buf,
+                        fail | jnp.any(fail_t), jnp.any(done),
+                        cow + cow_t.astype(jnp.int32))
+
+            init = (jnp.int32(0), pool, tables, caches, tokens, active,
+                    slot_rngs, jnp.zeros(R, jnp.int32),
+                    jnp.zeros((N, R), jnp.int32),
+                    jnp.zeros((N, R), bool),
+                    jnp.zeros((N, R, V), jnp.float32),
+                    jnp.bool_(False), jnp.bool_(False),
+                    jnp.zeros(R, jnp.int32))
+            (t, pool, tables, caches, _, _, slot_rngs, _, toks, valid,
+             logits_buf, fail, _, cow) = jax.lax.while_loop(cond, body,
+                                                            init)
+            return (toks, valid, logits_buf, pool, tables, caches,
+                    slot_rngs, t, fail, cow)
+
+        pool_s, cache_s, rep = self._spmd_specs(single_request=False)
+        return self._wrap_spmd(
+            mega,
+            in_specs=(rep, pool_s, rep, cache_s, rep, rep, rep, rep, rep,
+                      rep),
+            out_specs=(rep, rep, rep, pool_s, rep, cache_s, rep, rep, rep,
+                       rep))
 
     # ------------------------------------------------------------------
     def _make_prefill_chunk(self):
@@ -997,9 +1226,29 @@ class ThinKVEngine:
         R = self.cfg.max_seqs
         jaxpr = jax.make_jaxpr(self._tick_fn)(
             self.params, self.pool, self.tables, self.caches,
-            jnp.zeros(R, jnp.int32), jnp.ones(R, bool),
-            jax.random.PRNGKey(0))
+            jnp.zeros(R, jnp.int32), jnp.ones(R, bool), self._slot_rng)
         return K.count_pallas_launches(jaxpr)
+
+    def megatick_launch_count(self) -> tuple:
+        """``(per_trip, outside)`` pallas launch counts of the
+        mega-dispatch, audited on its jaxpr with the ``while``-aware
+        counter: launches per fused TICK (the while body) and launches
+        OUTSIDE the loop.  The single-launch contract extends to the
+        mega-dispatch as ``per_trip == tick_launch_count()`` (exactly 1
+        on the kernel backend, 0 on reference) with ``outside == 0`` —
+        fusing N ticks dispatches N kernel launches in one XLA program,
+        never N programs and never stray launches around the loop."""
+        assert self._megatick_fn is not None, \
+            "mega-dispatch disabled (ticks_per_dispatch == 1)"
+        R = self.cfg.max_seqs
+        jaxpr = jax.make_jaxpr(self._megatick_fn)(
+            self.params, self.pool, self.tables, self.caches,
+            jnp.zeros(R, jnp.int32), jnp.ones(R, bool), self._slot_rng,
+            jnp.full(R, 4, jnp.int32), jnp.full(R, -1, jnp.int32),
+            jnp.int32(self.ticks_per_dispatch))
+        one = K.count_pallas_launches(jaxpr, while_trips=1)
+        two = K.count_pallas_launches(jaxpr, while_trips=2)
+        return two - one, one - (two - one)
 
     def prefill_launch_count(self) -> int:
         """Per-g-chunk ``pallas_call`` launch count, audited on the
@@ -1089,9 +1338,12 @@ class ThinKVEngine:
     def _sharing_possible(self) -> bool:
         """Can ANY refcount currently exceed 1?  False while the prefix
         cache holds no entry, no hit ever mapped shared blocks into a
-        slot, and no spilled request retains shared references — the
-        headroom paths then skip the [L, NP] refcount transfer entirely
-        (every COW demand is provably zero)."""
+        slot, no spilled request retains shared references, and no
+        fork ever increfed a parent's blocks — the headroom paths then
+        skip the [L, NP] refcount transfer entirely (every COW demand
+        is provably zero)."""
+        if self.metrics["forks"] > 0:
+            return True
         return self.prefix_cache is not None and (
             bool(self.prefix_cache.entries)
             or self.metrics["prefix_hits"] > 0
@@ -1277,7 +1529,8 @@ class ThinKVEngine:
             cache=jax.tree.map(lambda x: np.asarray(x[i]), self.caches),
             tokens_out=slot.tokens_out,
             next_token=int(self._feed[i]),
-            shared_table=np.where(shared, table_np, -1).astype(np.int32))
+            shared_table=np.where(shared, table_np, -1).astype(np.int32),
+            rng=np.asarray(self._slot_rng[i]))
         # decref only the private blocks; the shared references ride
         # along in the spill (audited via audit_pool)
         self._release_slot(
@@ -1345,6 +1598,37 @@ class ThinKVEngine:
                 need -= demand.pop(victim.idx)
             self._preempt(victim)
 
+    def _safe_decode_trips(self, cap: int, active_idx) -> int:
+        """Largest trip count ``T <= cap`` whose worst-case commit claims
+        the free list provably covers — the host-precomputed exit bound
+        of the mega-dispatch, derived from the PR 3 watermark machinery.
+
+        Over ``T`` ticks slot ``i`` commits ``(ntok_i % G + T) // G``
+        times, each claiming at most ``ceil(G/BS)`` fresh blocks per
+        layer, plus at most ONE COW claim per shared block it maps (a
+        block COWs once — the copy is private).  Frees only add to the
+        free list mid-pack, so covering the total claim from today's
+        free count is sufficient.  ``T = 1`` is always safe: the caller
+        just ran :meth:`_ensure_decode_headroom`, which preempted until
+        one tick's commits fit."""
+        if cap <= 1:
+            return 1
+        rc = np.asarray(self.pool.refcount) \
+            if self._sharing_possible() else None
+        free = (rc == 0).sum(axis=1).astype(np.int64) if rc is not None \
+            else self._free_per_layer()
+        budget = int(free.min())
+        cow_extra = sum(self._cow_demand(i, rc) for i in active_idx)
+        G = self.dims.G
+        trips = 1
+        for T in range(2, cap + 1):
+            claims = sum((int(self._slot_ntok[i]) % G + T) // G
+                         for i in active_idx) * self._cc + cow_extra
+            if claims > budget:
+                break
+            trips = T
+        return trips
+
     def _ensure_prefill_headroom(self, idx: int, n_blocks: int) -> None:
         """Free headroom for one prefill-chunk commit of slot ``idx``
         (including its potential COW claims), decaying prefix-cache
@@ -1389,6 +1673,7 @@ class ThinKVEngine:
         self.tables = self.tables.at[i].set(CC.init_block_table(self.dims))
         self.caches = self._reset_slot(self.caches, jnp.int32(i))
         self._slot_ntok[i] = 0
+        self._forked[i] = False
 
     def audit_pool(self) -> Dict:
         """Assert the refcount accounting invariants across EVERY
@@ -1528,24 +1813,32 @@ class ThinKVEngine:
     # ``serving.orchestrator`` is the only host loop built on it)
     # ------------------------------------------------------------------
 
-    def prefill(self, prompt: np.ndarray, slot_idx: int, rng=None):
+    def prefill(self, prompt: np.ndarray, slot_idx: int, rng=None,
+                arrival: Optional[int] = None):
         """Chunked prefill of ``prompt`` into ``slot_idx`` + first-token
         sampling; returns ``(Prefix, rng)``.
 
         The returned :class:`Prefix` is RESIDENT: the committed KV lives
         in the pool under the slot's block table (prefix-cache hits and
-        headroom preemption of other slots all happened inside).  Greedy
-        sampling leaves ``rng`` untouched; temperature sampling splits it
-        exactly once, so the caller's rng stream is reproducible
-        regardless of how prefills interleave with ticks."""
+        headroom preemption of other slots all happened inside).
+
+        Sampling goes through the request's PRIVATE stream
+        (:func:`repro.serving.sampling.request_stream_key`): ``arrival``
+        seeds the stream, the boundary token is its first draw, and
+        decode ticks keep advancing it — so a request's temperature>0
+        tokens depend only on its identity and its logits sequence,
+        never on batch composition or dispatch granularity.  Greedy
+        consumes no randomness (and matches ``np.argmax`` bit-exactly).
+        The legacy ``rng`` argument is threaded through untouched for
+        caller-loop compatibility; ``arrival=None`` falls back to the
+        slot index (single-shot harnesses without a scheduler)."""
         logits = self._prefill(slot_idx, np.asarray(prompt))
-        if self.cfg.temperature > 0:
-            rng, sub = jax.random.split(rng)
-            tok = int(jax.random.categorical(
-                sub, jnp.asarray(logits) / self.cfg.temperature))
-        else:
-            tok = int(np.argmax(logits))
-        return Prefix(length=len(prompt), first_token=tok,
+        key = SMP.request_stream_key(
+            self.cfg.seed, slot_idx if arrival is None else arrival)
+        tok, key = SMP.stream_sample(key, jnp.asarray(logits),
+                                     self.cfg.temperature, self.cfg.top_p)
+        self._slot_rng = self._slot_rng.at[slot_idx].set(key)
+        return Prefix(length=len(prompt), first_token=int(tok),
                       logits=logits, slot=slot_idx), rng
 
     def detach_prefix(self, prefix: Prefix) -> Prefix:
@@ -1567,7 +1860,8 @@ class ThinKVEngine:
             mapped=table_np >= 0,
             cache=jax.tree.map(lambda x: np.asarray(x[i]), self.caches),
             tokens_out=0,
-            next_token=prefix.first_token)
+            next_token=prefix.first_token,
+            rng=np.asarray(self._slot_rng[i]))
         self._release_slot(i)
         prefix.slot = -1
         return prefix
@@ -1609,56 +1903,163 @@ class ThinKVEngine:
             lambda all_, one: all_.at[i].set(one), self.caches, cache_i)
         self._slot_ntok[i] = int(st.cache.num_tokens)
         self._feed[i] = st.next_token
+        if st.rng is not None:
+            self._slot_rng = self._slot_rng.at[i].set(jnp.asarray(st.rng))
         # the spilled planes came back as host numpy: re-partition the
         # restored state onto the mesh (head-sharded planes/buffers)
         self._place_state()
         return True
 
     def generate(self, rng):
-        """Dispatch ONE fused decode tick; returns ``(ResultTokens, rng)``.
+        """Dispatch one decode pack; returns ``(result, rng)``.
 
         Runs the preemption headroom check first (so the in-flight commit
-        cannot hit an allocation failure), then launches the tick over
-        every occupied slot and returns WITHOUT blocking: the
-        :class:`ResultTokens` has already started its D2H copies, and the
-        host is free to dispatch the next tick or a prefill while they
-        land.  Returns ``(None, rng)`` — rng untouched — when headroom
-        preempted every slot (nothing to tick).  The caller must route
-        the result through :meth:`consume` to fold the deferred
-        commit-failure flag and COW-fault count into the metrics."""
+        cannot hit an allocation failure), then launches over every
+        occupied slot and returns WITHOUT blocking: the result has
+        already started its D2H copies, and the host is free to dispatch
+        the next pack or a prefill while they land.  Returns ``(None,
+        rng)`` — rng untouched — when headroom preempted every slot
+        (nothing to tick).  The caller must route the result through
+        :meth:`consume` to fold the deferred device flags (and, for a
+        packed result, the executed trip count) into the metrics.
+
+        With ``ticks_per_dispatch == 1`` this is ONE fused tick
+        (:class:`ResultTokens`, sampling on-device, bit-identical greedy
+        output to the historical path).  With ``ticks_per_dispatch > 1``
+        it is the MEGA-DISPATCH: up to :meth:`_safe_decode_trips` ticks
+        fused in one ``lax.while_loop`` launch, sampled tokens feeding
+        the next trip's embedding without visiting the host, exiting
+        early only at scheduling events (:class:`MultiResultTokens`).
+        Host token bookkeeping is updated eagerly on the single-tick
+        path and deferred to :meth:`consume` on the packed path (the
+        host cannot know the executed trip count at dispatch time)."""
         self._ensure_decode_headroom()
         active = np.array([not s.free for s in self.scheduler.slots])
         if not active.any():
             return None, rng
-        rng, sub = jax.random.split(rng)
-        (nxt, self.pool, self.tables, self.caches, _, logits,
-         alloc_fail, cow_faults) = \
-            self._tick(self.params, self.pool, self.tables, self.caches,
-                       jnp.asarray(self._feed), jnp.asarray(active), sub)
-        self.metrics["ticks"] += 1
-        self.metrics["tokens"] += int(active.sum())
-        self._slot_ntok[active] += 1
-        return ResultTokens(tick=int(self.metrics["ticks"]), tokens=nxt,
-                            valid=active, lengths=self._slot_ntok.copy(),
-                            logits=logits, alloc_fail=alloc_fail,
-                            cow_faults=cow_faults), rng
+        # split once per dispatch, exactly like the historical loop —
+        # slot streams own the sampling randomness now, but callers'
+        # rng sequences (and the differential trace suite's decision
+        # order) stay unperturbed
+        rng, _ = jax.random.split(rng)
+        self.metrics["dispatches"] += 1
+        if self.ticks_per_dispatch == 1:
+            (nxt, self.pool, self.tables, self.caches, _, logits,
+             alloc_fail, cow_faults, self._slot_rng) = \
+                self._tick(self.params, self.pool, self.tables,
+                           self.caches, jnp.asarray(self._feed),
+                           jnp.asarray(active), self._slot_rng)
+            self.metrics["ticks"] += 1
+            self.metrics["tokens"] += int(active.sum())
+            self._slot_ntok[active] += 1
+            return ResultTokens(tick=int(self.metrics["ticks"]),
+                                tokens=nxt, valid=active,
+                                lengths=self._slot_ntok.copy(),
+                                logits=logits, alloc_fail=alloc_fail,
+                                cow_faults=cow_faults), rng
+        idx = [s.idx for s in self.scheduler.active_slots()]
+        trips = self._safe_decode_trips(self.ticks_per_dispatch, idx)
+        if trips < self.ticks_per_dispatch:
+            self.metrics["early_exit_headroom"] += 1
+        R = self.cfg.max_seqs
+        remaining = np.zeros(R, np.int32)
+        eos = np.full(R, -1, np.int32)
+        for s in self.scheduler.active_slots():
+            remaining[s.idx] = max(
+                1, int(s.request.max_new_tokens) - int(s.tokens_out))
+            if s.request.eos_token is not None:
+                eos[s.idx] = int(s.request.eos_token)
+        (toks, valid, logits_buf, self.pool, self.tables, self.caches,
+         self._slot_rng, t, fail, cow) = self._megatick(
+            self.params, self.pool, self.tables, self.caches,
+            jnp.asarray(self._feed), jnp.asarray(active),
+            self._slot_rng, jnp.asarray(remaining), jnp.asarray(eos),
+            jnp.int32(trips))
+        return MultiResultTokens(base_tick=int(self.metrics["ticks"]),
+                                 requested=trips, tokens=toks,
+                                 valid=valid, logits=logits_buf,
+                                 alloc_fail=fail, cow_faults=cow,
+                                 trips=t), rng
 
-    def consume(self, res: ResultTokens) -> ResultTokens:
-        """Fold a completed tick's deferred device flags into the host
-        metrics (blocking on its D2H copies if they have not landed).
-        The allocation-failure assert lives here — after the overlapped
-        transfer — instead of on the dispatch path."""
+    def consume(self, res) -> "ResultTokens | MultiResultTokens":
+        """Fold a completed dispatch's deferred device flags into the
+        host metrics (blocking on its D2H copies if they have not
+        landed).  The allocation-failure assert lives here — after the
+        overlapped transfer — instead of on the dispatch path.
+
+        A PACKED result additionally settles the bookkeeping the
+        dispatch deferred: the executed trip count lands in
+        ``metrics["ticks"]``, per-slot valid-token counts advance the
+        host token mirror (``_slot_ntok``), and each trip's logits
+        become one decode trace entry — indistinguishable from ``trips``
+        single-tick results.  Safe to defer because the orchestrator
+        consumes a pack before the next ``generate``/``prefill`` reads
+        any of that state.  COW faults on FORKED slots are attributed
+        to ``metrics["fork_cow_faults"]`` (best-of-n divergence cost)."""
         if res.alloc_fail_host:
             raise AssertionError(
                 "decode commit allocation failed despite preemption "
                 "headroom (pool accounting bug — data would have been "
                 "dropped)")
-        self.metrics["cow_faults"] += res.cow_faults_host
-        if self.record_logits:
+        cow = res.cow_per_slot_host
+        self.metrics["cow_faults"] += int(cow.sum())
+        self.metrics["fork_cow_faults"] += int(cow[self._forked].sum())
+        if res.packed:
+            trips = res.trips_host
+            if trips < res.requested:
+                self.metrics["early_exit_finish"] += 1
+            counts = res.valid_host[:trips].sum(axis=0).astype(np.int64)
+            self.metrics["ticks"] += trips
+            self.metrics["tokens"] += int(counts.sum())
+            self._slot_ntok += counts
+            if self.record_logits:
+                for t in range(trips):
+                    self.trace.append({"kind": "decode",
+                                       "active": res.valid_host[t].copy(),
+                                       "logits": res.logits_host[t]})
+        elif self.record_logits:
             self.trace.append({"kind": "decode",
                                "active": res.valid.copy(),
                                "logits": res.logits_host})
         return res
+
+    def fork_slot(self, src: int, dst: int, arrival: int) -> None:
+        """Fork slot ``src``'s sequence into free slot ``dst`` by
+        REFERENCE: every pool block the parent maps gains one refcount
+        (``incref_blocks`` — zero plane copies), the block table and
+        per-slot cache pytree rows are duplicated, and the child
+        inherits the parent's feed token and generated-length mirror —
+        so the child continues from the parent's prompt + CoT-so-far.
+        The shared blocks are immutable from here: the first commit
+        either side lands on one COW-faults a private copy (tracked in
+        ``metrics["fork_cow_faults"]``), which is how ``samples_per_slot``
+        best-of-n divergence is paid for — one block at a time, never a
+        full-cache copy.
+
+        ``arrival`` (the child request's unique stamp) seeds the child's
+        PRIVATE sampling stream, so at temperature>0 the child diverges
+        from the parent on its first sampled token; at temperature 0
+        both stay greedy and emit identical tokens — the fork-parity
+        property the CI gate pins."""
+        assert self._track_cow, \
+            "fork_slot requires allow_forks=True (COW write tracking)"
+        assert self._slot_ntok[src] > 0, "fork source never started"
+        assert self._slot_ntok[dst] == 0, f"fork target slot {dst} in use"
+        self.pool = CC.incref_blocks(self.dims, self.pool,
+                                     self.tables[src])
+        self.tables = self.tables.at[dst].set(self.tables[src])
+        self.caches = jax.tree.map(lambda a: a.at[dst].set(a[src]),
+                                   self.caches)
+        self._slot_ntok[dst] = self._slot_ntok[src]
+        self._feed[dst] = self._feed[src]
+        self._slot_rng = self._slot_rng.at[dst].set(
+            SMP.request_stream_key(self.cfg.seed, arrival))
+        self._forked[src] = True
+        self._forked[dst] = True
+        self.metrics["forks"] += 1
+        self.metrics["peak_refcount"] = max(
+            self.metrics["peak_refcount"],
+            int(np.asarray(self.pool.refcount).max()))
 
     def free_resource(self, slot_idx: int) -> None:
         """Release EVERY pool reference slot ``slot_idx`` holds — private

@@ -141,6 +141,7 @@ class Orchestrator:
         self.events: List[Dict] = []                  # the metrics log
         self.request_metrics: Dict[int, Dict] = {}    # arrival -> timings
         self._cancel_pending: List[Request] = []
+        self._pending_forks: List[tuple] = []  # (parent_req, child_stream)
         self._tick_arrivals: List[tuple] = []  # (after_tick, seq, req, st)
         self._arrival_event = asyncio.Event()
         self._closed = False
@@ -160,8 +161,23 @@ class Orchestrator:
                       priority=priority)
         self._seq += 1
         stream = TokenStream(self, req)
+        stream.forks = []          # child streams (samples_per_slot > 1)
         self._stream_of[id(req)] = stream
         return stream
+
+    def _attach_forks(self, stream: TokenStream,
+                      samples_per_slot: int) -> None:
+        """Create ``samples_per_slot - 1`` fork-child streams sharing the
+        parent's prompt/limits.  Children never pass through the
+        admission queue: once the parent is mid-decode and a slot is
+        free, the engine COW-forks the parent's cache into the child's
+        slot (:meth:`_try_forks`) and the child diverges from there —
+        best-of-n over a shared prompt + chain-of-thought prefix."""
+        req = stream.request
+        for _ in range(max(0, int(samples_per_slot) - 1)):
+            stream.forks.append(self._make_request(
+                req.prompt, req.max_new_tokens, req.eos_token,
+                req.priority, None))
 
     def _submit_now(self, stream: TokenStream) -> None:
         eng = self.engine
@@ -169,23 +185,42 @@ class Orchestrator:
         eng.scheduler.submit(req)
         eng._queued_at[req.arrival] = eng.metrics["ticks"]
         self.streams[req.arrival] = stream
-        self.request_metrics[req.arrival] = {
+        self.request_metrics[req.arrival] = self._fresh_metrics()
+        self._log("submit", arrival=req.arrival)
+        # stamp fork children NOW, in submission order: the stamp seeds
+        # each child's private sampling stream, so stamping at fork-LAND
+        # time would make sampled tokens depend on when a slot freed up
+        for child in stream.forks:
+            creq = child.request
+            eng.scheduler.stamp(creq)
+            eng._queued_at[creq.arrival] = eng.metrics["ticks"]
+            self.streams[creq.arrival] = child
+            self.request_metrics[creq.arrival] = self._fresh_metrics()
+            self._log("submit", arrival=creq.arrival,
+                      fork_of=req.arrival)
+            self._pending_forks.append((req, child))
+        self._arrival_event.set()
+
+    def _fresh_metrics(self) -> Dict:
+        return {
             "submit_wall": time.perf_counter(),
-            "submit_tick": int(eng.metrics["ticks"]),
+            "submit_tick": int(self.engine.metrics["ticks"]),
             "admit_wall": None, "admit_tick": None,
             "first_token_wall": None, "first_token_tick": None,
             "last_token_wall": None, "tokens": 0, "token_ticks": []}
-        self._log("submit", arrival=req.arrival)
-        self._arrival_event.set()
 
     def submit(self, prompt, max_new_tokens: int = 256,
                eos_token: Optional[int] = None, priority: int = 0,
-               uid: Optional[int] = None) -> TokenStream:
+               uid: Optional[int] = None,
+               samples_per_slot: int = 1) -> TokenStream:
         """Submit one request now; returns its :class:`TokenStream`.
         Callable before ``serve`` starts or from any concurrent task
-        while it runs (wall-clock open-loop arrivals)."""
+        while it runs (wall-clock open-loop arrivals).
+        ``samples_per_slot=n`` attaches ``n - 1`` COW-forked sibling
+        streams (``stream.forks``) sharing the prompt + CoT prefix."""
         stream = self._make_request(prompt, max_new_tokens, eos_token,
                                     priority, uid)
+        self._attach_forks(stream, samples_per_slot)
         self._submit_now(stream)
         return stream
 
@@ -193,7 +228,8 @@ class Orchestrator:
                          max_new_tokens: int = 256,
                          eos_token: Optional[int] = None,
                          priority: int = 0,
-                         uid: Optional[int] = None) -> TokenStream:
+                         uid: Optional[int] = None,
+                         samples_per_slot: int = 1) -> TokenStream:
         """Deterministic open-loop arrival: the serve loop itself submits
         the request once ``after_tick`` engine ticks have completed
         (tick-space pacing — independent of request completions and
@@ -202,6 +238,7 @@ class Orchestrator:
         the request lands."""
         stream = self._make_request(prompt, max_new_tokens, eos_token,
                                     priority, uid)
+        self._attach_forks(stream, samples_per_slot)
         self._tick_arrivals.append((int(after_tick), len(self._tick_arrivals),
                                     stream))
         self._tick_arrivals.sort(key=lambda t: (t[0], t[1]))
@@ -255,6 +292,12 @@ class Orchestrator:
             self._inject_due_arrivals()
             self._process_cancellations()
             if not sch.busy():
+                if self._pending_forks:
+                    # idle with only fork children left: their parents
+                    # are terminal, so land the prefill fallbacks now
+                    self._try_forks()
+                    if sch.busy():
+                        continue
                 if self._tick_arrivals:
                     # idle with only tick-scheduled arrivals left: ticks
                     # cannot advance, so inject the earliest batch now
@@ -300,10 +343,26 @@ class Orchestrator:
             await asyncio.get_running_loop().run_in_executor(None, res.block)
             eng.consume(res)
             self._log("consume", tick=res.tick)
-            toks, logits = res.tokens_host, res.logits_host
-            for slot in sch.active_slots():
-                self._record_logits(slot.request, logits[slot.idx])
-                self._finish_token(slot, int(toks[slot.idx]), res.tick)
+            if getattr(res, "packed", False):
+                # drain the multi-tick pack trip by trip — fan-out order
+                # (and retirement timing) identical to trips separate
+                # single-tick results; finished slots fall out of
+                # active_slots() for the remaining trips
+                toks, valid = res.tokens_host, res.valid_host
+                logits = res.logits_host
+                for t in range(res.trips_host):
+                    tick_t = res.base_tick + t + 1
+                    for slot in sch.active_slots():
+                        if valid[t][slot.idx]:
+                            self._record_logits(slot.request,
+                                                logits[t][slot.idx])
+                            self._finish_token(
+                                slot, int(toks[t][slot.idx]), tick_t)
+            else:
+                toks, logits = res.tokens_host, res.logits_host
+                for slot in sch.active_slots():
+                    self._record_logits(slot.request, logits[slot.idx])
+                    self._finish_token(slot, int(toks[slot.idx]), res.tick)
             await self._admit_and_prefill()
         eng.metrics["wall_s"] = time.perf_counter() - self._t0
         return sch.finished
@@ -321,9 +380,76 @@ class Orchestrator:
     # admission (mirrors the old loop's admit_and_prefill exactly)
     # ------------------------------------------------------------------
 
+    def _try_forks(self) -> None:
+        """Land pending ``samples_per_slot`` fork children.
+
+        A child lands as soon as its parent is mid-decode (at least one
+        token generated — there must be state to fork) AND a slot is
+        free: the engine COW-forks the parent's cache/table into the
+        slot (``fork_slot`` — refcount++, zero plane copies) and the
+        child is placed mid-decode, inheriting the parent's emitted
+        tokens.  Runs BEFORE each admission sweep, so a freed slot goes
+        to a waiting fork ahead of the queue.  If the parent reached a
+        terminal state first, the child falls back to a fresh prefill of
+        the shared prompt through the normal queue (same greedy tokens,
+        just without the shared-cache saving)."""
+        eng = self.engine
+        sch = eng.scheduler
+        if not self._pending_forks:
+            return
+        still = []
+        for parent_req, child_stream in self._pending_forks:
+            child = child_stream.request
+            if child_stream.cancelled or child.done:
+                continue
+            if parent_req.state in (RequestState.FINISHED,
+                                    RequestState.CANCELLED):
+                sch.enqueue_stamped(child)
+                self._log("fork_fallback", arrival=child.arrival)
+                continue
+            pslot = next((s for s in sch.slots
+                          if s.request is parent_req), None)
+            if pslot is None or eng._slot_ntok[pslot.idx] == 0:
+                still.append((parent_req, child_stream))
+                continue        # parent queued/preempted or not started
+            slot = next((s for s in sch.slots if s.free), None)
+            if slot is None:
+                still.append((parent_req, child_stream))
+                continue
+            eng.fork_slot(pslot.idx, slot.idx, child.arrival)
+            sch.place(child, slot, tokens_out=pslot.tokens_out)
+            child.output = list(parent_req.output)
+            # the inherited prefix is part of the child's emitted
+            # sequence: deliver it through the stream (and timing
+            # metrics) at the fork tick, exactly once
+            now = time.perf_counter()
+            tick = eng.metrics["ticks"]
+            rm = self.request_metrics.get(child.arrival)
+            stream = self.streams.get(child.arrival)
+            for tok in child.output:
+                if rm is not None:
+                    rm["tokens"] += 1
+                    rm["token_ticks"].append(tick)
+                    rm["last_token_wall"] = now
+                    if rm["first_token_wall"] is None:
+                        rm["first_token_wall"] = now
+                        rm["first_token_tick"] = tick
+                if stream is not None and not stream.cancelled:
+                    stream._queue.put_nowait((tick, tok))
+            eng.metrics["admissions"] += 1
+            eng.metrics["queue_wait_ticks"] += \
+                eng.metrics["ticks"] - eng._queued_at.pop(
+                    child.arrival, eng.metrics["ticks"])
+            self._mark_admitted(child)
+            self._log("fork", arrival=child.arrival,
+                      parent=parent_req.arrival,
+                      at_tokens=int(pslot.tokens_out))
+        self._pending_forks = still
+
     async def _admit_and_prefill(self) -> None:
         eng = self.engine
         sch = eng.scheduler
+        self._try_forks()
         # keep admitting while prefill can immediately retire requests
         while True:
             if not sch.queue or all(not s.free for s in sch.slots):
@@ -362,11 +488,13 @@ class Orchestrator:
                                        if s is not slot
                                        and s.tokens_out > 0))
                 prefix, self._rng = eng.prefill(req.prompt, slot.idx,
-                                                self._rng)
+                                                self._rng,
+                                                arrival=req.arrival)
                 eng.insert(prefix, slot.idx)
                 self._record_logits(req, prefix.logits)
                 self._finish_token(slot, prefix.first_token,
                                    int(eng.metrics["ticks"]))
+        self._try_forks()
 
     def _adopt_existing(self) -> None:
         """Requests submitted straight to the engine (``engine.submit``)

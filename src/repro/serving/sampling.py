@@ -1,0 +1,98 @@
+"""On-device token sampling shared by prefill and the decode tick.
+
+One helper, :func:`sample_tokens`, owns EVERY sampling decision in the
+serving engine — the prefill boundary token, the single-tick decode
+path, and every trip of the multi-tick mega-dispatch — so the three
+call sites cannot drift (they used to: prefill sampled on host with
+``np.argmax`` / a host-side categorical while the tick sampled on
+device).
+
+Semantics (``temperature`` and ``top_p`` are STATIC Python floats —
+they select the traced program, they are not operands):
+
+* ``temperature <= 0`` — greedy: ``argmax`` over the vocab, rng
+  untouched (may be ``None``).  Ties break to the lowest index, matching
+  ``np.argmax`` bit-exactly.
+* ``temperature > 0, top_p >= 1`` — plain temperature sampling:
+  ``jax.random.categorical(rng, logits / temperature)``.
+* ``top_p < 1`` — nucleus sampling: probabilities are formed from the
+  temperature-scaled logits, tokens are taken in descending-probability
+  order while the mass strictly BEFORE a token is below ``top_p`` (the
+  top token always survives), everything else is masked to -inf, and
+  the categorical draws from the renormalized survivors.
+
+DETERMINISM CONTRACT.  Sampling is a pure function of ``(rng, logits,
+temperature, top_p)`` — no device-dependent reductions — so a sampled
+token is bit-reproducible across process restarts, mesh sizes (the
+engine samples on replicated logits with replicated keys), and dispatch
+granularities.  The engine gives every request its OWN key stream,
+seeded from request identity via :func:`request_stream_key` and
+advanced once per sampled token (:func:`stream_sample`), which makes
+temperature>0 outputs SCHEDULE-INVARIANT: a request's tokens depend
+only on its prompt and its own stream, never on which other requests
+shared the batch, when it was admitted, preempted, or how many ticks
+were fused per dispatch.  The trace suite pins exactly that.
+
+As ``temperature → 0`` the categorical converges to greedy bit-exactly:
+once the gap to the runner-up exceeds ~``temperature * 88`` nats the
+runner-up's scaled probability underflows to exactly 0.0 in float32 and
+the Gumbel draw cannot flip the winner (property-tested in
+``tests/test_sampling.py``).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def _top_p_filter(scaled: jax.Array, top_p: float) -> jax.Array:
+    """Mask temperature-scaled logits ``[V]`` outside the top-p nucleus.
+
+    A token survives iff the probability mass of strictly-better tokens
+    is below ``top_p`` (the standard nucleus rule: keep the smallest
+    prefix of the descending-probability order whose mass reaches
+    ``top_p``; the argmax always survives, so the filter can never
+    produce an empty support)."""
+    order = jnp.argsort(-scaled)                        # descending
+    probs = jax.nn.softmax(scaled[order])
+    mass_before = jnp.cumsum(probs) - probs
+    keep_sorted = mass_before < top_p
+    keep = jnp.zeros_like(keep_sorted).at[order].set(keep_sorted)
+    return jnp.where(keep, scaled, NEG_INF)
+
+
+def sample_tokens(rng, logits: jax.Array, temperature: float,
+                  top_p: float = 1.0) -> jax.Array:
+    """Sample one token id from ``logits [V]`` (see module docstring).
+
+    ``rng`` may be ``None`` when ``temperature <= 0`` (greedy consumes
+    no randomness).  Batched use is ``jax.vmap`` with per-row keys —
+    the engine vmaps over request slots."""
+    if temperature <= 0:
+        return jnp.argmax(logits, axis=-1).astype(jnp.int32)
+    scaled = logits / temperature
+    if top_p < 1.0:
+        scaled = _top_p_filter(scaled, top_p)
+    return jax.random.categorical(rng, scaled).astype(jnp.int32)
+
+
+def request_stream_key(seed: int, arrival: int) -> jax.Array:
+    """The root of a request's private sampling stream: the engine seed
+    folded with the request's (unique) arrival stamp.  Derived from
+    request IDENTITY, not from schedule position — the foundation of the
+    schedule-invariance contract above."""
+    return jax.random.fold_in(jax.random.PRNGKey(seed), arrival)
+
+
+def stream_sample(key: jax.Array, logits: jax.Array, temperature: float,
+                  top_p: float = 1.0):
+    """Advance a request stream by one draw: split ``key``, sample from
+    the subkey, return ``(token, next_key)``.  Greedy advances nothing
+    (the stream stays put so a temperature-0 run never consumes
+    randomness)."""
+    if temperature <= 0:
+        return sample_tokens(None, logits, temperature), key
+    key, sub = jax.random.split(key)
+    return sample_tokens(sub, logits, temperature, top_p), key

@@ -112,6 +112,46 @@ class Scheduler:
         self.queue.append(req)
         self.queue.sort(key=_queue_key)
 
+    def stamp(self, req: Request) -> None:
+        """Assign a unique arrival stamp WITHOUT queueing the request.
+
+        Fork children (``samples_per_slot``) never pass through the
+        queue — they are placed straight into a slot by :meth:`place`
+        once their parent's state exists to fork from — but they still
+        need a stamp: it keys the engine's per-request bookkeeping and
+        seeds the request's private sampling stream.  Stamping at
+        SUBMISSION time (not at fork time) keeps the stamp order — and
+        therefore every child's sampled tokens — independent of when
+        the fork actually lands."""
+        assert req.arrival < 0, "request already stamped"
+        req.arrival = self._arrivals
+        self._stamps.add(req.arrival)
+        self._arrivals += 1
+
+    def place(self, req: Request, slot: Slot, tokens_out: int = 0) -> None:
+        """Put a stamped request straight into a FREE slot (fork
+        children: the engine has already forked the parent's device
+        state into the slot, so the request starts mid-decode with
+        ``tokens_out`` tokens already accounted)."""
+        assert slot.free, f"slot {slot.idx} is occupied"
+        assert req.arrival >= 0, "place() needs a stamped request"
+        req.state = RequestState.RUNNING
+        slot.request = req
+        slot.tokens_out = tokens_out
+
+    def enqueue_stamped(self, req: Request) -> None:
+        """Queue a request that was stamped via :meth:`stamp` but never
+        placed — the fork FALLBACK: the parent finished (or was
+        cancelled) before a slot freed up, so the child re-derives its
+        sequence from a fresh prefill of the shared prompt instead of a
+        COW fork.  Keeps the original stamp (it already keys the
+        request's stream seed and bookkeeping)."""
+        assert req.arrival >= 0 and req.arrival in self._stamps, \
+            "enqueue_stamped needs a stamp()-issued request"
+        req.state = RequestState.WAITING
+        self.queue.append(req)
+        self.queue.sort(key=_queue_key)
+
     def admit(self, can_admit: Optional[Callable[[Request], bool]] = None
               ) -> List[Slot]:
         """Move queued requests into free slots; returns newly filled.

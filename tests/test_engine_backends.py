@@ -114,8 +114,7 @@ def test_decode_tick_is_single_pallas_launch(rng):
         R = eng.cfg.max_seqs
         jaxpr = jax.make_jaxpr(eng._tick_fn)(
             eng.params, eng.pool, eng.tables, eng.caches,
-            jnp.zeros(R, jnp.int32), jnp.ones(R, bool),
-            jax.random.PRNGKey(0))
+            jnp.zeros(R, jnp.int32), jnp.ones(R, bool), eng._slot_rng)
         assert ops.count_pallas_launches(jaxpr) == expect, eng.backend
 
 

@@ -1,0 +1,112 @@
+"""Unified on-device sampling (``serving/sampling.py``).
+
+One helper owns every sampling decision in the engine — prefill boundary,
+single tick, mega-dispatch trips — so these tests pin its semantics once:
+
+* greedy (temperature <= 0) is bit-exactly ``np.argmax`` and consumes no
+  randomness;
+* temperature -> 0 CONVERGES to greedy bit-exactly (property test: once
+  the runner-up gap exceeds ~temperature * 88 nats its scaled probability
+  underflows to 0.0f and the Gumbel draw cannot flip the winner);
+* top-p keeps exactly the nucleus (smallest descending-probability prefix
+  reaching ``top_p``); the argmax always survives;
+* per-request stream keys are pure functions of (seed, arrival) and the
+  draw sequence — schedule-invariant by construction.
+"""
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from _prop import given, settings, strategies as st
+from repro.serving import sampling as SMP
+
+
+def _logits(rng, v=64, scale=4.0):
+    return jnp.asarray(rng.standard_normal(v) * scale, jnp.float32)
+
+
+def test_greedy_matches_np_argmax_bitexact(rng):
+    for _ in range(10):
+        logits = _logits(rng)
+        tok = SMP.sample_tokens(None, logits, temperature=0.0)
+        assert int(tok) == int(np.argmax(np.asarray(logits)))
+
+
+def test_greedy_ties_break_low_like_np_argmax():
+    logits = jnp.zeros(16, jnp.float32).at[3].set(1.0).at[9].set(1.0)
+    tok = SMP.sample_tokens(None, logits, temperature=0.0)
+    assert int(tok) == 3 == int(np.argmax(np.asarray(logits)))
+
+
+@settings(max_examples=25, deadline=None)
+@given(st.integers(0, 2**31 - 1), st.integers(8, 128))
+def test_temperature_to_zero_converges_to_greedy(seed, vocab):
+    """Property: for every (key, logits) pair, a small-enough temperature
+    samples the argmax bit-exactly — scaled runner-up mass underflows to
+    exactly 0.0 in float32, so the categorical has a single support
+    point regardless of the Gumbel draw."""
+    rng = np.random.default_rng(seed)
+    logits = _logits(rng, v=vocab)
+    key = jax.random.PRNGKey(seed)
+    greedy = int(SMP.sample_tokens(None, logits, temperature=0.0))
+    # gap * 88 nats: float32 exp underflow threshold with margin
+    gap = float(np.sort(np.asarray(logits))[-1]
+                - np.sort(np.asarray(logits))[-2])
+    temp = max(gap, 1e-3) / 100.0
+    for sub in jax.random.split(key, 4):
+        assert int(SMP.sample_tokens(sub, logits, temp)) == greedy
+
+
+def test_temperature_one_samples_proportionally(rng):
+    """Sanity (not a distribution test): with two near-certain tokens the
+    sampler only ever returns those two, and returns both across keys."""
+    logits = jnp.full(32, -30.0).at[5].set(2.0).at[11].set(2.0)
+    seen = {int(SMP.sample_tokens(k, logits, 1.0))
+            for k in jax.random.split(jax.random.PRNGKey(0), 64)}
+    assert seen == {5, 11}
+
+
+def test_top_p_masks_outside_nucleus():
+    """top_p below the runner-up's cumulative reach forces greedy; the
+    argmax survives even at top_p ~ 0."""
+    logits = jnp.asarray([3.0, 2.0, 1.0, -5.0], jnp.float32)
+    probs = np.asarray(jax.nn.softmax(logits))
+    for key in jax.random.split(jax.random.PRNGKey(1), 32):
+        tok = SMP.sample_tokens(key, logits, 1.0, top_p=probs[0] * 0.5)
+        assert int(tok) == 0
+    # nucleus of two: mass before token 1 (= p0) < top_p < p0 + p1
+    seen = {int(SMP.sample_tokens(k, logits, 1.0,
+                                  top_p=float(probs[0]) + 1e-4))
+            for k in jax.random.split(jax.random.PRNGKey(2), 64)}
+    assert seen == {0, 1}
+
+
+def test_stream_sample_greedy_leaves_key_untouched():
+    key = jax.random.PRNGKey(7)
+    logits = jnp.asarray([0.0, 1.0, 2.0], jnp.float32)
+    tok, key2 = SMP.stream_sample(key, logits, temperature=0.0)
+    assert int(tok) == 2
+    assert (np.asarray(key) == np.asarray(key2)).all()
+
+
+def test_stream_sample_advances_key_per_draw(rng):
+    """temperature > 0 advances the stream once per draw, and the token
+    sequence is a pure function of (seed, arrival, logits sequence)."""
+    logits_seq = [_logits(rng) for _ in range(5)]
+
+    def roll(seed, arrival):
+        key = SMP.request_stream_key(seed, arrival)
+        out = []
+        for lg in logits_seq:
+            tok, key = SMP.stream_sample(key, lg, 0.9, top_p=0.95)
+            out.append(int(tok))
+        return out
+
+    assert roll(0, 3) == roll(0, 3)          # reproducible
+    assert roll(0, 3) != roll(0, 4) or roll(0, 3) != roll(1, 3)
+
+
+def test_request_stream_key_unique_per_arrival():
+    keys = {tuple(np.asarray(SMP.request_stream_key(0, a)))
+            for a in range(32)}
+    assert len(keys) == 32

@@ -59,7 +59,7 @@ if not has_mesh_devices():
         run_in_mesh_subprocess(
             __file__,
             extra_args=("--update-golden",) if update_golden else (),
-            timeout=4500)
+            timeout=7200)
 else:
     import dataclasses
 
@@ -77,7 +77,7 @@ else:
 
     MESH_N = 8
 
-    def trace_config(slots=3):
+    def trace_config(slots=3, temperature=0.0, top_p=1.0):
         """Tiny head-shardable serving config: 8 kv heads (divisible by
         the 8-device mesh), 2 layers, aggressive tau/budget so refresh,
         TBE, and COW all fire within a short trace."""
@@ -87,7 +87,7 @@ else:
                           token_budget=32, retention_schedule=(16, 8, 4),
                           min_retention=4, max_segments=64, kmeans_iters=2)
         return ServeConfig(model=mcfg, thinkv=tk, max_seqs=slots,
-                           temperature=0.0)
+                           temperature=temperature, top_p=top_p)
 
     # trace shapes: the PRESSURE trace oversubscribes the pool so the
     # watermark/preempt/COW machinery all fire (a long prompt is kept
@@ -124,14 +124,14 @@ else:
                 "max_new": spec["max_new"],
                 "pool_frac": spec["pool_frac"]}
 
-    def build_engine(scfg, backend, mesh, trace, params=None):
+    def build_engine(scfg, backend, mesh, trace, params=None, **eng_kw):
         dims = CC.make_dims(scfg.thinkv, scfg.model.num_layers,
                             scfg.model.num_kv_heads, scfg.model.head_dim)
         pool_blocks = max(
             int(scfg.max_seqs * dims.NB * trace["pool_frac"]), 1)
         return ThinKVEngine(scfg, params=params, backend=backend,
                             pool_blocks=pool_blocks, record_logits=True,
-                            prefix_cache=True, mesh=mesh)
+                            prefix_cache=True, mesh=mesh, **eng_kw)
 
     _METRIC_KEYS = ("ticks", "tokens", "preemptions", "resumes",
                     "prefix_hits", "prefix_tokens_skipped", "cow_faults",
@@ -148,6 +148,11 @@ else:
             "logits": dict(eng.request_logits),
             "audit": eng.audit_pool(),
             "metrics": {k: int(eng.metrics[k]) for k in _METRIC_KEYS},
+            # kept OUT of "metrics" (and hence the golden fixture /
+            # cross-cell metric equality): dispatch granularity facts
+            "dispatch": {k: int(eng.metrics[k]) for k in
+                         ("dispatches", "ticks", "early_exit_finish",
+                          "early_exit_headroom")},
         }
 
     # staggered tick-space arrivals for the streamed replay: request i
@@ -177,16 +182,17 @@ else:
         }
 
     def run_cells(trace, backends=("reference", "kernel"),
-                  replay_fn=replay):
+                  replay_fn=replay, scfg=None, **eng_kw):
         """Replay the trace through {backend} x {1-device, mesh} and
         return ``cells[(backend, n_devices)]``.  Params are built once
         and shared so every cell serves the same model."""
-        scfg = trace_config()
+        scfg = trace_config() if scfg is None else scfg
         mesh = make_serve_mesh(f"model={MESH_N}")
         cells, params = {}, None
         for backend in backends:
             for ndev, m in ((1, None), (MESH_N, mesh)):
-                eng = build_engine(scfg, backend, m, trace, params=params)
+                eng = build_engine(scfg, backend, m, trace,
+                                   params=params, **eng_kw)
                 params = eng.params
                 cells[(backend, ndev)] = replay_fn(eng, trace)
         return cells
@@ -219,6 +225,31 @@ else:
     def streamed_pressure_cells():
         return run_cells(generate_trace("pressure"),
                          replay_fn=replay_streamed)
+
+    @pytest.fixture(scope="module")
+    def mega_pressure_cells():
+        """The pressure trace served with ``ticks_per_dispatch=8`` mega
+        packs, all four {backend} x {topology} cells."""
+        return run_cells(generate_trace("pressure"), ticks_per_dispatch=8)
+
+    @pytest.fixture(scope="module")
+    def temperature_cells():
+        """Seeded temperature>0 serving: the pressure trace at
+        temperature 0.7 / top_p 0.9 on the reference backend, across
+        {1-device, mesh} x {single-tick, 8-tick mega} plus a literal
+        repeat of the base cell; keyed ``cells[(tpd, ndev)]`` with the
+        repeat at ``("repeat", 1)``."""
+        trace = generate_trace("pressure")
+        scfg = trace_config(temperature=0.7, top_p=0.9)
+        cells = {}
+        for tpd in (1, 8):
+            sub = run_cells(trace, backends=("reference",), scfg=scfg,
+                            ticks_per_dispatch=tpd)
+            for (_, ndev), c in sub.items():
+                cells[(tpd, ndev)] = c
+        eng = build_engine(scfg, "reference", None, trace)
+        cells[("repeat", 1)] = replay(eng, trace)
+        return cells
 
     def test_eight_devices():
         import jax
@@ -337,6 +368,67 @@ else:
             assert c["prefill_overlapped"], \
                 (f"{key}: no prefill landed inside another request's "
                  f"decode window under staggered arrivals")
+
+    @pytest.mark.parametrize("backend", ["reference", "kernel"])
+    @pytest.mark.parametrize("ndev", [1, MESH_N])
+    def test_mega_dispatch_bit_identical_to_single_tick(
+            pressure_cells, mega_pressure_cells, backend, ndev):
+        """ACCEPTANCE: serving the pressure trace in 8-tick mega packs
+        reproduces the single-tick replay bit for bit — every request's
+        per-step logits and emitted tokens, in every {backend} x
+        {topology} cell.  (Pool audits/metrics are NOT compared across
+        dispatch granularities: packs preempt at pack boundaries, so
+        the prefix cache retains a different — internally consistent —
+        set of entries at drain.)"""
+        one = pressure_cells[(backend, ndev)]
+        mega = mega_pressure_cells[(backend, ndev)]
+        assert_bit_identical(one, mega,
+                             f"pressure/{backend}/{ndev}dev tpd1-vs-tpd8")
+
+    def test_mega_cells_agree_and_amortize_dispatches(
+            mega_pressure_cells):
+        """The mega schedule itself is backend- and topology-invariant
+        (tokens, audits, metrics, dispatch counts), every cell decodes
+        more than one tick per Python dispatch, and the oversubscribed
+        pool actually produced early pack exits."""
+        cells = mega_pressure_cells
+        base = cells[("reference", 1)]
+        for key, c in cells.items():
+            assert c["outputs"] == base["outputs"], key
+            assert c["audit"] == base["audit"], key
+            assert c["metrics"] == base["metrics"], key
+            assert c["dispatch"] == base["dispatch"], key
+            d = c["dispatch"]
+            assert d["dispatches"] < d["ticks"], key
+        d = base["dispatch"]
+        assert d["ticks"] / d["dispatches"] > 1.0
+        assert d["early_exit_finish"] + d["early_exit_headroom"] >= 1
+
+    def test_temperature_trace_reproducible_and_schedule_invariant(
+            temperature_cells, pressure_cells):
+        """ACCEPTANCE (sampling determinism): the temperature-0.7
+        pressure trace is reproducible run to run, and — because each
+        request owns a (seed, arrival)-keyed sampling stream advanced
+        once per draw — its sampled tokens and per-step logits are
+        BIT-IDENTICAL across {1-device, 8-device mesh} and between
+        single-tick and 8-tick mega dispatch."""
+        cells = temperature_cells
+        base = cells[(1, 1)]
+        greedy = pressure_cells[("reference", 1)]
+        assert base["outputs"] != greedy["outputs"]   # actually sampled
+        for key, c in cells.items():
+            assert_bit_identical(base, c, f"temperature cell {key}")
+        # the repeat is a LITERAL rerun of the base cell: everything
+        # down to pool audits and serving metrics must match
+        rep = cells[("repeat", 1)]
+        assert rep["audit"] == base["audit"]
+        assert rep["metrics"] == base["metrics"]
+        # topology does not perturb the sampled schedule's accounting
+        for tpd in (1, 8):
+            assert cells[(tpd, MESH_N)]["audit"] == \
+                cells[(tpd, 1)]["audit"]
+            assert cells[(tpd, MESH_N)]["metrics"] == \
+                cells[(tpd, 1)]["metrics"]
 
     def test_golden_trace_regression(pressure_cells, flash_cells,
                                      update_golden):
