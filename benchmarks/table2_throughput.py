@@ -194,7 +194,14 @@ def engine_throughput(arch="r1-llama-8b", requests=3, slots=2,
     for backend in ("reference", "kernel"):
         eng = ThinKVEngine(scfg, params=params, backend=backend)
         params = eng.params
-        launches = eng.tick_launch_count()
+        # full compiled-path contract audit (repro.analysis): exact
+        # launch counts, collective whitelist, no callbacks/fp64 on
+        # EVERY entry point — not just the tick count this row records
+        audit = eng.audit_compiled()
+        if not audit.ok:
+            raise SystemExit("compiled-path contract audit failed:\n"
+                             + audit.summary())
+        launches = audit.entries["_tick_fn"].census.launches_at(1)
         # warm the tick + prefill jits OUTSIDE the timed window (first call
         # pays trace/compile — dominant on CPU, huge for interpret mode)
         eng.submit([prompts[0].copy()], max_new_tokens=2)

@@ -30,9 +30,25 @@
 # The pytest run prints the 10 slowest tests (--durations=10) so the
 # growing suite's cost stays visible in every CI log.
 # Usage: scripts/ci.sh [extra pytest args]
+# Two static gates run FIRST (cheapest, fail fastest): the repo AST
+# lint rules (no blocking host syncs in orchestrator coroutines, no
+# refcount mutation outside core/ct_cache.py, no float64 literals) and
+# the compiled-path contract auditor (docs/analysis.md): every engine
+# entry point's jaxpr audited against its declared CompiledContract —
+# exact pallas launch counts, the cross-shard collective whitelist, no
+# callbacks/transfers/fp64/divergent cond branches — over the
+# {reference,kernel} x {1,8 devices} x {1,8 ticks-per-dispatch} matrix,
+# plus a streamed pressure-trace replay proving ZERO steady-state
+# retraces; the merged report is archived as analysis_report.json.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+echo "=== lint gate (repo AST rules) ==="
+python scripts/lint_rules.py
+echo "=== compiled-path contract audit gate ==="
+python -m repro.launch.audit --backends reference,kernel \
+    --devices 1,8 --ticks-per-dispatch 1,8 --heads 8 --kv-heads 8 \
+    --retrace --fail-on-violation --out analysis_report.json
 python -m pytest -x -q --durations=10 "$@"
 python benchmarks/table2_throughput.py --smoke
 echo "=== examples smoke gate ==="

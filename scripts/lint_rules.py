@@ -1,0 +1,201 @@
+#!/usr/bin/env python
+"""Repo-specific AST lint rules (wired into scripts/ci.sh).
+
+Three rules, each guarding an invariant the test suite can't see
+syntactically:
+
+1. **no-blocking-sync-in-coroutines** — inside ``async def`` bodies of
+   ``serving/orchestrator.py``, calling ``.block()`` /
+   ``.block_until_ready()`` / ``jax.block_until_ready(...)`` /
+   ``jax.device_get(...)`` stalls the event loop for a device sync,
+   killing the prefill/decode overlap the orchestrator exists for.
+   Passing the METHOD REFERENCE to an executor
+   (``run_in_executor(None, res.block)``) is the sanctioned pattern and
+   is not a call, so it passes.
+
+2. **no-refcount-mutation-outside-ct-cache** — ``GlobalPool.refcount``
+   is the COW/prefix-cache ledger; every mutation must go through the
+   audited ops in ``core/ct_cache.py`` (``incref_blocks``, COW faults,
+   release).  Anywhere else, ``<x>.refcount.at[...]`` updates or
+   ``replace(refcount=...)`` silently corrupt ``audit_pool`` accounting.
+   Reads are fine.
+
+3. **no-float64-literals** — the contract auditor forbids fp64 in
+   compiled paths; this rule catches the host-side sources before they
+   reach a trace: ``jnp.float64`` / ``jax.numpy.float64`` anywhere in
+   ``src/repro``, the string literal ``"float64"`` anywhere, and
+   ``np.float64`` outside the explicit host-side allowlist (synthetic
+   data gen + calibration accumulate in f64 on the HOST by design —
+   those arrays never enter jit).
+
+Exit 0 = clean; exit 1 prints ``file:line rule message`` per violation.
+Importable: each ``lint_*`` function takes explicit paths, so
+``tests/test_analysis.py`` runs the rules against fixture files.
+"""
+from __future__ import annotations
+
+import ast
+import sys
+from pathlib import Path
+
+REPO = Path(__file__).resolve().parents[1]
+SRC = REPO / "src" / "repro"
+
+BLOCKING_ATTRS = {"block", "block_until_ready"}
+JAX_BLOCKING = {"block_until_ready", "device_get"}
+
+#: host-side np.float64 users (never traced); jnp.float64 is allowed
+#: NOWHERE.
+NP_FLOAT64_ALLOWLIST = {
+    "data/synthetic.py",
+    "core/calibration.py",
+}
+
+#: files allowed to SPELL "float64" as a string: the static analyzer
+#: that detects it.
+FLOAT64_STRING_ALLOWLIST = {
+    "analysis/jaxpr_audit.py",
+}
+
+
+def _violations_fmt(path: Path, node: ast.AST, rule: str, msg: str) -> str:
+    return f"{path}:{node.lineno} [{rule}] {msg}"
+
+
+# ---------------------------------------------------------------------------
+# rule 1: blocking host syncs inside orchestrator coroutines
+# ---------------------------------------------------------------------------
+
+def lint_blocking_sync(path: Path) -> list:
+    tree = ast.parse(path.read_text())
+    out = []
+
+    class V(ast.NodeVisitor):
+        def __init__(self):
+            self.in_async = 0
+
+        def visit_AsyncFunctionDef(self, node):
+            self.in_async += 1
+            self.generic_visit(node)
+            self.in_async -= 1
+
+        def visit_FunctionDef(self, node):
+            # a nested sync def runs wherever it's called (often the
+            # executor) — only direct coroutine bodies are in scope
+            was = self.in_async
+            self.in_async = 0
+            self.generic_visit(node)
+            self.in_async = was
+
+        def visit_Call(self, node):
+            if self.in_async:
+                f = node.func
+                if isinstance(f, ast.Attribute):
+                    if f.attr in BLOCKING_ATTRS:
+                        out.append(_violations_fmt(
+                            path, node, "no-blocking-sync",
+                            f".{f.attr}() called inside a coroutine — "
+                            f"park it on the executor instead "
+                            f"(run_in_executor(None, x.{f.attr}))"))
+                    elif (f.attr in JAX_BLOCKING
+                          and isinstance(f.value, ast.Name)
+                          and f.value.id == "jax"):
+                        out.append(_violations_fmt(
+                            path, node, "no-blocking-sync",
+                            f"jax.{f.attr}(...) called inside a "
+                            f"coroutine — blocks the event loop for a "
+                            f"device sync"))
+            self.generic_visit(node)
+
+    V().visit(tree)
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule 2: GlobalPool.refcount mutation outside core/ct_cache.py
+# ---------------------------------------------------------------------------
+
+def lint_refcount_mutation(paths) -> list:
+    out = []
+    for path in paths:
+        tree = ast.parse(path.read_text())
+        for node in ast.walk(tree):
+            # <x>.refcount.at[...]  (functional update chain)
+            if (isinstance(node, ast.Attribute) and node.attr == "at"
+                    and isinstance(node.value, ast.Attribute)
+                    and node.value.attr == "refcount"):
+                out.append(_violations_fmt(
+                    path, node, "no-refcount-mutation",
+                    "refcount.at[...] update outside core/ct_cache.py — "
+                    "go through the audited pool ops (incref_blocks / "
+                    "release / COW fault)"))
+            # <x>.replace(refcount=...) / <x>._replace(refcount=...)
+            if (isinstance(node, ast.Call)
+                    and isinstance(node.func, ast.Attribute)
+                    and node.func.attr in ("replace", "_replace")
+                    and any(kw.arg == "refcount"
+                            for kw in node.keywords)):
+                out.append(_violations_fmt(
+                    path, node, "no-refcount-mutation",
+                    "replace(refcount=...) outside core/ct_cache.py — "
+                    "go through the audited pool ops"))
+    return out
+
+
+# ---------------------------------------------------------------------------
+# rule 3: float64 literals
+# ---------------------------------------------------------------------------
+
+def lint_float64(paths, allow_np: set = frozenset(),
+                 allow_str: set = frozenset()) -> list:
+    out = []
+    for path in paths:
+        rel = None
+        try:
+            rel = str(path.relative_to(SRC))
+        except ValueError:
+            pass
+        np_ok = rel in allow_np
+        str_ok = rel in allow_str
+        tree = ast.parse(path.read_text())
+        for node in ast.walk(tree):
+            if isinstance(node, ast.Attribute) and node.attr == "float64":
+                base = node.value
+                is_np = isinstance(base, ast.Name) and base.id in ("np",
+                                                                   "numpy")
+                if is_np and np_ok:
+                    continue
+                out.append(_violations_fmt(
+                    path, node, "no-float64",
+                    "float64 literal — compiled paths are fp32/bf16/int "
+                    "only (contract-audited); host-side np.float64 needs "
+                    "an explicit allowlist entry in scripts/lint_rules.py"
+                ))
+            if (isinstance(node, ast.Constant)
+                    and node.value == "float64" and not str_ok):
+                out.append(_violations_fmt(
+                    path, node, "no-float64",
+                    '"float64" dtype string literal — compiled paths '
+                    "are fp32/bf16/int only"))
+    return out
+
+
+def main() -> int:
+    src_files = sorted(SRC.rglob("*.py"))
+    violations = []
+    violations += lint_blocking_sync(SRC / "serving" / "orchestrator.py")
+    violations += lint_refcount_mutation(
+        [p for p in src_files
+         if p != SRC / "core" / "ct_cache.py"])
+    violations += lint_float64(src_files, allow_np=NP_FLOAT64_ALLOWLIST,
+                               allow_str=FLOAT64_STRING_ALLOWLIST)
+    for v in violations:
+        print(v)
+    n = len(src_files)
+    status = "clean" if not violations else f"{len(violations)} violation(s)"
+    print(f"lint_rules: {n} files checked, {status}")
+    return 1 if violations else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

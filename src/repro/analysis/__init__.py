@@ -1,0 +1,31 @@
+"""Compiled-path contract auditor (docs/analysis.md).
+
+Static analysis of every compiled entry point's jaxpr (launch counts,
+collectives, callbacks, precision) against declarative
+:class:`CompiledContract` objects, plus the runtime
+:class:`RetraceGuard` proving steady-state serving never retraces or
+implicitly syncs.  ``python -m repro.launch.audit`` runs the full
+config x mesh matrix and exports ``analysis_report.json``.
+"""
+from repro.analysis.contracts import (AuditReport, CollectiveRule,
+                                      CompiledContract, ContractViolation,
+                                      EntryAudit, Violation, audit_engine,
+                                      audit_flash_prefill,
+                                      engine_contracts,
+                                      serve_collective_rule)
+from repro.analysis.jaxpr_audit import (Census, CollectiveUse,
+                                        CondBranches, PrimitiveUse,
+                                        census_of, count_launches)
+from repro.analysis.retrace import (RetraceEvent, RetraceGuard,
+                                    RetraceViolation,
+                                    assert_no_steady_retraces,
+                                    no_implicit_transfers)
+
+__all__ = [
+    "AuditReport", "Census", "CollectiveRule", "CollectiveUse",
+    "CompiledContract", "CondBranches", "ContractViolation", "EntryAudit",
+    "PrimitiveUse", "RetraceEvent", "RetraceGuard", "RetraceViolation",
+    "Violation", "assert_no_steady_retraces", "audit_engine",
+    "audit_flash_prefill", "census_of", "count_launches",
+    "engine_contracts", "no_implicit_transfers", "serve_collective_rule",
+]

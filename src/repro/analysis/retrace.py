@@ -1,0 +1,184 @@
+"""Runtime half of the compiled-path auditor: recompilation + implicit
+device-to-host transfer guards (docs/analysis.md).
+
+The static contracts (``analysis.contracts``) prove what a compiled path
+stages; :class:`RetraceGuard` proves the path stays compiled — wrapping
+every jitted engine entry point with
+
+* **cache-key tracking**: the jit cache size is sampled around every
+  dispatch, so a shape/dtype-driven retrace is attributed to the exact
+  entry point and call index that triggered it.  After warmup
+  (``mark_steady()``), steady-state serving must perform ZERO retraces —
+  a new trace mid-stream means some host-side caller changed an argument
+  signature (a python-int scalar where a ``jnp.int32`` belongs, a dtype
+  drift, a shape leak) and paid a full recompile on the hot path.
+* **``jax.transfer_guard``**: dispatches run under
+  ``transfer_guard_device_to_host("disallow")``, so any IMPLICIT sync
+  inside the dispatch window raises immediately.  (On CPU device memory
+  IS host memory, so this guard is vacuous there — it gains teeth on
+  real accelerators; the retrace tracking is backend-independent.)
+
+The guard composes with the serving orchestrator: install it on an
+engine before streaming and the orchestrator folds retrace events into
+its metrics log (``kind="retrace"``).
+"""
+from __future__ import annotations
+
+import contextlib
+import dataclasses
+from collections import Counter
+from typing import Dict, List, Optional
+
+import jax
+
+#: Every jitted attribute the engine exposes; missing/None ones are
+#: skipped (e.g. ``_megatick`` when ticks_per_dispatch == 1).
+ENTRY_POINTS = ("_tick", "_megatick", "_prefill_chunk", "_prefill_big",
+                "_reset_slot")
+
+
+class RetraceViolation(AssertionError):
+    """A steady-state retrace (or an explicit assert) fired."""
+
+
+@dataclasses.dataclass(frozen=True)
+class RetraceEvent:
+    entry: str
+    call_index: int     # 1-based call count of that entry point
+    steady: bool        # fired after mark_steady()
+
+    def to_dict(self) -> dict:
+        return dataclasses.asdict(self)
+
+
+class RetraceGuard:
+    """Wraps an engine's jitted entry points with retrace + transfer
+    guards.  Use as a context manager or ``install()``/``uninstall()``.
+
+    ``on_steady_retrace="raise"`` turns a steady-state retrace into an
+    immediate :class:`RetraceViolation` at the offending dispatch;
+    ``"record"`` (default) defers to :meth:`assert_steady_state`.
+    """
+
+    def __init__(self, engine, *, transfer_guard: bool = True,
+                 on_steady_retrace: str = "record"):
+        assert on_steady_retrace in ("record", "raise")
+        self.engine = engine
+        self.transfer_guard = transfer_guard
+        self.on_steady_retrace = on_steady_retrace
+        self.calls: Counter = Counter()
+        self.retraces: Counter = Counter()
+        self.events: List[RetraceEvent] = []
+        self.steady = False
+        self._originals: Dict[str, object] = {}
+        self._drained = 0
+
+    # -- lifecycle ----------------------------------------------------
+
+    def install(self) -> "RetraceGuard":
+        assert not self._originals, "guard already installed"
+        for name in ENTRY_POINTS:
+            fn = getattr(self.engine, name, None)
+            if fn is None or not hasattr(fn, "_cache_size"):
+                continue
+            self._originals[name] = fn
+            setattr(self.engine, name, self._wrap(name, fn))
+        self.engine._retrace_guard = self
+        return self
+
+    def uninstall(self) -> None:
+        for name, fn in self._originals.items():
+            setattr(self.engine, name, fn)
+        self._originals.clear()
+        if getattr(self.engine, "_retrace_guard", None) is self:
+            self.engine._retrace_guard = None
+
+    def __enter__(self) -> "RetraceGuard":
+        return self.install()
+
+    def __exit__(self, *exc) -> None:
+        self.uninstall()
+
+    # -- wrapping -----------------------------------------------------
+
+    def _wrap(self, name: str, fn):
+        guard = self
+
+        def wrapped(*args, **kwargs):
+            before = fn._cache_size()
+            cm = (jax.transfer_guard_device_to_host("disallow")
+                  if guard.transfer_guard else contextlib.nullcontext())
+            with cm:
+                out = fn(*args, **kwargs)
+            guard.calls[name] += 1
+            if fn._cache_size() > before:
+                guard.retraces[name] += 1
+                ev = RetraceEvent(name, guard.calls[name], guard.steady)
+                guard.events.append(ev)
+                if guard.steady and guard.on_steady_retrace == "raise":
+                    raise RetraceViolation(
+                        f"steady-state retrace: {name} recompiled at its "
+                        f"call #{ev.call_index} — an argument signature "
+                        f"changed after warmup")
+            return out
+
+        wrapped.__name__ = f"guarded{name}"
+        wrapped.__wrapped__ = fn
+        return wrapped
+
+    # -- state / reporting --------------------------------------------
+
+    def mark_steady(self) -> None:
+        """Declare warmup over: every trace from here on is a violation."""
+        self.steady = True
+
+    def steady_retraces(self) -> int:
+        return sum(1 for e in self.events if e.steady)
+
+    def drain_new_events(self) -> List[RetraceEvent]:
+        """Events appended since the last drain (orchestrator logging)."""
+        new = self.events[self._drained:]
+        self._drained = len(self.events)
+        return new
+
+    def cache_sizes(self) -> Dict[str, int]:
+        return {name: fn._cache_size()
+                for name, fn in self._originals.items()}
+
+    def assert_steady_state(self) -> None:
+        """Zero retraces after ``mark_steady()`` or raise, naming every
+        offending entry point and call index."""
+        bad = [e for e in self.events if e.steady]
+        if bad:
+            lines = "\n".join(
+                f"  {e.entry} retraced at its call #{e.call_index}"
+                for e in bad)
+            raise RetraceViolation(
+                f"{len(bad)} steady-state retrace(s):\n{lines}")
+
+    def report(self) -> dict:
+        return {
+            "steady": self.steady,
+            "calls": dict(self.calls),
+            "retraces": dict(self.retraces),
+            "steady_retraces": self.steady_retraces(),
+            "cache_sizes": self.cache_sizes(),
+            "events": [e.to_dict() for e in self.events],
+        }
+
+
+@contextlib.contextmanager
+def no_implicit_transfers():
+    """Disallow implicit device->host syncs in a block (explicit
+    ``jax.device_get`` / ``np.asarray`` still allowed by JAX's guard
+    semantics only where marked explicit)."""
+    with jax.transfer_guard_device_to_host("disallow"):
+        yield
+
+
+def assert_no_steady_retraces(engine) -> None:
+    """Convenience for tests/CLI: assert the installed guard saw zero
+    steady-state retraces."""
+    guard: Optional[RetraceGuard] = getattr(engine, "_retrace_guard", None)
+    assert guard is not None, "no RetraceGuard installed on this engine"
+    guard.assert_steady_state()

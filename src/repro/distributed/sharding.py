@@ -254,6 +254,28 @@ def head_shardable(num_kv_heads: int, mesh: Mesh) -> bool:
     return num_kv_heads % n == 0 and num_kv_heads >= n
 
 
+# The COMPLETE cross-shard communication contract of the serving engine,
+# co-located with the sharding scheme it belongs to.  Head-sharded pool
+# planes stay bit-identical to a 1-device run because the only staged
+# collectives are (a) the tiled attention-head ``all_gather`` — pure data
+# movement, exact at any dtype — and (b) the integer ``psum`` that ORs
+# per-shard COW dirty masks.  NO float reduction may cross shards: float
+# summation is reduction-order-dependent, which would break the trace
+# suite's mesh-parity gate.  ``repro.analysis.contracts`` turns this into
+# the CollectiveRule every engine entry point is audited against.
+SERVE_MOVEMENT_COLLECTIVES = ("all_gather",)
+SERVE_INTEGER_REDUCTIONS = ("psum",)
+SERVE_FLOAT_REDUCTIONS: tuple = ()
+
+
+def serve_collective_whitelist() -> dict:
+    """{"movement", "integer_reductions", "float_reductions"} — the
+    collectives the serving engine's compiled paths may stage."""
+    return {"movement": SERVE_MOVEMENT_COLLECTIVES,
+            "integer_reductions": SERVE_INTEGER_REDUCTIONS,
+            "float_reductions": SERVE_FLOAT_REDUCTIONS}
+
+
 # ---------------------------------------------------------------------------
 # in-graph sharding constraints (GSPMD guidance)
 # ---------------------------------------------------------------------------

@@ -116,57 +116,21 @@ def local_heads(x: jax.Array, axis: int, axis_name: str,
     return jax.lax.dynamic_slice_in_dim(x, i * size, size, axis)
 
 
-def _subjaxprs(params):
-    """Yield every sub-jaxpr stored in an eqn's params."""
-    from jax import core as jcore
-    for v in params.values():
-        vals = v if isinstance(v, (tuple, list)) else (v,)
-        for x in vals:
-            if isinstance(x, jcore.ClosedJaxpr):
-                yield x.jaxpr
-            elif isinstance(x, jcore.Jaxpr):
-                yield x
-
-
 def count_pallas_launches(jaxpr, while_trips: int = 1) -> int:
-    """Static per-call ``pallas_call`` LAUNCH count of a (closed) jaxpr.
+    """Compatibility shim for the historical launch counter — the walker
+    now lives in ``repro.analysis.jaxpr_audit`` (scan bodies multiplied
+    by trip count, ``while`` bodies by ``while_trips``, cond launches
+    counted once).
 
-    Unlike a flat equation count, this multiplies launches inside a
-    ``lax.scan`` body by the scan trip count — a kernel inside a layer scan
-    really launches L times per step.  ``cond`` branches contribute their
-    maximum (worst case).  A ``lax.while_loop``'s trip count is dynamic,
-    so its body launches are multiplied by ``while_trips`` (the caller's
-    assumed trip count; default 1 — the one-trip lower bound) and its cond
-    launches are counted once.  Auditing a mega-dispatch therefore takes
-    two calls: ``count(j, while_trips=2) - count(j, while_trips=1)`` is
-    the per-trip launch count and the remainder is the launches outside
-    the loop (see ``ThinKVEngine.megatick_launch_count``).  Use with
-    ``jax.make_jaxpr(fn)(*args)`` to audit how many kernel launches one
-    engine tick dispatches.
+    CAVEAT kept for compatibility: ``cond`` branches contribute their
+    MAXIMUM, which silently hides branch-count divergence (a branch that
+    dispatches 2 launches against a branch that dispatches 1 reads as
+    "2").  New audits should use ``repro.analysis.census_of``, which
+    records per-branch counts and whose contracts reject divergent
+    branches, or go through ``repro.analysis.audit_engine`` entirely.
     """
-    from jax import core as jcore
-    if isinstance(jaxpr, jcore.ClosedJaxpr):
-        jaxpr = jaxpr.jaxpr
-    n = 0
-    for eqn in jaxpr.eqns:
-        name = eqn.primitive.name
-        if name == "pallas_call":
-            n += 1
-        elif name == "scan":
-            n += eqn.params["length"] * count_pallas_launches(
-                eqn.params["jaxpr"], while_trips)
-        elif name == "cond":
-            n += max(count_pallas_launches(b, while_trips)
-                     for b in eqn.params["branches"])
-        elif name == "while":
-            n += while_trips * count_pallas_launches(
-                eqn.params["body_jaxpr"], while_trips)
-            n += count_pallas_launches(eqn.params["cond_jaxpr"],
-                                       while_trips)
-        else:
-            n += sum(count_pallas_launches(j, while_trips)
-                     for j in _subjaxprs(eqn.params))
-    return n
+    from repro.analysis.jaxpr_audit import count_launches
+    return count_launches(jaxpr, while_trips=while_trips)
 
 
 def buffer_attention(q, buf_k, buf_v, buf_len):

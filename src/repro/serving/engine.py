@@ -1218,49 +1218,84 @@ class ThinKVEngine:
             in_specs=(rep, pool_s, rep, cache_s, rep),
             out_specs=(pool_s, rep, cache_s, rep, rep, rep))
 
-    def tick_launch_count(self) -> int:
-        """Per-tick ``pallas_call`` LAUNCH count, audited on the decode
-        tick's jaxpr (scan bodies multiplied by trip count — a kernel
-        inside the layer scan would count L times).  The fused kernel
-        backend is exactly 1 at any layer count; reference is 0."""
+    # ------------------------------------------------------------------
+    # compiled-path contract auditing (repro.analysis)
+    # ------------------------------------------------------------------
+
+    def compiled_entry_points(self) -> Dict[str, tuple]:
+        """``{name: (unjitted fn, representative args)}`` for every
+        compiled entry point — the registry ``repro.analysis`` audits
+        (``audit_engine``) and ``RetraceGuard`` wraps.  Adding a new
+        jitted path to the engine REQUIRES registering it here AND
+        declaring its ``CompiledContract`` in
+        ``analysis.contracts.engine_contracts`` (``audit_engine`` raises
+        on a registered path with no contract; see docs/analysis.md)."""
         R = self.cfg.max_seqs
-        jaxpr = jax.make_jaxpr(self._tick_fn)(
-            self.params, self.pool, self.tables, self.caches,
-            jnp.zeros(R, jnp.int32), jnp.ones(R, bool), self._slot_rng)
-        return K.count_pallas_launches(jaxpr)
+        cache0 = jax.tree.map(lambda x: x[0], self.caches)
+        eps = {
+            "_tick_fn": (self._tick_fn, (
+                self.params, self.pool, self.tables, self.caches,
+                jnp.zeros(R, jnp.int32), jnp.ones(R, bool),
+                self._slot_rng)),
+            "_prefill_chunk_fn": (self._prefill_chunk_fn, (
+                self.params, self.pool, self.tables[0], cache0,
+                jnp.zeros(self.dims.G, jnp.int32),
+                jnp.int32(self.dims.G))),
+        }
+        if self._megatick_fn is not None:
+            eps["_megatick_fn"] = (self._megatick_fn, (
+                self.params, self.pool, self.tables, self.caches,
+                jnp.zeros(R, jnp.int32), jnp.ones(R, bool),
+                self._slot_rng, jnp.full(R, 4, jnp.int32),
+                jnp.full(R, -1, jnp.int32),
+                jnp.int32(self.ticks_per_dispatch)))
+        if self._prefill_big_fn is not None:
+            eps["_prefill_big_fn"] = (self._prefill_big_fn, (
+                self.params, self.pool, self.tables[0], cache0,
+                jnp.zeros(self.prefill_chunk, jnp.int32)))
+        return eps
+
+    def audit_compiled(self):
+        """Full contract audit of every compiled entry point ->
+        ``analysis.AuditReport`` (launch counts, collectives, callbacks,
+        precision — see docs/analysis.md)."""
+        from repro.analysis import audit_engine
+        return audit_engine(self)
+
+    def _entry_census(self, name: str):
+        from repro.analysis.jaxpr_audit import census_of
+        fn, args = self.compiled_entry_points()[name]
+        return census_of(jax.make_jaxpr(fn)(*args))
+
+    def tick_launch_count(self) -> int:
+        """Per-tick ``pallas_call`` LAUNCH count from the decode tick's
+        jaxpr census (``repro.analysis``; scan bodies multiplied by trip
+        count — a kernel inside the layer scan would count L times).
+        The fused kernel backend is exactly 1 at any layer count;
+        reference is 0."""
+        return self._entry_census("_tick_fn").launches_at(1)
 
     def megatick_launch_count(self) -> tuple:
         """``(per_trip, outside)`` pallas launch counts of the
-        mega-dispatch, audited on its jaxpr with the ``while``-aware
-        counter: launches per fused TICK (the while body) and launches
-        OUTSIDE the loop.  The single-launch contract extends to the
-        mega-dispatch as ``per_trip == tick_launch_count()`` (exactly 1
-        on the kernel backend, 0 on reference) with ``outside == 0`` —
-        fusing N ticks dispatches N kernel launches in one XLA program,
-        never N programs and never stray launches around the loop."""
+        mega-dispatch from its jaxpr census — launches per fused TICK
+        (the while body) and launches OUTSIDE the loop.  The
+        single-launch contract extends to the mega-dispatch as
+        ``per_trip == tick_launch_count()`` (exactly 1 on the kernel
+        backend, 0 on reference) with ``outside == 0`` — fusing N ticks
+        dispatches N kernel launches in one XLA program, never N
+        programs and never stray launches around the loop."""
         assert self._megatick_fn is not None, \
             "mega-dispatch disabled (ticks_per_dispatch == 1)"
-        R = self.cfg.max_seqs
-        jaxpr = jax.make_jaxpr(self._megatick_fn)(
-            self.params, self.pool, self.tables, self.caches,
-            jnp.zeros(R, jnp.int32), jnp.ones(R, bool), self._slot_rng,
-            jnp.full(R, 4, jnp.int32), jnp.full(R, -1, jnp.int32),
-            jnp.int32(self.ticks_per_dispatch))
-        one = K.count_pallas_launches(jaxpr, while_trips=1)
-        two = K.count_pallas_launches(jaxpr, while_trips=2)
-        return two - one, one - (two - one)
+        c = self._entry_census("_megatick_fn")
+        return c.launches_per_trip, c.launches
 
     def prefill_launch_count(self) -> int:
-        """Per-g-chunk ``pallas_call`` launch count, audited on the
-        prefill chunk's jaxpr — a request's total prefill launches are
+        """Per-g-chunk ``pallas_call`` launch count from the prefill
+        chunk's jaxpr census — a request's total prefill launches are
         ``prefill_chunks * this`` (+ the big-chunk path's own count), so
         a prefix-cache hit that skips every covered chunk provably
         dispatched ZERO kernel launches for the covered prefix."""
-        cache0 = jax.tree.map(lambda x: x[0], self.caches)
-        jaxpr = jax.make_jaxpr(self._prefill_chunk_fn)(
-            self.params, self.pool, self.tables[0], cache0,
-            jnp.zeros(self.dims.G, jnp.int32), jnp.int32(self.dims.G))
-        return K.count_pallas_launches(jaxpr)
+        return self._entry_census("_prefill_chunk_fn").launches_at(1)
 
     def _make_reset(self):
         dims = self.dims

@@ -343,6 +343,7 @@ class Orchestrator:
             await asyncio.get_running_loop().run_in_executor(None, res.block)
             eng.consume(res)
             self._log("consume", tick=res.tick)
+            self._drain_retrace_events()
             if getattr(res, "packed", False):
                 # drain the multi-tick pack trip by trip — fan-out order
                 # (and retirement timing) identical to trips separate
@@ -364,6 +365,7 @@ class Orchestrator:
                     self._record_logits(slot.request, logits[slot.idx])
                     self._finish_token(slot, int(toks[slot.idx]), res.tick)
             await self._admit_and_prefill()
+        self._drain_retrace_events()   # events from trailing prefills
         eng.metrics["wall_s"] = time.perf_counter() - self._t0
         return sch.finished
 
@@ -629,6 +631,22 @@ class Orchestrator:
             "tick": kw.pop("tick", int(self.engine.metrics["ticks"])),
             "wall": time.perf_counter() - (self._t0 or time.perf_counter()),
             **kw})
+
+    def _drain_retrace_events(self) -> None:
+        """Fold ``analysis.RetraceGuard`` events into the metrics log.
+
+        With a guard installed on the engine
+        (``RetraceGuard(engine).install()``), every retrace an entry
+        point performs mid-stream lands here as a ``kind="retrace"``
+        event — steady-state serving must log NONE after warmup (the
+        ``launch/audit.py --retrace`` gate and
+        ``tests/test_analysis.py`` assert exactly that)."""
+        guard = getattr(self.engine, "_retrace_guard", None)
+        if guard is None:
+            return
+        for ev in guard.drain_new_events():
+            self._log("retrace", entry=ev.entry,
+                      call_index=ev.call_index, steady=ev.steady)
 
     def request_summary(self) -> Dict[int, Dict]:
         """Per-request {ttft_s, ttft_ticks, tpot_s, queue_wait_*, tokens}

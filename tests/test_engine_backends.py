@@ -105,17 +105,17 @@ def test_decode_tick_is_single_pallas_launch(rng):
     """Acceptance: the kernel-backend decode tick dispatches exactly ONE
     pallas_call for attention across ALL layers (the fused (L, R, H, NB+1)
     grid — nothing launches inside the layer scans), while the reference
-    backend dispatches none.  Launch counts are audited on the tick's
-    jaxpr with scan trip-count multiplication, so a kernel hidden inside
-    the layer scan would be counted L times."""
-    from repro.kernels import ops
+    backend dispatches none.  Audited through the compiled-path contract
+    API (repro.analysis), which walks the tick's jaxpr with scan
+    trip-count multiplication, so a kernel hidden inside the layer scan
+    would be counted L times — and which also enforces the collective /
+    callback / fp64 contracts on every other entry point for free."""
+    from repro.analysis import audit_engine
     ref, ker = _pair(rng, slots=2)
     for eng, expect in ((ker, 1), (ref, 0)):
-        R = eng.cfg.max_seqs
-        jaxpr = jax.make_jaxpr(eng._tick_fn)(
-            eng.params, eng.pool, eng.tables, eng.caches,
-            jnp.zeros(R, jnp.int32), jnp.ones(R, bool), eng._slot_rng)
-        assert ops.count_pallas_launches(jaxpr) == expect, eng.backend
+        rep = audit_engine(eng).raise_on_violation()
+        assert rep.entries["_tick_fn"].census.launches_at(1) == expect, \
+            eng.backend
 
 
 def test_engine_big_chunk_prefill_parity(rng):
@@ -142,16 +142,15 @@ def test_big_chunk_prefill_routes_through_flash_prefill(rng):
     """Acceptance: the large-chunk forward's intra-chunk causal partition
     runs the COMPILED flash_prefill kernel, not the reference oracle — the
     kernel-backend big-chunk jaxpr stages two pallas launches per layer
-    (paged pool + flash intra-chunk), the reference backend zero."""
-    from repro.kernels import ops
+    (paged pool + flash intra-chunk), the reference backend zero.
+    Audited through the contract API census."""
+    from repro.analysis import audit_engine
     ref, ker = _pair(rng, slots=1)
     L = ker.dims.L
     for eng, expect in ((ker, 2 * L), (ref, 0)):
-        cache0 = jax.tree.map(lambda x: x[0], eng.caches)
-        jaxpr = jax.make_jaxpr(eng._prefill_big_fn)(
-            eng.params, eng.pool, eng.tables[0], cache0,
-            jnp.zeros(eng.prefill_chunk, jnp.int32))
-        assert ops.count_pallas_launches(jaxpr) == expect, eng.backend
+        rep = audit_engine(eng).raise_on_violation()
+        assert rep.entries["_prefill_big_fn"].census.launches == expect, \
+            eng.backend
 
 
 def test_engine_construction_with_non_dividing_group(rng):

@@ -171,15 +171,21 @@ def test_safe_trips_shrink_under_pool_pressure(rng):
 def test_megatick_while_aware_launch_audit(rng):
     """CI gate inside the loop: the kernel-backend mega-dispatch stages
     exactly ONE fused pallas launch PER TRIP and none outside the while
-    loop; the reference backend stages zero anywhere."""
+    loop; the reference backend stages zero anywhere.  The full contract
+    audit (repro.analysis) pins the same counts plus the collective /
+    callback / fp64 / branch-divergence rules on every entry point."""
     cfg = _cfg(slots=2)
     ref = ThinKVEngine(cfg, backend="reference", ticks_per_dispatch=2)
     ker = ThinKVEngine(cfg, params=ref.params, backend="kernel",
                        ticks_per_dispatch=2)
+    ref.audit_compiled().raise_on_violation()
+    rep = ker.audit_compiled().raise_on_violation()
     assert ref.megatick_launch_count() == (0, 0)
     per_trip, outside = ker.megatick_launch_count()
     assert per_trip == ker.tick_launch_count() == 1
     assert outside == 0
+    mega = rep.entries["_megatick_fn"].census
+    assert (mega.launches_per_trip, mega.launches) == (per_trip, outside)
 
 
 def test_fork_slot_shares_blocks_and_emits_parent_tokens(rng):

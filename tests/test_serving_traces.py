@@ -258,12 +258,18 @@ else:
     def test_sharded_tick_is_single_launch_per_shard():
         """The PR-2 single-launch invariant survives sharding: each
         shard's decode tick dispatches exactly ONE fused pallas launch
-        (reference: zero), audited on the shard_map'd tick's jaxpr."""
+        (reference: zero), audited on the shard_map'd tick's jaxpr via
+        the contract API — which ALSO proves the staged collectives stay
+        inside the serve whitelist (movement all_gathers + integer psum,
+        zero float reductions) on every entry point."""
         scfg = trace_config(slots=2)
         mesh = make_serve_mesh(f"model={MESH_N}")
         for backend, expect in (("kernel", 1), ("reference", 0)):
             eng = build_engine(scfg, backend, mesh, {"pool_frac": 1.0})
-            assert eng.tick_launch_count() == expect, backend
+            rep = eng.audit_compiled().raise_on_violation()
+            tick = rep.entries["_tick_fn"].census
+            assert tick.launches_at(1) == expect, backend
+            assert rep.meta["devices"] == MESH_N
 
     def test_traces_exercise_everything(pressure_cells, flash_cells):
         """The generated traces are not vacuous: preemption, prefix
