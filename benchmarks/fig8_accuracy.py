@@ -33,12 +33,36 @@ def run(budgets=(64, 96, 128, 192), n=768, seed=0, quiet=False):
     return rows
 
 
-def main(out_path="benchmarks/results/fig8_accuracy.json"):
-    rows = run()
+def main(out_path="benchmarks/results/fig8_accuracy.json", *, smoke=False):
+    if smoke:
+        # tiny stream, two budgets — the CI gate only checks the sweep
+        # runs end to end and every method produces sane metrics
+        rows = run(budgets=(48, 96), n=192, seed=0)
+        bad = [r for r in rows
+               if not (0.0 <= r["cosine"] <= 1.0 + 1e-6
+                       and 0.0 <= r["recall@10"] <= 1.0 + 1e-6
+                       and r["mean_kept"] > 0)]
+        if bad:
+            raise SystemExit(f"fig8 smoke FAILED: out-of-range metrics in "
+                             f"{[(r['method'], r['budget']) for r in bad]}")
+        methods = {r["method"] for r in rows}
+        if len(methods) < 2:
+            raise SystemExit("fig8 smoke FAILED: fewer than 2 methods "
+                             "evaluated — no baseline comparison")
+        print(f"fig8 smoke OK: {len(rows)} cells over {len(methods)} "
+              f"methods, all metrics in range")
+    else:
+        rows = run()
     with open(out_path, "w") as f:
         json.dump(rows, f, indent=2)
     return rows
 
 
 if __name__ == "__main__":
-    main()
+    import argparse
+    ap = argparse.ArgumentParser(description=__doc__.split("\n")[0])
+    ap.add_argument("--smoke", action="store_true",
+                    help="tiny gated run for CI (2 budgets, short stream)")
+    ap.add_argument("--out", default="benchmarks/results/fig8_accuracy.json")
+    a = ap.parse_args()
+    main(a.out, smoke=a.smoke)

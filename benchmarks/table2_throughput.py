@@ -41,6 +41,14 @@ Three parts:
    ``ticks_per_dispatch`` x ``samples_per_slot`` (COW-forked best-of-n)
    — the fused ``while_loop`` pack must push dispatches/token below 1
    at 8 ticks per dispatch (gated).
+9. **Policy sweep** (cache-size-vs-drift frontier): every registered
+   retention policy (thinkv / rkv / uniform) x bit-mix and eviction-
+   aggressiveness variants x pool fractions, served through the
+   orchestrator with the logit-drift probe on — footprint fraction vs
+   drift against the uncompressed dense replay (the serving-trace
+   analogue of the paper's Fig. 8/10 curves).  Gated: all requests
+   complete, finite drift on every request, clean pool + compiled-path
+   contract audits per cell.
 
 Results are also APPENDED to ``BENCH_table2.json`` at the repo root (one
 record per run, tagged with the git SHA) so the perf trajectory is
@@ -537,6 +545,151 @@ def streaming_sweep(loads=(0.5, 1.5), pool_fracs=(1.0, 0.5),
     return rows
 
 
+def policy_sweep(policies=("thinkv", "rkv", "uniform"),
+                 variants=None, pool_fracs=(1.0, 0.5),
+                 arch="r1-llama-8b", requests=4, slots=2, prompt_len=12,
+                 max_new=24, budget=24, tau=8, seed=0, smoke=False):
+    """Cache-size-vs-quality frontier across retention policies (the
+    serving-trace analogue of the paper's Fig. 8/10 accuracy-vs-budget
+    curves): every cell streams an OVERSUBSCRIBED workload through one
+    registered policy x one (bit-mix, eviction-aggressiveness) config
+    variant x one pool fraction with the logit-drift probe on, and
+    records mean footprint fraction against drift vs the uncompressed
+    dense replay.
+
+    Frontier reading: footprint_frac is the x-axis (cache cost), drift
+    mean |dlogit| / top-1 agreement the y-axis (quality proxy).  The
+    probe's dense replay shares the attention-late tick dataflow delta
+    across ALL policies, so cross-policy comparisons isolate retention
+    quality (docs/policy.md).
+
+    Gates (every cell): all requests complete with full outputs, every
+    finished request carries finite drift stats, the pool refcount audit
+    is clean, and the compiled-path contract audit passes with the
+    policy's entry points (incl. the drift probe) registered."""
+    from repro.config import ServeConfig
+    from repro.configs import get_smoke_config
+    from repro.core import ct_cache as CC
+    from repro.serving.engine import ThinKVEngine
+    from repro.serving.orchestrator import Orchestrator
+
+    if variants is None:
+        variants = [
+            # (name, precision (T,E,R), retention_schedule, min_retention)
+            ("paper", (2, 4, 4), (16, 8, 4), 4),
+        ]
+        if not smoke:
+            variants += [
+                ("high-bits", (4, 8, 8), (16, 8, 4), 4),
+                ("aggressive", (2, 4, 4), (8, 4, 2), 2),
+            ]
+    mcfg = get_smoke_config(arch)
+    rng = np.random.default_rng(seed)
+    prompts = [rng.integers(0, mcfg.vocab_size, prompt_len)
+               for _ in range(requests)]
+
+    rows = []
+    params = None
+    for vname, precision, sched, min_ret in variants:
+        # token_budget/tau tightened below the generated length so every
+        # cell actually exercises eviction + annealing — with slack
+        # budgets the policies never act and the frontier collapses to
+        # one point
+        tk = dataclasses.replace(_smoke_tk(), precision=precision,
+                                 retention_schedule=sched,
+                                 min_retention=min_ret,
+                                 token_budget=budget,
+                                 refresh_interval=tau)
+        scfg = ServeConfig(model=mcfg, thinkv=tk, max_seqs=slots,
+                           temperature=0.0)
+        dims = CC.make_dims(tk, mcfg.num_layers, mcfg.num_kv_heads,
+                            mcfg.head_dim)
+        worst = slots * dims.NB
+        for policy in policies:
+            for frac in pool_fracs:
+                cell = f"policy={policy} variant={vname} pool_frac={frac}"
+                eng = ThinKVEngine(scfg, params=params,
+                                   backend="reference",
+                                   pool_blocks=max(int(worst * frac), 1),
+                                   policy=policy, drift_probe=True)
+                params = eng.params
+                orch = Orchestrator(eng)
+                for i, p in enumerate(prompts):
+                    orch.schedule_arrival(after_tick=0, prompt=p.copy(),
+                                          max_new_tokens=max_new, uid=i)
+                t0 = time.perf_counter()
+                done = orch.run_sync()
+                wall = time.perf_counter() - t0
+                full = sum(len(r.output) == max_new for r in done)
+                if len(done) != requests or full != requests:
+                    raise SystemExit(
+                        f"policy-sweep regression at {cell}: "
+                        f"{len(done)}/{requests} finished, {full} with "
+                        f"full outputs")
+                drifts = [r.stats.get("drift") for r in done]
+                if any(d is None for d in drifts) or any(
+                        not (np.isfinite(d["max_abs"])
+                             and np.isfinite(d["mean_abs"])
+                             and d["steps"] > 0) for d in drifts):
+                    raise SystemExit(
+                        f"policy-sweep regression at {cell}: missing or "
+                        f"non-finite drift stats on a finished request")
+                try:
+                    eng.audit_pool()
+                except AssertionError as exc:
+                    raise SystemExit(
+                        f"policy-sweep regression at {cell}: pool "
+                        f"refcount audit: {exc}")
+                audit = eng.audit_compiled()
+                if not audit.ok:
+                    raise SystemExit(
+                        f"policy-sweep regression at {cell}: compiled-"
+                        f"path contract audit failed:\n" + audit.summary())
+                if "_drift_probe_fn" not in audit.entries:
+                    raise SystemExit(
+                        f"policy-sweep regression at {cell}: drift probe "
+                        f"entry point never registered for audit")
+                row = {
+                    "policy": policy,
+                    "variant": vname,
+                    "precision": list(precision),
+                    "retention_schedule": list(sched),
+                    "min_retention": min_ret,
+                    "pool_frac": frac,
+                    "pool_blocks": eng.num_pool_blocks,
+                    "requests": requests,
+                    "completed": len(done),
+                    "preemptions": eng.metrics["preemptions"],
+                    "decode_tok_per_s":
+                        eng.metrics["tokens"] / max(wall, 1e-9),
+                    # frontier x-axis: cache cost
+                    "footprint_frac": float(np.mean(
+                        [r.stats["footprint_frac"] for r in done])),
+                    "avg_bits": float(np.mean(
+                        [r.stats["avg_bits"] for r in done])),
+                    # frontier y-axis: quality proxy vs dense replay
+                    "drift_max_abs": float(max(
+                        d["max_abs"] for d in drifts)),
+                    "drift_mean_abs": float(np.mean(
+                        [d["mean_abs"] for d in drifts])),
+                    "drift_top1_agree": float(np.mean(
+                        [d["top1_agree"] for d in drifts])),
+                }
+                rows.append(row)
+                print(f"  {policy:8s} {vname:11s} pool {100 * frac:4.0f}%:"
+                      f" footprint {100 * row['footprint_frac']:6.2f}% | "
+                      f"{row['avg_bits']:.2f} bits | drift mean "
+                      f"{row['drift_mean_abs']:.4f} / max "
+                      f"{row['drift_max_abs']:.4f} | top-1 "
+                      f"{100 * row['drift_top1_agree']:5.1f}% | "
+                      f"{row['preemptions']:2d} preemptions")
+    if len({r["policy"] for r in rows}) < 2:
+        raise SystemExit(
+            "policy-sweep regression: fewer than 2 distinct policies "
+            "swept — the frontier needs at least a comparison pair")
+    return rows
+
+
 def _device_dispatch_time(eng, reps=5):
     """Warmed wall time of ONE decode dispatch (single tick or mega pack)
     on a state snapshot with every slot active — the pure device +
@@ -821,6 +974,14 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
                 f" Python dispatches per decoded token at "
                 f"ticks_per_dispatch={r['ticks_per_dispatch']} "
                 f"(expected < 1 — the fused while_loop pack)")
+    print("  policy sweep (retention policies x bit mixes x eviction "
+          "aggressiveness, drift-probed):")
+    if smoke:
+        out["policy_frontier"] = policy_sweep(
+            pool_fracs=(0.5,), requests=3, slots=2, prompt_len=8,
+            max_new=20, budget=16, smoke=True)
+    else:
+        out["policy_frontier"] = policy_sweep()
     print("  device sweep (tensor-parallel serving, model-axis mesh):")
     out["mesh_sweep"] = mesh_sweep(devices=(1, 4, 8), smoke=smoke)
     if os.path.dirname(out_path):
@@ -843,6 +1004,7 @@ def main(out_path="benchmarks/results/table2_throughput.json", *,
         "prefix": out["prefix"],
         "streaming": out["streaming"],
         "dispatch": out["dispatch"],
+        "policy_frontier": out["policy_frontier"],
         "mesh_sweep": out["mesh_sweep"],
     })
     print(f"  perf trajectory appended to {BENCH_LOG}")

@@ -26,7 +26,15 @@
 # COW-forked samples per request — mean ticks/dispatch > 1 with >= 1
 # early pack exit, >= 1 fork COW fault with shared refcounts > 1, clean
 # refcount audits, and tokens BIT-IDENTICAL to a per-tick replay (forks
-# identical to their parents at temperature 0).
+# identical to their parents at temperature 0), and (6) two RETENTION-
+# POLICY gates: an oversubscribed run under the redundancy-aware rkv
+# policy must complete every request with preemptions, and a streamed
+# run under the uniform baseline with --drift-probe must record finite
+# logit-drift stats (vs the uncompressed dense replay) on every
+# finished request.  The table2 --smoke run additionally sweeps the
+# policy frontier (>= 2 policies x oversubscribed pool, drift recorded,
+# clean pool + contract audits per cell), and the fig8 accuracy proxy
+# runs in --smoke mode (all methods, metrics gated in range).
 # The pytest run prints the 10 slowest tests (--durations=10) so the
 # growing suite's cost stays visible in every CI log.
 # Usage: scripts/ci.sh [extra pytest args]
@@ -51,6 +59,8 @@ python -m repro.launch.audit --backends reference,kernel \
     --retrace --fail-on-violation --out analysis_report.json
 python -m pytest -x -q --durations=10 "$@"
 python benchmarks/table2_throughput.py --smoke
+echo "=== fig8 accuracy-proxy smoke gate ==="
+python -m benchmarks.fig8_accuracy --smoke
 echo "=== examples smoke gate ==="
 python examples/quickstart.py
 python examples/calibrate_thoughts.py
@@ -79,6 +89,15 @@ python -m repro.launch.serve --requests 4 --slots 3 --prompt-len 24 \
     --prefix-cache --shared-prefix-frac 1.0 \
     --stream --ticks-per-dispatch 8 --samples-per-slot 2 \
     --expect-all --expect-multi-tick
+echo "=== retention-policy gate (rkv under oversubscription) ==="
+python -m repro.launch.serve --requests 6 --slots 4 --prompt-len 12 \
+    --max-new 48 --temperature 0 --pool-frac 0.25 --priorities 0,1 \
+    --policy rkv --expect-all --expect-preemptions
+echo "=== drift-probe gate (uniform baseline, streamed) ==="
+python -m repro.launch.serve --requests 4 --slots 2 --prompt-len 12 \
+    --max-new 24 --budget 32 --tau 8 --temperature 0 \
+    --policy uniform --stream --drift-probe \
+    --expect-all --expect-drift
 echo "=== sharded serving gate (8-device CPU mesh, bit-exact parity) ==="
 XLA_FLAGS="${XLA_FLAGS:-} --xla_force_host_platform_device_count=8" \
 python -m repro.launch.serve --requests 5 --slots 3 --prompt-len 16 \

@@ -263,6 +263,13 @@ def engine_contracts(engine) -> Dict[str, CompiledContract]:
             collectives=rule,
             note="big-chunk prefill: paged + flash_prefill launch per "
                  "layer"),
+        # declared unconditionally; only audited when the engine was
+        # built with drift_probe=True and registered the entry point
+        "_drift_probe_fn": CompiledContract(
+            "_drift_probe_fn", launches=0, collectives=rule,
+            note="drift probe: dense teacher-forced replay, plain jit "
+                 "(replicated, off the tick hot path) — no kernel "
+                 "launches on either backend"),
     }
     return cons
 

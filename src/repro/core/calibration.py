@@ -72,9 +72,25 @@ def calibrate(sparsity_traces: Dict[int, List[np.ndarray]],
       num_calib_layers: |L*| to select.
 
     Returns: CalibrationResult with L* and averaged thresholds.
+
+    Raises ValueError when ``sparsity_traces`` carries no data at all
+    (empty dict, or every layer's prompt list empty) — there is nothing
+    to calibrate and silently returning defaults would hide a broken
+    trace-collection pipeline upstream.
+
+    When traces exist but NO layer is ever tri-modal, falls back to the
+    first ``num_calib_layers`` layers plus the paper's default
+    thresholds (0.55, 0.80) — a DOCUMENTED degradation, not an empty
+    ``layer_subset`` (an empty L* would make the engine average sparsity
+    over zero layers and feed NaN into every refresh).
     """
     grid = np.linspace(0.0, 1.0, grid_points)
     layers = sorted(sparsity_traces)
+    if not layers or all(len(v) == 0 for v in sparsity_traces.values()):
+        raise ValueError(
+            "calibrate: sparsity_traces is empty (no layers, or no prompt "
+            "traces for any layer) — collect at least one prompt's "
+            "decode-step sparsity samples before calibrating")
     num_prompts = max(len(v) for v in sparsity_traces.values())
 
     # per (layer, prompt): modes + minima
@@ -103,6 +119,12 @@ def calibrate(sparsity_traces: Dict[int, List[np.ndarray]],
             break
         if l not in lstar and per_layer_hits[l] > 0:
             lstar.append(l)
+    if not lstar:
+        # no layer was tri-modal on ANY prompt: fall back to the first
+        # num_calib_layers layers (see docstring) rather than returning
+        # an empty L* — thresholds below also fall back to the defaults
+        # because cnt stays 0
+        lstar = layers[:num_calib_layers]
     lstar = sorted(lstar)
 
     # thresholds: average the j-th minimum over prompts and layers in L*

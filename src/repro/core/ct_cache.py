@@ -50,8 +50,7 @@ import jax.numpy as jnp
 
 from repro.config import ThinKVConfig, ThoughtType
 from repro.core import quantization as Q
-from repro.core.kmeans import kmeans_select
-from repro.core.policy import psi_bits, retention_at
+from repro.core.policy import get_policy
 from repro.core.thoughts import classify
 
 SCALE_DTYPE = jnp.bfloat16      # e4m3-rounded values (see module docstring)
@@ -192,12 +191,13 @@ def init_cache(dims: CacheDims) -> CTCache:
 # ---------------------------------------------------------------------------
 
 def _quantize_group_by_thought(cfg: ThinKVConfig, k: jax.Array, v: jax.Array,
-                               thought: jax.Array):
+                               thought: jax.Array, policy=None):
     """Quantize [G,H,D] K/V at psi(thought) bits.  bits is traced, so all
-    configured precisions are computed (G=16 tokens — negligible) and
-    selected."""
-    bits = psi_bits(thought, cfg)
-    uniq = sorted(set(cfg.precision))
+    of the policy's precision levels are computed (G=16 tokens —
+    negligible) and selected."""
+    policy = get_policy(policy)
+    bits = policy.psi_bits(thought, cfg)
+    uniq = policy.precision_levels(cfg)
     outs = [(b, Q.quantize_group(k, b), Q.quantize_group(v, b)) for b in uniq]
     kc, ks = outs[0][1]
     vc, vs = outs[0][2]
@@ -240,16 +240,18 @@ def _alloc_slots_one_layer(dims: CacheDims, slot_state, block_type, thought):
 
 
 def commit_group(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-                 view: PoolView) -> Tuple[CTCache, PoolView]:
+                 view: PoolView, policy=None) -> Tuple[CTCache, PoolView]:
     """Quantize the (full) buffer and write it into the pool, reusing evicted
     slots in place.  vmapped over layers."""
+    policy = get_policy(policy)
     t = cache.cur_thought
     positions = cache.num_tokens - dims.G + jnp.arange(dims.G, dtype=jnp.int32)
     k_codes_f, v_codes_f, k_scales_f, v_scales_f = view_flat(view)
 
     def one_layer(buf_k, buf_v, k_codes, v_codes, k_scales, v_scales,
                   slot_state, slot_seg, slot_pos, slot_bits, block_type):
-        kc, ks, vc, vs, bits = _quantize_group_by_thought(cfg, buf_k, buf_v, t)
+        kc, ks, vc, vs, bits = _quantize_group_by_thought(cfg, buf_k, buf_v, t,
+                                                          policy)
         idx, ok = _alloc_slots_one_layer(dims, slot_state, block_type, t)
         # guard: never write through invalid addresses (ok False is a
         # capacity bug surfaced via cache_pressure metrics, not corruption)
@@ -292,25 +294,27 @@ def commit_group(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 
 def commit_and_evict_if_full(cfg: ThinKVConfig, dims: CacheDims,
                              cache: CTCache, view: PoolView,
-                             axis_name: str | None = None
-                             ) -> Tuple[CTCache, PoolView]:
+                             axis_name: str | None = None,
+                             policy=None) -> Tuple[CTCache, PoolView]:
     """Commit the buffer as a group and enforce the per-layer budget when
     the buffer is full (paper Listing 1 checks `kv_size(l) > budget` in the
     step loop; the cache only grows at commits, so commit time is the
     faithful check point)."""
+    policy = get_policy(policy)
 
     def do_commit(args):
         c, v = args
-        c, v = commit_group(cfg, dims, c, v)
-        return budget_evict(cfg, dims, c, v, axis_name=axis_name), v
+        c, v = commit_group(cfg, dims, c, v, policy)
+        return budget_evict(cfg, dims, c, v, axis_name=axis_name,
+                            policy=policy), v
 
     return jax.lax.cond(cache.buf_len >= dims.G, do_commit, lambda a: a,
                         (cache, view))
 
 
 def append_token(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
-                 view: PoolView, k_t: jax.Array, v_t: jax.Array
-                 ) -> Tuple[CTCache, PoolView]:
+                 view: PoolView, k_t: jax.Array, v_t: jax.Array,
+                 policy=None) -> Tuple[CTCache, PoolView]:
     """Append one token's [L,H,D] KV to the fp buffer; commit when full."""
     i = cache.buf_len
     cache = cache.replace(
@@ -321,7 +325,7 @@ def append_token(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
         buf_len=i + 1,
         num_tokens=cache.num_tokens + 1,
     )
-    return commit_and_evict_if_full(cfg, dims, cache, view)
+    return commit_and_evict_if_full(cfg, dims, cache, view, policy=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -374,15 +378,16 @@ def _segment_tokens(dims: CacheDims, slot_seg, slot_state, seg: jax.Array):
 def _anneal_one_segment(cfg: ThinKVConfig, dims: CacheDims, seg: jax.Array,
                         enable: jax.Array, k_codes, k_scales, slot_state,
                         slot_seg, slot_bits, seg_level_row,
-                        axis_name: str | None = None):
+                        axis_name: str | None = None, policy=None):
     """Anneal segment ``seg`` one retention level in ONE layer.  Returns
     updated (slot_state, seg_level_row).  ``k_codes``/``k_scales`` are the
     layer's FLAT [NS, ...] planes (this shard's heads when ``axis_name``
-    is set — the kmeans keys are gathered to the FULL head set so every
+    is set — the selection keys are gathered to the FULL head set so every
     shard makes the same eviction decision as a single device would)."""
+    policy = get_policy(policy)
     idx, valid = _segment_tokens(dims, slot_seg, slot_state, seg)
     level = seg_level_row[seg]
-    target = retention_at(level, cfg)
+    target = policy.retention_at(level, cfg)
     count = jnp.sum(valid.astype(jnp.int32))
     do = enable & (count > 0)
 
@@ -396,9 +401,7 @@ def _anneal_one_segment(cfg: ThinKVConfig, dims: CacheDims, seg: jax.Array,
     keys = gather_heads(keys, axis_name, axis=1)          # shard -> full H
     keys = keys.reshape(keys.shape[0], -1)
 
-    keep_mask = kmeans_select(keys, valid, target,
-                              k_max=max(cfg.retention_schedule),
-                              iters=cfg.kmeans_iters)
+    keep_mask = policy.select_tokens(keys, valid, target, cfg)
     evict = valid & ~keep_mask & do & (count > target)
     # when count <= target nothing is evicted but the level still advances
     new_state = slot_state.at[idx].set(
@@ -422,9 +425,10 @@ def _free_empty_blocks(dims: CacheDims, slot_state, block_type):
 
 def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
                    view: PoolView, before_seg: jax.Array,
-                   axis_name: str | None = None) -> CTCache:
+                   axis_name: str | None = None, policy=None) -> CTCache:
     """Case 1: a transition segment ended — anneal every preceding segment
     (including previous transitions) one retention level, in every layer."""
+    policy = get_policy(policy)
     k_codes_f, _, k_scales_f, _ = view_flat(view)
 
     def one_layer(k_codes, k_scales, slot_state, slot_seg, slot_bits,
@@ -434,7 +438,7 @@ def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
             enable = (seg < before_seg) & (cache.seg_type[seg] >= 0)
             slot_state, seg_level_row = _anneal_one_segment(
                 cfg, dims, seg, enable, k_codes, k_scales, slot_state,
-                slot_seg, slot_bits, seg_level_row, axis_name)
+                slot_seg, slot_bits, seg_level_row, axis_name, policy)
             return (slot_state, seg_level_row), None
 
         (slot_state, seg_level_row), _ = jax.lax.scan(
@@ -454,9 +458,10 @@ def tbe_anneal_all(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 
 def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
                  view: PoolView, max_rounds: int = 4,
-                 axis_name: str | None = None) -> CTCache:
+                 axis_name: str | None = None, policy=None) -> CTCache:
     """Case 2: cache above budget with no transition — anneal the oldest,
     least-important segment one level per round until within budget."""
+    policy = get_policy(policy)
     k_codes_f, _, k_scales_f, _ = view_flat(view)
 
     def one_layer(k_codes, k_scales, slot_state, slot_seg, slot_bits,
@@ -475,14 +480,15 @@ def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
                     1, mode="drop")
                 shrinkable = (counts > cfg.min_retention) & \
                     (cache.seg_type >= 0) & (seg_ids < cache.cur_seg)
-                # least important first (rho == seg_type value), then oldest
-                key = cache.seg_type * dims.S + seg_ids
+                # least important first (policy rho), then oldest; the
+                # default rho IS the seg_type value (T=0 < E=1 < R=2)
+                key = policy.rho(cache.seg_type) * dims.S + seg_ids
                 key = jnp.where(shrinkable, key, jnp.int32(2 ** 30))
                 seg = jnp.argmin(key)
                 enable = jnp.any(shrinkable)
                 return _anneal_one_segment(
                     cfg, dims, seg, enable, k_codes, k_scales, slot_state,
-                    slot_seg, slot_bits, seg_level_row, axis_name)
+                    slot_seg, slot_bits, seg_level_row, axis_name, policy)
 
             return jax.lax.cond(over, do, lambda c: c,
                                 (slot_state, seg_level_row))
@@ -507,10 +513,13 @@ def budget_evict(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
 
 def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
             view: PoolView, sparsity: jax.Array,
-            axis_name: str | None = None) -> CTCache:
+            axis_name: str | None = None, policy=None) -> CTCache:
     """Every tau steps: classify the sparsity into a thought type, close the
     current segment, trigger TBE if the closing segment was a transition,
-    then enforce the budget."""
+    then enforce the budget.  Thought classification is policy-independent
+    (it measures the MODEL); what a policy changes is how each thought is
+    quantized, selected, and evicted."""
+    policy = get_policy(policy)
     new_thought = classify(sparsity, cfg.sparsity_thresholds)
     ended_seg = cache.cur_seg
     ended_type = cache.seg_type[ended_seg]
@@ -518,7 +527,7 @@ def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
     cache = jax.lax.cond(
         ended_type == jnp.int32(ThoughtType.TRANSITION),
         lambda c: tbe_anneal_all(cfg, dims, c, view, before_seg=ended_seg,
-                                 axis_name=axis_name),
+                                 axis_name=axis_name, policy=policy),
         lambda c: c, cache)
 
     nxt = jnp.minimum(ended_seg + 1, dims.S - 1)
@@ -528,7 +537,8 @@ def refresh(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache,
         prev_thought=cache.cur_thought,
         cur_thought=new_thought,
     )
-    return budget_evict(cfg, dims, cache, view, axis_name=axis_name)
+    return budget_evict(cfg, dims, cache, view, axis_name=axis_name,
+                        policy=policy)
 
 
 # ---------------------------------------------------------------------------
@@ -897,7 +907,7 @@ def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
                    table: jax.Array, cache: CTCache, sparsity: jax.Array,
                    active: jax.Array, n_new: jax.Array | int = 1,
                    with_alloc_fail: bool = False, track_cow: bool = True,
-                   axis_name: str | None = None):
+                   axis_name: str | None = None, policy=None):
     """Engine-side ``advance_after_write`` against the shared global pool.
 
     ``n_new`` tokens were written into the buffer this call (1 per decode
@@ -926,7 +936,12 @@ def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
     preemption headroom checks make failure impossible by pausing victims
     before an unbackable commit (counting a committing slot's shared
     blocks as potential COW claims).
+
+    ``policy`` (a TRACE-TIME strategy object, see ``core/policy.py``)
+    selects the retention policy for commits, TBE anneals, and budget
+    eviction; ``None`` is the paper's default ThinKV policy.
     """
+    policy = get_policy(policy)
 
     def advance(args):
         pool, table, cache, _, _ = args
@@ -939,11 +954,12 @@ def engine_advance(cfg: ThinKVConfig, dims: CacheDims, pool: GlobalPool,
             pool, table, cache, _, _ = args
             view0 = gather_view(pool.view, table)
             cache, view = commit_and_evict_if_full(cfg, dims, cache, view0,
-                                                   axis_name=axis_name)
+                                                   axis_name=axis_name,
+                                                   policy=policy)
             cache = jax.lax.cond(
                 at_refresh,
                 lambda c: refresh(cfg, dims, c, view, sparsity,
-                                  axis_name=axis_name),
+                                  axis_name=axis_name, policy=policy),
                 lambda c: c, cache)
             if track_cow:
                 # a slot dirty in ANY shard's heads must COW on EVERY
@@ -1003,3 +1019,21 @@ def memory_stats(cfg: ThinKVConfig, dims: CacheDims, cache: CTCache) -> dict:
         "avg_bits": avg_bits,
         "pressure": used_blocks / dims.NB,
     }
+
+
+def metadata_bytes(dims: CacheDims) -> int:
+    """Exact byte count of one request's :class:`CTCache` METADATA (every
+    field except the bf16 TBQ buffer) — kept next to :func:`init_cache`
+    so the accounting cannot drift from the field list, and pinned
+    against live array ``nbytes`` in ``tests/test_policy.py``.
+
+    Per layer: slot_state/bits (uint8) + slot_seg/pos (int32) per slot,
+    block_type (int8) per block, seg_level (int32) per segment; shared:
+    seg_type (int32) per segment + five int32 scalars."""
+    per_layer = dims.NS * (1 + 4 + 4 + 1) + dims.NB + 4 * dims.S
+    return dims.L * per_layer + 4 * dims.S + 5 * 4
+
+
+def buffer_bytes(dims: CacheDims) -> int:
+    """Exact byte count of the bf16 TBQ buffer (buf_k + buf_v)."""
+    return dims.L * 2 * 2 * dims.G * dims.H * dims.D

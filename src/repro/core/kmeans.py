@@ -99,3 +99,47 @@ def kmeans_select(x: jax.Array, valid: jax.Array, keep: jax.Array,
     take = jnp.arange(n) < deficit
     keep_mask = keep_mask.at[pad_rank].max(take)
     return keep_mask & valid
+
+
+@functools.partial(jax.jit, static_argnames=("k_max",))
+def redundancy_select(x: jax.Array, valid: jax.Array, keep: jax.Array,
+                      k_max: int = 64) -> jax.Array:
+    """Greedy farthest-point (max-min-distance) selection — the
+    redundancy-aware retention core of R-KV-style policies: keep the
+    ``keep`` most mutually DIVERSE key embeddings, so near-duplicate
+    reasoning steps are the first to go.
+
+    Same contract as :func:`kmeans_select`: fixed shapes (``k_max``
+    static, ``keep`` traced), deterministic (argmax ties break to the
+    lowest index), jit/vmap-safe, and the returned mask has exactly
+    ``min(keep, n_valid)`` True rows (== ``valid`` when keep covers it).
+
+    The seed point is the LAST valid row (the newest token) — decode
+    always keeps its most recent context, then diversifies backwards.
+    """
+    n, _ = x.shape
+    x = x.astype(jnp.float32)
+    n_valid = jnp.sum(valid.astype(jnp.int32))
+    keep = jnp.minimum(jnp.maximum(keep, 1), jnp.minimum(n_valid, k_max))
+
+    idx = jnp.arange(n)
+    seed = jnp.argmax(jnp.where(valid, idx, -1))
+    mask0 = valid & (idx == seed)
+    # min squared distance from each row to the selected set; invalid
+    # rows pinned below every real candidate so argmax never picks them
+    d0 = jnp.where(valid, jnp.sum((x - x[seed]) ** 2, -1), -1.0)
+
+    def step(carry, j):
+        mask, dmin = carry
+        cand = jnp.where(valid & ~mask, dmin, -1.0)
+        pick = jnp.argmax(cand)
+        grow = j < keep               # stop growing once keep rows chosen
+        mask = jnp.where(grow, mask.at[pick].set(True), mask)
+        dmin = jnp.where(grow,
+                         jnp.minimum(dmin, jnp.sum((x - x[pick]) ** 2, -1)),
+                         dmin)
+        return (mask, dmin), None
+
+    (mask, _), _ = jax.lax.scan(step, (mask0, d0),
+                                jnp.arange(1, max(k_max, 1)))
+    return mask & valid

@@ -1,9 +1,29 @@
-"""ThinKV policies: importance rho, precision mapping psi, retention schedule.
+"""Retention policies: importance rho, precision mapping psi, retention.
 
-Paper Sec. 3.2 / 4.2 / 4.3:
+Paper Sec. 3.2 / 4.2 / 4.3 (the default ``ThinKVPolicy``):
   rho(R)=2 > rho(E)=1 > rho(T)=0   (thought importance hierarchy)
   psi: R -> 8b FP8 (4b NVFP4 in practice), E -> 4b NVFP4, T -> 2b ternary
   R_schedule = {64, 32, 16, 8, 4}; min retention 4.
+
+This module turns those knobs into a pluggable strategy interface
+(:class:`RetentionPolicy`) so alternative retention designs — R-KV-style
+redundancy-aware selection, a uniform-precision baseline — ride the same
+cache machinery (`core/ct_cache.py`) and serving engine.  See
+``docs/policy.md`` for the contract and the serving-time "SLO dial"
+recipe.
+
+Design constraint: every policy hook is called INSIDE jitted cache code
+(`commit_group`, `tbe_anneal_all`, `budget_evict`, `engine_advance`), so
+a policy is a *static* Python object captured in the jit closure.  Hooks
+receive traced arrays and must return traced arrays of fixed shape; the
+choice of policy can never be dispatched on a traced value.  Two engines
+with different policies are two different compiled programs — exactly
+like two engines with different configs.
+
+Module-level ``rho`` / ``psi_bits`` / ``retention_at`` / ``validate``
+are kept as delegations to :data:`DEFAULT_POLICY` (the paper's ThinKV
+policy) for backward compatibility; the default path is bit-identical
+to the pre-interface code.
 """
 from __future__ import annotations
 
@@ -12,43 +32,204 @@ from typing import Tuple
 import jax
 import jax.numpy as jnp
 
-from repro.config import ThinKVConfig, ThoughtType
+from repro.config import ThinKVConfig
+from repro.core.kmeans import kmeans_select, redundancy_select
 
 
-def rho(thought: jax.Array) -> jax.Array:
-    """Importance score; ThoughtType's integer value IS rho (T=0<E=1<R=2)."""
-    return thought
+def _validate_common(cfg: ThinKVConfig) -> None:
+    """Schedule/precision checks every policy shares.
 
-
-def psi_bits(thought: jax.Array, cfg: ThinKVConfig) -> jax.Array:
-    """Precision (bits) for a thought type.  Monotone in rho by construction
-    (validated in tests): cfg.precision is (T, E, R)-ordered."""
-    prec = jnp.asarray(cfg.precision, jnp.int32)
-    return prec[thought]
-
-
-def retention_at(level: jax.Array, cfg: ThinKVConfig) -> jax.Array:
-    """R_n for the n-th eviction of a segment (clamped at min retention)."""
-    sched = jnp.asarray(cfg.retention_schedule, jnp.int32)
-    idx = jnp.clip(level, 0, len(cfg.retention_schedule) - 1)
-    return jnp.maximum(sched[idx], cfg.min_retention)
-
-
-def validate(cfg: ThinKVConfig) -> None:
-    pt, pe, pr = cfg.precision
-    if not (pt <= pe <= pr):
-        raise ValueError(
-            f"psi must be monotone in rho: precision (T,E,R)={cfg.precision}")
+    Beyond the original checks this also rejects two silently-broken
+    configs: an EMPTY retention schedule (``retention_at`` would index
+    a zero-length array) and a schedule entirely below ``min_retention``
+    (every level clamps to the floor, so "progressive" eviction is a
+    single-step cliff the operator never asked for).
+    """
     if any(b not in (2, 4, 8) for b in cfg.precision):
         raise ValueError(f"unsupported precisions {cfg.precision}")
     sched = cfg.retention_schedule
+    if len(sched) == 0:
+        raise ValueError("retention schedule must be non-empty")
     if list(sched) != sorted(sched, reverse=True):
         raise ValueError("retention schedule must be descending")
     if cfg.min_retention < 1:
         raise ValueError("min retention must be >= 1 (paper Fig. 11a: full "
                          "eviction causes endless reasoning loops)")
+    if max(sched) < cfg.min_retention:
+        raise ValueError(
+            f"retention schedule {sched} is entirely below min_retention="
+            f"{cfg.min_retention}: every level clamps to the floor, so the "
+            f"schedule expresses nothing (raise the schedule or lower the "
+            f"floor)")
     if cfg.group_size > cfg.refresh_interval:
         raise ValueError("group must fit within a refresh interval")
+
+
+class RetentionPolicy:
+    """Strategy interface for thought-aware KV retention.
+
+    Hooks (all called inside jit; arrays in, arrays out, fixed shapes):
+
+    * ``rho(thought)`` — importance score per thought type; drives the
+      eviction victim ordering in ``budget_evict`` (lower rho evicted
+      first, oldest-first within a rho class).
+    * ``psi_bits(thought, cfg)`` — quantization bit-width per thought.
+    * ``precision_levels(cfg)`` — STATIC tuple of distinct bit-widths
+      ``psi_bits`` can emit; ``commit_group`` quantizes once per level
+      and selects, so this bounds compiled work.
+    * ``retention_at(level, cfg)`` — tokens retained at the n-th
+      progressive eviction of a segment (clamped at min retention).
+    * ``select_tokens(keys, valid, keep, cfg)`` — which ``keep`` tokens
+      of one segment survive an anneal; must return a bool mask with
+      exactly ``min(keep, n_valid)`` True rows (same contract as
+      :func:`repro.core.kmeans.kmeans_select`).
+    * ``validate(cfg)`` — reject configs the policy cannot serve.
+    """
+
+    name: str = "abstract"
+
+    def rho(self, thought: jax.Array) -> jax.Array:
+        raise NotImplementedError
+
+    def psi_bits(self, thought: jax.Array, cfg: ThinKVConfig) -> jax.Array:
+        raise NotImplementedError
+
+    def precision_levels(self, cfg: ThinKVConfig) -> Tuple[int, ...]:
+        raise NotImplementedError
+
+    def retention_at(self, level: jax.Array, cfg: ThinKVConfig) -> jax.Array:
+        """R_n for the n-th eviction of a segment (min-retention clamp);
+        levels past the schedule end hold the LAST schedule entry."""
+        sched = jnp.asarray(cfg.retention_schedule, jnp.int32)
+        idx = jnp.clip(level, 0, len(cfg.retention_schedule) - 1)
+        return jnp.maximum(sched[idx], cfg.min_retention)
+
+    def select_tokens(self, keys: jax.Array, valid: jax.Array,
+                      keep: jax.Array, cfg: ThinKVConfig) -> jax.Array:
+        raise NotImplementedError
+
+    def validate(self, cfg: ThinKVConfig) -> None:
+        _validate_common(cfg)
+
+    def __repr__(self) -> str:                       # pragma: no cover
+        return f"{type(self).__name__}({self.name!r})"
+
+
+class ThinKVPolicy(RetentionPolicy):
+    """The paper's policy: thought-importance precision + TBE k-means."""
+
+    name = "thinkv"
+
+    def rho(self, thought):
+        """ThoughtType's integer value IS rho (T=0 < E=1 < R=2)."""
+        return thought
+
+    def psi_bits(self, thought, cfg):
+        """Monotone in rho by construction (enforced by ``validate``):
+        cfg.precision is (T, E, R)-ordered."""
+        prec = jnp.asarray(cfg.precision, jnp.int32)
+        return prec[thought]
+
+    def precision_levels(self, cfg):
+        return tuple(sorted(set(cfg.precision)))
+
+    def select_tokens(self, keys, valid, keep, cfg):
+        return kmeans_select(keys, valid, keep,
+                             k_max=max(cfg.retention_schedule),
+                             iters=cfg.kmeans_iters)
+
+    def validate(self, cfg):
+        _validate_common(cfg)
+        pt, pe, pr = cfg.precision
+        if not (pt <= pe <= pr):
+            raise ValueError(
+                f"psi must be monotone in rho: precision (T,E,R)="
+                f"{cfg.precision}")
+
+
+class RKVPolicy(ThinKVPolicy):
+    """R-KV-style redundancy-aware retention: same thought-adaptive
+    precision as ThinKV, but an anneal keeps the most DIVERSE keys
+    (greedy farthest-point selection) instead of k-means medoids —
+    redundant near-duplicate reasoning steps are evicted first."""
+
+    name = "rkv"
+
+    def select_tokens(self, keys, valid, keep, cfg):
+        return redundancy_select(keys, valid, keep,
+                                 k_max=max(cfg.retention_schedule))
+
+
+class UniformPolicy(RetentionPolicy):
+    """Uniform-precision baseline: every thought quantized at 4 bits,
+    no importance hierarchy (rho == 0 everywhere, so ``budget_evict``
+    degrades to pure oldest-first), anneals keep the most RECENT tokens.
+    The control arm for the cache-size-vs-drift frontier."""
+
+    name = "uniform"
+    bits = 4
+
+    def rho(self, thought):
+        return jnp.zeros_like(thought)
+
+    def psi_bits(self, thought, cfg):
+        return jnp.full(jnp.shape(thought), self.bits, jnp.int32)
+
+    def precision_levels(self, cfg):
+        return (self.bits,)
+
+    def select_tokens(self, keys, valid, keep, cfg):
+        n = keys.shape[0]
+        n_valid = jnp.sum(valid.astype(jnp.int32))
+        keep = jnp.minimum(jnp.maximum(keep, 1), n_valid)
+        # rank 1 = newest valid row (slot order is append order within
+        # a segment); keep the newest ``keep``
+        newest_rank = jnp.cumsum(valid[::-1].astype(jnp.int32))[::-1]
+        return valid & (newest_rank <= keep)
+
+
+# ---------------------------------------------------------------------------
+# registry + module-level compatibility surface
+# ---------------------------------------------------------------------------
+
+DEFAULT_POLICY = ThinKVPolicy()
+
+POLICIES = {
+    p.name: p for p in (DEFAULT_POLICY, RKVPolicy(), UniformPolicy())
+}
+
+
+def get_policy(policy) -> RetentionPolicy:
+    """Resolve a policy name (or pass through a policy instance)."""
+    if policy is None:
+        return DEFAULT_POLICY
+    if isinstance(policy, RetentionPolicy):
+        return policy
+    try:
+        return POLICIES[policy]
+    except KeyError:
+        raise ValueError(
+            f"unknown retention policy {policy!r}; registered: "
+            f"{sorted(POLICIES)}") from None
+
+
+def rho(thought: jax.Array) -> jax.Array:
+    """Importance score; ThoughtType's integer value IS rho (T=0<E=1<R=2)."""
+    return DEFAULT_POLICY.rho(thought)
+
+
+def psi_bits(thought: jax.Array, cfg: ThinKVConfig) -> jax.Array:
+    """Precision (bits) for a thought type under the default policy."""
+    return DEFAULT_POLICY.psi_bits(thought, cfg)
+
+
+def retention_at(level: jax.Array, cfg: ThinKVConfig) -> jax.Array:
+    """R_n for the n-th eviction of a segment (clamped at min retention)."""
+    return DEFAULT_POLICY.retention_at(level, cfg)
+
+
+def validate(cfg: ThinKVConfig) -> None:
+    DEFAULT_POLICY.validate(cfg)
 
 
 def default_thresholds() -> Tuple[float, float]:

@@ -79,17 +79,18 @@ def layer_sparsity(dims: CC.CacheDims, cache: CC.CTCache, view: CC.PoolView,
 
 def step_token(cfg: ThinKVConfig, dims: CC.CacheDims, cache: CC.CTCache,
                view: CC.PoolView, k_t: jax.Array, v_t: jax.Array,
-               sparsity: Optional[jax.Array] = None
+               sparsity: Optional[jax.Array] = None, policy=None
                ) -> Tuple[CC.CTCache, CC.PoolView]:
     """One generation step's cache updates: append (+commit), and at tau
     boundaries run the thought refresh with the supplied sparsity."""
-    cache, view = CC.append_token(cfg, dims, cache, view, k_t, v_t)
+    cache, view = CC.append_token(cfg, dims, cache, view, k_t, v_t,
+                                  policy=policy)
     if sparsity is None:
         return cache, view
     at_refresh = (cache.num_tokens % cfg.refresh_interval) == 0
     cache = jax.lax.cond(
         at_refresh,
-        lambda c: CC.refresh(cfg, dims, c, view, sparsity),
+        lambda c: CC.refresh(cfg, dims, c, view, sparsity, policy=policy),
         lambda c: c, cache)
     return cache, view
 
@@ -105,7 +106,11 @@ def compression_ratio(cfg: ThinKVConfig, dims: CC.CacheDims,
     # FullKV: K+V bf16, all layers
     full_bytes = full_tokens * 2 * 2 * dims.H * dims.D * dims.L
     phys = jnp.sum(stats["physical_bytes"]).astype(jnp.float32)
-    meta = dims.L * (dims.NS * (1 + 4 + 4 + 1) + dims.NB)  # state/seg/pos/bits
-    buf = dims.L * 2 * 2 * dims.G * dims.H * dims.D
+    # metadata/buffer bytes from the shared accounting next to the field
+    # definitions (CC.metadata_bytes is pinned against live array nbytes
+    # in tests — the hand-written constants that used to live here had
+    # drifted: they omitted seg_type/seg_level and the int32 scalars)
+    meta = CC.metadata_bytes(dims)
+    buf = CC.buffer_bytes(dims)
     ratio = (phys + meta + buf) / jnp.maximum(full_bytes, 1)
     return {**stats, "footprint_frac": ratio, "full_bytes": full_bytes}

@@ -214,6 +214,21 @@ def main():
                          "trace on an UNSHARDED engine and fail unless "
                          "every request's logits are bit-identical and "
                          "both pool audits are clean")
+    ap.add_argument("--policy", default="thinkv",
+                    choices=("thinkv", "rkv", "uniform"),
+                    help="retention policy: the paper's thought-adaptive "
+                         "rho/psi schedule (thinkv), redundancy-aware "
+                         "farthest-point retention (rkv), or a uniform "
+                         "4-bit recency baseline (uniform)")
+    ap.add_argument("--drift-probe", action="store_true",
+                    help="replay every finished request through an "
+                         "uncompressed dense forward and report logit "
+                         "drift vs the serving path (quality telemetry; "
+                         "needs --stream)")
+    ap.add_argument("--expect-drift", action="store_true",
+                    help="CI gate (needs --drift-probe): fail unless "
+                         "every finished request carries finite drift "
+                         "stats with top-1 agreement recorded")
     ap.add_argument("--expect-multi-tick", action="store_true",
                     help="CI gate (needs --ticks-per-dispatch > 1, greedy):"
                          " fail unless mean ticks/dispatch > 1 with >= 1 "
@@ -239,6 +254,11 @@ def main():
     if args.expect_multi_tick and args.temperature > 0:
         ap.error("--expect-multi-tick needs --temperature 0 for the "
                  "bit-exact per-tick parity replay")
+    if args.drift_probe and not args.stream:
+        ap.error("--drift-probe requires --stream (the probe fires from "
+                 "the orchestrator's finish hook)")
+    if args.expect_drift and not args.drift_probe:
+        ap.error("--expect-drift requires --drift-probe")
 
     mcfg = get_config(args.arch) if args.full else get_smoke_config(args.arch)
     if args.heads is not None:
@@ -269,6 +289,7 @@ def main():
                        prefix_cache=args.prefix_cache, mesh=mesh,
                        ticks_per_dispatch=args.ticks_per_dispatch,
                        allow_forks=args.samples_per_slot > 1,
+                       policy=args.policy, drift_probe=args.drift_probe,
                        record_logits=(args.expect_mesh_parity or
                                       args.expect_stream_parity))
     rng = np.random.default_rng(0)
@@ -295,9 +316,19 @@ def main():
     wall = eng.metrics["wall_s"]
     fr = np.mean([r.stats["footprint_frac"] for r in done])
     bits = np.mean([r.stats["avg_bits"] for r in done])
-    print(f"served {len(done)} requests | {toks} tokens in {wall:.1f}s "
+    print(f"served {len(done)} requests [policy={args.policy}] | {toks} "
+          f"tokens in {wall:.1f}s "
           f"({toks / wall:.1f} tok/s interp-CPU) | "
           f"mean footprint {fr * 100:.2f}% of FullKV | avg {bits:.2f} bits")
+    if args.drift_probe:
+        drifts = [r.stats["drift"] for r in done if "drift" in r.stats]
+        if drifts:
+            mx = max(d["max_abs"] for d in drifts)
+            mean = np.mean([d["mean_abs"] for d in drifts])
+            agree = np.mean([d["top1_agree"] for d in drifts])
+            print(f"drift probe: {len(drifts)} requests vs uncompressed "
+                  f"replay | max |dlogit| {mx:.4f} | mean |dlogit| "
+                  f"{mean:.4f} | top-1 agreement {agree * 100:.1f}%")
     print(f"pool {eng.num_pool_blocks}/{worst_case} blocks "
           f"({100.0 * eng.num_pool_blocks / worst_case:.0f}% of worst case)"
           f" | {eng.metrics['preemptions']} preemptions, "
@@ -382,7 +413,7 @@ def main():
         ref = ThinKVEngine(cfg, params=eng.params, backend=args.backend,
                            pool_blocks=pool_blocks,
                            prefix_cache=args.prefix_cache,
-                           record_logits=True)
+                           policy=args.policy, record_logits=True)
         ref.submit([p.copy() for p in prompts],
                    max_new_tokens=args.max_new, priorities=priorities)
         ref_done = ref.run()
@@ -438,7 +469,7 @@ def main():
         ref = ThinKVEngine(cfg, params=eng.params, backend=args.backend,
                            pool_blocks=pool_blocks,
                            prefix_cache=args.prefix_cache,
-                           record_logits=True)
+                           policy=args.policy, record_logits=True)
         ref.submit([p.copy() for p in prompts],
                    max_new_tokens=args.max_new, priorities=priorities)
         ref_done = ref.run()
@@ -477,6 +508,24 @@ def main():
         print(f"mesh-parity gate OK: {len(done)} requests, {logit_steps} "
               f"logit steps bit-identical between --mesh {args.mesh} and "
               f"the unsharded engine; both audits clean")
+    if args.expect_drift:
+        drifts = [r.stats.get("drift") for r in done]
+        missing = sum(1 for d in drifts if d is None)
+        bad = [d for d in drifts if d is not None and
+               not (np.isfinite(d["max_abs"]) and np.isfinite(d["mean_abs"])
+                    and d["steps"] > 0)]
+        drift_events = sum(1 for e in orch.events if e["kind"] == "drift")
+        if missing or bad or eng.metrics["drift_probes"] != len(done) or \
+                drift_events != len(done):
+            raise SystemExit(
+                f"drift gate FAILED: {missing} request(s) without drift "
+                f"stats, {len(bad)} with non-finite/empty stats, "
+                f"{eng.metrics['drift_probes']} probes and {drift_events} "
+                f"drift events for {len(done)} requests")
+        agree = np.mean([d["top1_agree"] for d in drifts])
+        print(f"drift gate OK: {len(done)}/{len(done)} requests probed "
+              f"against the uncompressed replay, all stats finite, "
+              f"top-1 agreement {agree * 100:.1f}%")
     if args.expect_multi_tick:
         m = eng.metrics
         fails = []
@@ -514,6 +563,7 @@ def main():
         ref = ThinKVEngine(cfg, params=eng.params, backend=args.backend,
                            pool_blocks=pool_blocks,
                            prefix_cache=args.prefix_cache,
+                           policy=args.policy,
                            allow_forks=args.samples_per_slot > 1)
         if args.stream:
             _, _, _, ref_streams = _run_streamed(

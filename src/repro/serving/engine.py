@@ -219,6 +219,11 @@ from repro.serving.scheduler import Request, Scheduler
 
 NEG_INF = -1e30
 
+# drift-probe length bucket: reference replays pad prompt+output to the
+# next multiple so the number of distinct compiled shapes (and hence
+# probe retraces) is bounded by max_len / DRIFT_PAD, not by request count
+DRIFT_PAD = 32
+
 
 def _sample_slots(slot_rngs, logits, temperature: float, top_p: float):
     """Sample every slot's next token from ``logits [R, V]`` with the
@@ -487,7 +492,9 @@ class ThinKVEngine:
                  prefix_cache_capacity: int = 64,
                  ticks_per_dispatch: int = 1,
                  allow_forks: bool = False,
-                 mesh=None):
+                 mesh=None,
+                 policy=None,
+                 drift_probe: bool = False):
         assert cfg.model.family in (ArchFamily.DENSE, ArchFamily.MOE,
                                     ArchFamily.VLM), \
             "engine demo covers decoder-only backbones (the paper's scope)"
@@ -503,6 +510,15 @@ class ThinKVEngine:
         self.cfg = cfg
         self.mcfg = cfg.model
         self.tk = cfg.thinkv
+        # retention policy: a TRACE-TIME strategy object (name or
+        # instance; see core/policy.py + docs/policy.md) captured in the
+        # jit closures below — two engines with different policies are
+        # two different compiled programs.  The default resolves to the
+        # paper's ThinKVPolicy and compiles bit-identically to the
+        # pre-policy-interface engine.
+        from repro.core.policy import get_policy
+        self.policy = get_policy(policy)
+        self.policy.validate(cfg.thinkv)
         from repro.models import build_model
         self.model = build_model(cfg.model)
         self.params = params if params is not None \
@@ -571,6 +587,17 @@ class ThinKVEngine:
         self._prefill_big = jax.jit(self._prefill_big_fn) if prefill_chunk \
             else None
         self._reset_slot = jax.jit(self._make_reset())
+        # logit-drift probe: replays each finished request through the
+        # UNCOMPRESSED dense forward and compares against the logits the
+        # compressed serving path actually produced (needs them recorded)
+        self.drift_probe = bool(drift_probe)
+        if self.drift_probe:
+            record_logits = True
+            self._drift_probe_fn = self._make_drift_probe()
+            self._drift_probe_jit = jax.jit(self._drift_probe_fn)
+        else:
+            self._drift_probe_fn = None
+            self._drift_probe_jit = None
         self.record_logits = record_logits
         self.trace: List[Dict] = []          # per-call logits (for parity)
         # per-request logits sequences keyed by arrival stamp (parity tests
@@ -592,7 +619,9 @@ class ThinKVEngine:
                                           "peak_refcount": 0,
                                           "early_exit_finish": 0,
                                           "early_exit_headroom": 0,
-                                          "cancellations": 0}
+                                          "cancellations": 0,
+                                          "drift_probes": 0,
+                                          "drift_max_abs": 0.0}
         from repro.serving.prefix_cache import PrefixCache
         self.prefix_cache = PrefixCache(
             self.dims, capacity=prefix_cache_capacity) \
@@ -850,7 +879,7 @@ class ThinKVEngine:
                 pool, table_r, cache_r, fail_r, cow_r = CC.engine_advance(
                     tk, dims, pool, table_r, cache_r, spars_r, active_r,
                     with_alloc_fail=True, track_cow=self._track_cow,
-                    axis_name=ax)
+                    axis_name=ax, policy=self.policy)
                 return pool, (table_r, cache_r, fail_r, cow_r)
 
             pool, (tables_out, caches, alloc_fail, cow_faults) = \
@@ -1049,7 +1078,8 @@ class ThinKVEngine:
             pool, table, cache, fail, n_cow = CC.engine_advance(
                 tk, dims, pool, table, cache, sparsity,
                 jnp.bool_(True), n_new=n_valid, with_alloc_fail=True,
-                track_cow=self._track_cow, axis_name=ax)
+                track_cow=self._track_cow, axis_name=ax,
+                policy=self.policy)
 
             h = rmsnorm(params["final_norm"], h, cfg.norm_eps)
             last = jnp.clip(n_valid - 1, 0, C - 1)
@@ -1200,7 +1230,8 @@ class ThinKVEngine:
                 pool, table, cache, fail, n_cow = CC.engine_advance(
                     tk, dims, pool, table, cache, sparsity, jnp.bool_(True),
                     n_new=dims.G, with_alloc_fail=True,
-                    track_cow=self._track_cow, axis_name=ax)
+                    track_cow=self._track_cow, axis_name=ax,
+                    policy=self.policy)
                 return (pool, table, cache), (fail, n_cow)
 
             (pool, table, cache), (fails, n_cows) = jax.lax.scan(
@@ -1217,6 +1248,81 @@ class ThinKVEngine:
             big_step,
             in_specs=(rep, pool_s, rep, cache_s, rep),
             out_specs=(pool_s, rep, cache_s, rep, rep, rep))
+
+    # ------------------------------------------------------------------
+    # logit-drift probe (quality telemetry; see docs/policy.md)
+    # ------------------------------------------------------------------
+
+    def _make_drift_probe(self):
+        """Uncompressed REFERENCE forward for the drift probe: a dense
+        teacher-forced pass (no ThinKV cache, no quantization, no
+        eviction) over one request's ``prompt + output`` tokens,
+        returning the logits at EVERY position.  Built from the same
+        blocks as ``serve_step.make_prefill_step`` (assemble_inputs →
+        backbone → unembed), so its numerics are the established dense
+        path, not a third implementation.
+
+        The probe runs replicated (plain jit, no shard_map): it is
+        per-finished-request telemetry off the tick hot path.  Causal
+        attention makes right-padding harmless — positions < length are
+        bit-independent of the pad tail."""
+        cfg = self.mcfg
+
+        def probe(params, tokens):
+            from repro.models import lm
+            h, positions = lm.assemble_inputs(params, {"tokens": tokens},
+                                              cfg)
+            h, _ = lm.backbone(params, h, cfg, positions, remat=True)
+            lg = E.unembed(params["embed"], h, cfg)
+            return softcap(lg, cfg.logit_softcap)
+
+        return probe
+
+    def measure_drift(self, prompt: np.ndarray, output: Sequence[int],
+                      recorded: Sequence[np.ndarray]) -> Dict[str, float]:
+        """Compare a finished request's RECORDED serving logits (one
+        [V] array per emitted token: the prefill boundary + each decode
+        tick) against the uncompressed dense replay of the same token
+        sequence.  Returns per-request drift metrics.
+
+        ``recorded[i]`` predicted ``output[i]`` from the COMPRESSED
+        cache state at context ``prompt + output[:i]``; the reference
+        replay's position ``len(prompt) - 1 + i`` predicts the same
+        token from the full-precision context.  The delta therefore
+        folds in everything the serving path does differently —
+        quantization, progressive eviction, AND the attention-late tick
+        dataflow.  That dataflow is identical across retention policies,
+        so cross-policy drift comparisons isolate the policy."""
+        assert self.drift_probe, "engine built without drift_probe=True"
+        p = int(len(prompt))
+        toks = np.concatenate([np.asarray(prompt, np.int64),
+                               np.asarray(list(output), np.int64)])
+        n = len(toks) - 1 if len(output) else len(toks)
+        pad = -(-max(n, 1) // DRIFT_PAD) * DRIFT_PAD
+        buf = np.zeros((1, pad), np.int32)
+        buf[0, :n] = toks[:n]
+        ref = np.asarray(self._drift_probe_jit(self.params,
+                                               jnp.asarray(buf)))[0]
+        steps = min(len(output), len(recorded))
+        max_abs = mean_abs = 0.0
+        top1 = 0
+        for i in range(steps):
+            got = np.asarray(recorded[i], np.float32).reshape(-1)
+            want = ref[p - 1 + i].astype(np.float32)
+            d = np.abs(got - want)
+            max_abs = max(max_abs, float(d.max()))
+            mean_abs += float(d.mean())
+            top1 += int(np.argmax(got) == np.argmax(want))
+        out = {
+            "steps": steps,
+            "max_abs": max_abs,
+            "mean_abs": mean_abs / max(steps, 1),
+            "top1_agree": top1 / max(steps, 1),
+        }
+        self.metrics["drift_probes"] += 1
+        self.metrics["drift_max_abs"] = max(
+            self.metrics["drift_max_abs"], max_abs)
+        return out
 
     # ------------------------------------------------------------------
     # compiled-path contract auditing (repro.analysis)
@@ -1253,6 +1359,10 @@ class ThinKVEngine:
             eps["_prefill_big_fn"] = (self._prefill_big_fn, (
                 self.params, self.pool, self.tables[0], cache0,
                 jnp.zeros(self.prefill_chunk, jnp.int32)))
+        if self._drift_probe_fn is not None:
+            eps["_drift_probe_fn"] = (self._drift_probe_fn, (
+                self.params,
+                jnp.zeros((1, DRIFT_PAD), jnp.int32)))
         return eps
 
     def audit_compiled(self):

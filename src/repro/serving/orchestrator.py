@@ -557,6 +557,15 @@ class Orchestrator:
         if done:
             req.stats = eng.slot_stats(slot.idx)
             req.stats["preemptions"] = req.preemptions
+            if getattr(eng, "drift_probe", False):
+                # quality telemetry: replay the finished request through
+                # the uncompressed dense forward and compare against the
+                # serving-path logits recorded tick by tick
+                drift = eng.measure_drift(
+                    req.prompt, req.output,
+                    eng.request_logits.get(req.arrival, []))
+                req.stats["drift"] = drift
+                self._log("drift", arrival=req.arrival, tick=tick, **drift)
             eng.scheduler.retire(slot)
             eng.free_resource(slot.idx)
             self._log("finish", arrival=req.arrival, tick=tick)

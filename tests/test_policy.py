@@ -1,0 +1,270 @@
+"""Retention-policy strategy layer (docs/policy.md): registry, per-policy
+interface invariants (psi monotone in rho, selection contracts), config
+validation hardening, retention-schedule boundaries, and the cache
+byte-accounting pins backing ``compression_ratio``."""
+import dataclasses
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.config import ThinKVConfig, ThoughtType
+from repro.core import ct_cache as CC
+from repro.core import policy as P
+from repro.core.kmeans import redundancy_select
+
+
+def _cfg(**kw):
+    base = dict(refresh_interval=8, group_size=8, block_size=8,
+                token_budget=32, retention_schedule=(16, 8, 4),
+                min_retention=4, max_segments=64, kmeans_iters=2)
+    base.update(kw)
+    return ThinKVConfig(**base)
+
+
+# ---------------------------------------------------------------------------
+# registry + resolution
+# ---------------------------------------------------------------------------
+
+def test_registry_has_all_three_policies():
+    assert set(P.POLICIES) == {"thinkv", "rkv", "uniform"}
+    for name, pol in P.POLICIES.items():
+        assert pol.name == name
+
+
+def test_get_policy_resolution():
+    assert P.get_policy(None) is P.DEFAULT_POLICY
+    assert P.get_policy("rkv") is P.POLICIES["rkv"]
+    inst = P.UniformPolicy()
+    assert P.get_policy(inst) is inst
+    with pytest.raises(ValueError, match="rkv"):
+        P.get_policy("nope")
+
+
+def test_default_policy_is_thinkv_and_module_delegates():
+    """The module-level functions the pre-policy code imported must
+    delegate to the default (paper) policy — same arrays out."""
+    cfg = _cfg()
+    thought = jnp.asarray([0, 1, 2], jnp.int32)
+    assert isinstance(P.DEFAULT_POLICY, P.ThinKVPolicy)
+    np.testing.assert_array_equal(
+        P.rho(thought), P.DEFAULT_POLICY.rho(thought))
+    np.testing.assert_array_equal(
+        P.psi_bits(thought, cfg), P.DEFAULT_POLICY.psi_bits(thought, cfg))
+    lvl = jnp.int32(1)
+    np.testing.assert_array_equal(
+        P.retention_at(lvl, cfg), P.DEFAULT_POLICY.retention_at(lvl, cfg))
+
+
+# ---------------------------------------------------------------------------
+# psi monotone in rho — for EVERY registered policy
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(P.POLICIES))
+def test_psi_bits_monotone_in_rho(name):
+    """More important thoughts (higher rho) never get FEWER bits."""
+    pol = P.POLICIES[name]
+    cfg = _cfg()
+    thoughts = jnp.asarray([int(t) for t in ThoughtType], jnp.int32)
+    rho = np.asarray(pol.rho(thoughts))
+    bits = np.asarray(pol.psi_bits(thoughts, cfg))
+    order = np.argsort(rho, kind="stable")
+    assert (np.diff(bits[order]) >= 0).all(), (rho, bits)
+    # and every assigned width is a declared static level
+    assert set(bits.tolist()) <= set(pol.precision_levels(cfg))
+
+
+def test_thinkv_psi_matches_paper_mapping():
+    """psi follows cfg.precision indexed by thought type: transitions
+    cheapest, execution/reasoning at the higher widths."""
+    cfg = _cfg()   # precision defaults to (2, 4, 4) in (T, E, R) order
+    pol = P.POLICIES["thinkv"]
+    t = jnp.asarray([int(ThoughtType.TRANSITION), int(ThoughtType.EXECUTION),
+                     int(ThoughtType.REASONING)], jnp.int32)
+    assert np.asarray(pol.psi_bits(t, cfg)).tolist() == [2, 4, 4]
+
+
+def test_uniform_policy_is_flat():
+    cfg = _cfg()
+    pol = P.POLICIES["uniform"]
+    t = jnp.asarray([0, 1, 2], jnp.int32)
+    assert np.asarray(pol.psi_bits(t, cfg)).tolist() == [4, 4, 4]
+    assert np.asarray(pol.rho(t)).tolist() == [0, 0, 0]
+    assert pol.precision_levels(cfg) == (4,)
+
+
+# ---------------------------------------------------------------------------
+# retention_at: schedule boundaries
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(P.POLICIES))
+def test_retention_at_boundaries(name):
+    """Levels past the schedule end clamp to the last entry; every level
+    respects the min_retention floor; level 0 is the full first entry."""
+    pol = P.POLICIES[name]
+    cfg = _cfg(retention_schedule=(16, 8, 4), min_retention=4)
+    sched = cfg.retention_schedule
+    assert int(pol.retention_at(jnp.int32(0), cfg)) == sched[0]
+    assert int(pol.retention_at(jnp.int32(2), cfg)) == sched[2]
+    # PAST the schedule end: clamps to the last level, no OOB garbage
+    for lvl in (3, 7, 100):
+        assert int(pol.retention_at(jnp.int32(lvl), cfg)) == sched[-1]
+    # negative levels clamp to the first entry rather than wrapping
+    assert int(pol.retention_at(jnp.int32(-1), cfg)) == sched[0]
+    # min_retention floors a schedule tail below it
+    cfg2 = _cfg(retention_schedule=(16, 8, 2), min_retention=4)
+    assert int(pol.retention_at(jnp.int32(2), cfg2)) == 4
+
+
+# ---------------------------------------------------------------------------
+# validate hardening (regressions)
+# ---------------------------------------------------------------------------
+
+def test_validate_rejects_empty_schedule():
+    with pytest.raises(ValueError, match="non-empty"):
+        P.validate(_cfg(retention_schedule=()))
+
+
+def test_validate_rejects_schedule_entirely_below_floor():
+    """A schedule entirely below min_retention used to validate cleanly:
+    every level clamps to the floor and the schedule expresses nothing."""
+    with pytest.raises(ValueError, match="entirely below min_retention"):
+        P.validate(_cfg(retention_schedule=(3, 2, 1), min_retention=4))
+
+
+def test_validate_allows_partial_clamp():
+    # only the TAIL below the floor is fine — the head still anneals
+    P.validate(_cfg(retention_schedule=(16, 8, 2), min_retention=4))
+
+
+@pytest.mark.parametrize("name", sorted(P.POLICIES))
+def test_validate_runs_for_every_policy(name):
+    P.POLICIES[name].validate(_cfg())
+    with pytest.raises(ValueError):
+        P.POLICIES[name].validate(_cfg(retention_schedule=()))
+
+
+def test_thinkv_validate_rejects_inverted_precision():
+    """Transitions must not get MORE bits than execution/reasoning."""
+    with pytest.raises(ValueError):
+        P.POLICIES["thinkv"].validate(_cfg(precision=(8, 4, 4)))
+
+
+# ---------------------------------------------------------------------------
+# select_tokens contracts
+# ---------------------------------------------------------------------------
+
+def _selection_contract(pol, rng):
+    # schedule head >= n so the selector's static k_max bound (= max
+    # schedule entry, the largest keep the pipeline can ever request)
+    # never truncates below the keep values this contract sweeps
+    cfg = _cfg(retention_schedule=(24, 8, 4))
+    n, d = 24, 8
+    x = jnp.asarray(rng.standard_normal((n, d)), jnp.float32)
+    valid = jnp.asarray(rng.random(n) < 0.7)
+    n_valid = int(valid.sum())
+    for keep in (1, 4, n_valid, n):
+        mask = np.asarray(pol.select_tokens(x, valid, jnp.int32(keep), cfg))
+        assert mask.shape == (n,)
+        assert not (mask & ~np.asarray(valid)).any(), "kept an invalid row"
+        assert mask.sum() == min(max(keep, 1), n_valid)
+
+
+@pytest.mark.parametrize("name", sorted(P.POLICIES))
+def test_select_tokens_contract(name, rng):
+    _selection_contract(P.POLICIES[name], rng)
+
+
+def test_redundancy_select_prefers_diversity():
+    """Farthest-point selection keeps the outlier over near-duplicates."""
+    x = np.zeros((8, 2), np.float32)
+    x[:6] = [0.0, 0.0]            # six near-duplicates at the origin
+    x[6] = [10.0, 0.0]            # a far outlier
+    x[7] = [0.1, 0.0]             # the newest token (seed)
+    mask = np.asarray(redundancy_select(
+        jnp.asarray(x), jnp.ones(8, bool), jnp.int32(2)))
+    assert mask[7], "seed (newest valid token) must always be kept"
+    assert mask[6], "the diverse outlier must beat the duplicates"
+    assert mask.sum() == 2
+
+
+def test_redundancy_select_all_invalid_is_empty():
+    x = jnp.zeros((6, 4), jnp.float32)
+    mask = np.asarray(redundancy_select(x, jnp.zeros(6, bool), jnp.int32(3)))
+    assert not mask.any()
+
+
+def test_uniform_select_keeps_newest():
+    cfg = _cfg()
+    pol = P.POLICIES["uniform"]
+    x = jnp.zeros((10, 4), jnp.float32)
+    valid = jnp.asarray([1, 1, 0, 1, 1, 0, 1, 1, 1, 0], bool)
+    mask = np.asarray(pol.select_tokens(x, valid, jnp.int32(3), cfg))
+    assert mask.tolist() == [0, 0, 0, 0, 0, 0, 1, 1, 1, 0]
+
+
+# ---------------------------------------------------------------------------
+# policies compose with the cache pipeline end to end
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("name", sorted(P.POLICIES))
+def test_policy_through_cache_pipeline(name, rng):
+    """append/commit/refresh with each policy: valid state, budget held."""
+    from repro.core import thinkv as TK
+    cfg = _cfg(token_budget=24)
+    dims = CC.make_dims(cfg, num_layers=2, kv_heads=2, head_dim=32)
+    cache = CC.init_cache(dims)
+    view = CC.init_pool_view(dims)
+    pol = P.POLICIES[name]
+
+    # one compiled step per policy (the policy is a static strategy
+    # object captured in the closure, exactly as the engine uses it)
+    @jax.jit
+    def step(cache, view, k, v, sparsity):
+        return TK.step_token(cfg, dims, cache, view, k, v,
+                             sparsity=sparsity, policy=pol)
+
+    for t in range(40):
+        k = jnp.asarray(rng.standard_normal((dims.L, dims.H, dims.D)),
+                        jnp.float32)
+        v = jnp.asarray(rng.standard_normal((dims.L, dims.H, dims.D)),
+                        jnp.float32)
+        cache, view = step(cache, view, k, v, jnp.float32(0.3 + 0.02 * t))
+    assert int(cache.num_tokens) == 40
+    # committed token slots never exceed the budget plus one group of
+    # commit slack (eviction runs on the crossing, not mid-group)
+    committed = int(np.asarray(
+        (np.asarray(cache.slot_state) == 1).sum(axis=1)).max())
+    assert committed <= cfg.token_budget + cfg.group_size, \
+        (name, committed)
+
+
+# ---------------------------------------------------------------------------
+# byte accounting pins (compression_ratio regression)
+# ---------------------------------------------------------------------------
+
+def test_metadata_and_buffer_bytes_match_live_arrays():
+    """The hand-written constants that used to live in compression_ratio
+    omitted seg_type/seg_level and the int32 scalars; the shared helpers
+    must equal the ACTUAL nbytes of a live cache, field by field."""
+    cfg = _cfg()
+    dims = CC.make_dims(cfg, num_layers=2, kv_heads=4, head_dim=32)
+    cache = CC.init_cache(dims)
+    leaves = jax.tree_util.tree_leaves(cache)
+    total = sum(np.asarray(x).nbytes for x in leaves)
+    buf = sum(np.asarray(x).nbytes for x in (cache.buf_k, cache.buf_v))
+    assert CC.buffer_bytes(dims) == buf
+    assert CC.metadata_bytes(dims) == total - buf
+
+
+def test_compression_ratio_uses_shared_accounting():
+    cfg = _cfg()
+    dims = CC.make_dims(cfg, num_layers=2, kv_heads=4, head_dim=32)
+    cache = CC.init_cache(dims)
+    from repro.core.thinkv import compression_ratio
+    out = compression_ratio(cfg, dims, cache, jnp.int32(4096))
+    full = 4096 * 2 * 2 * dims.H * dims.D * dims.L
+    floor = (CC.metadata_bytes(dims) + CC.buffer_bytes(dims)) / full
+    # empty cache: footprint is exactly the metadata + buffer floor
+    assert float(out["footprint_frac"]) == pytest.approx(floor, rel=1e-6)

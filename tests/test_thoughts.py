@@ -82,3 +82,75 @@ def test_calibrated_classifier_accuracy():
                                   tuple(res.thresholds)))
     acc = float((pred == trace.thought_types).mean())
     assert acc > 0.95, acc
+
+
+# ---------------------------------------------------------------------------
+# calibration edge cases (regressions: used to crash / return empty L*)
+# ---------------------------------------------------------------------------
+
+def test_calibrate_empty_traces_raises():
+    """max() over an empty sequence used to crash with a bare ValueError;
+    now both empty spellings fail fast with a diagnostic message."""
+    with pytest.raises(ValueError, match="sparsity_traces is empty"):
+        CAL.calibrate({})
+    with pytest.raises(ValueError, match="sparsity_traces is empty"):
+        CAL.calibrate({0: [], 1: []})
+
+
+def test_calibrate_no_trimodal_layer_falls_back():
+    """Traces where NO layer is tri-modal used to yield an empty
+    layer_subset (downstream: sparsity averaged over zero layers -> NaN
+    at every refresh).  The documented fallback is the first
+    num_calib_layers layers + the paper's default thresholds."""
+    r = np.random.default_rng(7)
+    # unimodal sparsity on every layer: KDE finds one mode, never |T|
+    traces = {l: [r.normal(0.5, 0.02, 300).clip(0, 1) for _ in range(3)]
+              for l in range(6)}
+    res = CAL.calibrate(traces, num_thoughts=3, num_calib_layers=4)
+    assert res.layer_subset == [0, 1, 2, 3]
+    assert res.thresholds == (0.55, 0.80)
+    # thresholds stay usable: strictly increasing in (0, 1)
+    t1, t2 = res.thresholds
+    assert 0.0 < t1 < t2 < 1.0
+
+
+def test_calibrate_single_layer_single_prompt():
+    """Minimal non-empty input calibrates without touching fallbacks for
+    sizing (one layer < num_calib_layers must not crash the fill loop)."""
+    gen = ReasoningTraceGen(dataset="aime", seed=11)
+    traces = gen.calibration_traces(1, 2000, 1, lstar=[0])
+    res = CAL.calibrate(traces, num_thoughts=3, num_calib_layers=4)
+    assert res.layer_subset == [0]
+    t1, t2 = res.thresholds
+    assert 0.0 < t1 < t2 < 1.0
+
+
+# ---------------------------------------------------------------------------
+# classify properties: monotonicity + exact-threshold sides
+# ---------------------------------------------------------------------------
+
+def test_classify_monotone_in_sparsity():
+    """Thought rank never decreases as sparsity grows (E=1 -> R=2 -> T=0
+    in enum value, but the E < R < T *ordering* is by sparsity band;
+    check band index monotonicity over a fine grid)."""
+    th = (0.5, 0.8)
+    band = {int(ThoughtType.EXECUTION): 0, int(ThoughtType.REASONING): 1,
+            int(ThoughtType.TRANSITION): 2}
+    grid = np.linspace(0.0, 1.0, 401)
+    labels = [band[int(TH.classify(jnp.float32(s), th))] for s in grid]
+    assert labels == sorted(labels)
+    assert set(labels) == {0, 1, 2}
+
+
+def test_classify_exact_thresholds_land_on_documented_side():
+    """sparsity == theta_i belongs to the HIGHER band (classify uses
+    strict <): == t1 -> REASONING, == t2 -> TRANSITION."""
+    th = (0.5, 0.8)
+    assert int(TH.classify(jnp.float32(0.5), th)) == ThoughtType.REASONING
+    assert int(TH.classify(jnp.float32(0.8), th)) == ThoughtType.TRANSITION
+    # just below each threshold (one float32 ulp) stays in the lower band
+    below = lambda x: np.nextafter(np.float32(x), np.float32(0.0))
+    assert int(TH.classify(jnp.float32(below(0.5)), th)) \
+        == ThoughtType.EXECUTION
+    assert int(TH.classify(jnp.float32(below(0.8)), th)) \
+        == ThoughtType.REASONING
